@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing, result records, corpus caching."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+
+@dataclasses.dataclass
+class BenchResult:
+    name: str
+    us_per_call: float
+    derived: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def csv(self) -> str:
+        d = ";".join(f"{k}={v}" for k, v in self.derived.items())
+        return f"{self.name},{self.us_per_call:.1f},{d}"
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+_CORPora: dict = {}
+
+
+def cached_corpus(**kw):
+    from repro.data.synth import CorpusSpec, make_corpus
+
+    key = tuple(sorted(kw.items()))
+    if key not in _CORPora:
+        _CORPora[key] = make_corpus(CorpusSpec(**kw))
+    return _CORPora[key]

@@ -1,0 +1,65 @@
+"""Kernel-layer microbenchmarks.
+
+CPU-container caveat: Pallas kernels execute in interpret mode here (Python
+loop emulation — NOT representative of TPU time).  The numbers that matter
+on this host are the pure-jnp reference path timings (XLA:CPU) and the
+VMEM-footprint accounting of the BlockSpec tiling, which is hardware-
+independent.  Real-TPU timing belongs to the roofline analysis (§Roofline).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchResult, time_fn
+from repro.kernels import ref
+
+
+def _vmem_bytes_phase1(block_v=512, block_h=128, m=384, b_out=1):
+    # emb tile + t tile + valid + out accumulator + (bv, bh) distance tile
+    return 4 * (block_v * m + block_h * m + block_h
+                + block_v * b_out + block_v * block_h)
+
+
+def run() -> list[BenchResult]:
+    rng = np.random.default_rng(0)
+    v, m, b, h = 8192, 128, 8, 32
+    emb = jnp.asarray(rng.normal(size=(v, m)).astype(np.float32))
+    q_ids = jnp.asarray(rng.integers(0, v, (b, h)).astype(np.int32))
+    q_w = jnp.asarray(rng.uniform(0.1, 1, (b, h)).astype(np.float32))
+
+    t_ref = time_fn(jax.jit(ref.lc_rwmd_phase1_ref), emb, q_ids, q_w)
+    z = ref.lc_rwmd_phase1_ref(emb, q_ids, q_w)
+
+    n = 4096
+    ids = jnp.asarray(rng.integers(0, v, (n, h)).astype(np.int32))
+    w = jnp.asarray(rng.uniform(0, 1, (n, h)).astype(np.float32))
+    t_spmm = time_fn(jax.jit(ref.spmm_ell_ref), ids, w, z)
+
+    # GNN fused gather-scale-scatter (jnp oracle path timing)
+    n_nodes, n_edges, dg = 4096, 32768, 64
+    srcg = jnp.asarray(rng.integers(0, n_nodes, n_edges).astype(np.int32))
+    dstg = jnp.asarray(np.sort(rng.integers(0, n_nodes, n_edges)).astype(np.int32))
+    featg = jnp.asarray(rng.normal(size=(n_nodes, dg)).astype(np.float32))
+    radg = jnp.asarray(rng.uniform(0.1, 1, n_edges).astype(np.float32))
+    t_seg = time_fn(jax.jit(ref.segment_spmm_ref, static_argnums=4),
+                    srcg, dstg, featg, radg, n_nodes)
+
+    vmem = _vmem_bytes_phase1()
+    return [
+        BenchResult("kernel_phase1_jnp_ref_v8192_b8_h32", t_ref, derived={
+            "flops": 2 * v * b * h * m,
+            "note": "XLA:CPU reference; Pallas kernel targets TPU"}),
+        BenchResult("kernel_spmm_ell_jnp_ref_n4096", t_spmm, derived={
+            "nnz": n * h}),
+        BenchResult("kernel_segment_spmm_jnp_ref_e32768", t_seg, derived={
+            "edges": n_edges,
+            "note": "jnp oracle; fused Pallas kernel removes the ExD "
+                    "message round-trip (see EXPERIMENTS §Roofline)"}),
+        BenchResult("kernel_phase1_vmem_footprint", 0.0, derived={
+            "bytes": vmem, "limit": 16 * 2**20,
+            "fits_vmem": bool(vmem < 16 * 2**20),
+            "blockspec": "bv=512,bh=128,m=384"}),
+    ]

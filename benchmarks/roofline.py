@@ -1,0 +1,138 @@
+"""§Roofline report generator: aggregates results/dryrun/*.json into the
+EXPERIMENTS.md tables (single-pod roofline + multi-pod dry-run summary).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--write]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DRY = REPO / "results" / "dryrun"
+
+IMPROVEMENT_NOTES = {
+    # one sentence per (kind / pattern) on what would move the dominant term
+    ("train", "collective_s"):
+        "FSDP param all-gathers repeat per microbatch x per layer; gather "
+        "once per step (cached bf16 shards) or overlap with compute.",
+    ("train", "memory_s"):
+        "Grad-accum carry + logits dominate HBM traffic; fuse loss into the "
+        "microbatch scan and keep the residual stream seq-sharded.",
+    ("prefill", "memory_s"):
+        "Unfused attention writes O(S^2) score tensors to HBM; a fused "
+        "(flash) attention kernel reduces traffic to O(S*d) per block-row.",
+    ("prefill", "collective_s"):
+        "Sequence-parallel all-gathers per layer; overlap with per-chunk "
+        "attention compute or widen chunks.",
+    ("decode", "memory_s"):
+        "Decode reads the whole KV cache per token - intrinsically "
+        "memory-bound; quantize KV (int8) or batch more queries per read.",
+    ("gnn_train", "memory_s"):
+        "Per-edge message tensors round-trip HBM; fuse gather-TP-scatter "
+        "per path (segment-fused kernel) and reuse SH across layers.",
+    ("serve_logits", "memory_s"):
+        "Embedding-row gathers dominate; pack multi-hot bags and cache hot "
+        "rows in VMEM.",
+    ("retrieval", "memory_s"):
+        "Candidate-embedding reads dominate; keep candidates bf16 and "
+        "tile-resident.",
+    ("retrieval", "collective_s"):
+        "Top-k merge gathers; tree-merge per axis instead of flat gather.",
+    ("lcrwmd_serve", "memory_s"):
+        "Phase-1 Z recomputed by all 16 data shards (useful ratio 1/16); "
+        "shard vocab over the full mesh then all-gather Z (tiny).",
+    ("lcrwmd_allpairs", "memory_s"):
+        "Same phase-1 redundancy as serve; plus fuse distance+min (Pallas "
+        "kernel) to kill the (v x Bh) intermediate.",
+}
+
+
+def load(mesh_tag: str) -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(str(DRY / f"*__{mesh_tag}.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 100:
+        return f"{x:,.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    return f"{x:.4f}"
+
+
+def roofline_table(records: list[dict]) -> str:
+    hdr = ("| arch | shape | kind | compute_s | memory_s | collective_s | "
+           "dominant | roofline frac | MODEL_FLOPs | useful ratio | "
+           "improvement |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        note = IMPROVEMENT_NOTES.get((r["kind"], r["dominant_term"]), "")
+        ur = r.get("useful_flops_ratio")
+        ur_s = f"{ur:.3f}" if ur is not None else "n/a (no MXU dots)"
+        # roofline fraction: achieved-compute share of the overlap-optimal
+        # step time (= the dominant term if collectives/memory fully overlap)
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom if dom > 0 else 0.0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} "
+            f"| **{r['dominant_term'].replace('_s','')}** "
+            f"| {100 * frac:.1f}% "
+            f"| {r['model_flops']:.3e} "
+            f"| {ur_s} | {note} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def dryrun_table(records: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compile | bytes/device (args+tmp) | "
+           "collective bytes/device | top collectives |\n"
+           "|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        ma = r.get("memory_analysis", {})
+        args = ma.get("argument_size_in_bytes", 0) / 2**30
+        tmp = ma.get("temp_size_in_bytes", 0) / 2**30
+        coll = {k: v for k, v in r["collectives"].items()
+                if k != "total" and v}
+        top = ", ".join(f"{k}:{v/2**30:.2f}GiB" for k, v in
+                        sorted(coll.items(), key=lambda kv: -kv[1])[:2])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK "
+            f"({r['timings']['compile']:.0f}s) "
+            f"| {args:.2f} + {tmp:.2f} GiB "
+            f"| {r['collective_bytes_per_device']/2**30:.2f} GiB | {top} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help="rewrite the §Dry-run/§Roofline sections")
+    args = ap.parse_args()
+    single = load("single")
+    multi = load("multi")
+    print(f"single-pod cells: {len(single)}; multi-pod cells: {len(multi)}")
+    rt = roofline_table(single)
+    dt_s = dryrun_table(single)
+    dt_m = dryrun_table(multi)
+    if args.write:
+        out = REPO / "results" / "roofline_tables.md"
+        out.write_text(
+            "## Roofline (single-pod 16x16, per §Roofline)\n\n" + rt +
+            "\n## Dry-run single-pod\n\n" + dt_s +
+            "\n## Dry-run multi-pod (2x16x16)\n\n" + dt_m)
+        print(f"wrote {out}")
+    else:
+        print(rt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per result.  Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig12]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig10_11_overlap,
+        fig12_13_runtime,
+        fig14_precision,
+        kernels_bench,
+        pruning_bench,
+        scaling_analysis,
+        table3_complexity,
+    )
+
+    modules = {
+        "fig12_13_runtime": fig12_13_runtime,
+        "fig10_11_overlap": fig10_11_overlap,
+        "table3_complexity": table3_complexity,
+        "fig14_precision": fig14_precision,
+        "pruning_bench": pruning_bench,
+        "kernels_bench": kernels_bench,
+        "scaling_analysis": scaling_analysis,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            for r in mod.run():
+                print(r.csv(), flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("# all benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Dry-run campaign: every (arch x shape) cell on both production meshes.
+
+Each cell runs in a fresh subprocess (the 512-device XLA flag must precede
+jax init) and writes results/dryrun/<arch>__<shape>__<mesh>.json.  Resumable:
+existing JSONs are skipped.  Run:
+
+    PYTHONPATH=src python benchmarks/run_dryrun_campaign.py [--mesh single|multi|both]
+"""
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+OUT = REPO / "results" / "dryrun"
+
+# Riskiest first so failures surface early.
+PRIORITY = [
+    ("llama3-405b", "train_4k"),
+    ("deepseek-v2-236b", "decode_32k"),
+    ("llama3-405b", "long_500k"),
+    ("nequip", "ogb_products"),
+    ("deepseek-v2-236b", "train_4k"),
+    ("grok-1-314b", "train_4k"),
+    ("mind", "retrieval_cand"),
+]
+
+
+def all_cells():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--list"],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")},
+    )
+    cells = []
+    for line in out.stdout.strip().splitlines():
+        a, s = line.split("\t")
+        cells.append((a, s))
+    ordered = [c for c in PRIORITY if c in cells]
+    ordered += [c for c in cells if c not in ordered]
+    return ordered
+
+
+def run_one(arch, shape, multi_pod, timeout=2400):
+    tag = "multi" if multi_pod else "single"
+    path = OUT / f"{arch}__{shape}__{tag}.json"
+    if path.exists():
+        return "cached", 0.0
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", str(path)]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    t0 = time.time()
+    try:
+        r = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=timeout,
+            env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+    except subprocess.TimeoutExpired:
+        (OUT / f"{arch}__{shape}__{tag}.FAILED").write_text("timeout")
+        return "timeout", time.time() - t0
+    dt = time.time() - t0
+    if r.returncode != 0 or not path.exists():
+        (OUT / f"{arch}__{shape}__{tag}.FAILED").write_text(
+            r.stdout[-4000:] + "\n--- STDERR ---\n" + r.stderr[-6000:])
+        return "FAILED", dt
+    return "ok", dt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = all_cells()
+    results = {}
+    for mp in meshes:
+        for (a, s) in cells:
+            st, dt = run_one(a, s, mp)
+            tag = "multi" if mp else "single"
+            print(f"[{time.strftime('%H:%M:%S')}] {a}/{s}/{tag}: "
+                  f"{st} ({dt:.0f}s)", flush=True)
+            results[f"{a}/{s}/{tag}"] = st
+    n_bad = sum(1 for v in results.values() if v not in ("ok", "cached"))
+    print(f"CAMPAIGN DONE: {len(results) - n_bad}/{len(results)} passed")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,67 @@
+"""kNN document classification with the WMD pruning cascade (paper Fig. 14).
+
+Compares three distance backends on the same labeled corpus:
+WCD (cheap), LC-RWMD (this paper), pruned WMD (gold).
+
+    PYTHONPATH=src python examples/knn_classify.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    knn_classify,
+    lc_rwmd_symmetric,
+    pruned_wmd_topk,
+    topk_smallest,
+    wcd_many_vs_many,
+)
+from repro.data.synth import CorpusSpec, make_corpus
+
+
+def main():
+    corpus = make_corpus(CorpusSpec(
+        n_docs=512, vocab_size=2048, emb_dim=48, h_max=16, mean_h=10.0,
+        n_classes=4, seed=9))
+    docs, emb = corpus.docs, jnp.asarray(corpus.emb)
+    labels = jnp.asarray(corpus.labels)
+    n_test, k = 48, 7
+    queries = docs[:n_test]
+
+    def acc(pred):
+        return float(np.mean(np.asarray(pred) == corpus.labels[:n_test]))
+
+    # WCD
+    d = wcd_many_vs_many(docs, queries, emb).T.at[
+        jnp.arange(n_test), jnp.arange(n_test)].set(jnp.inf)
+    a_wcd = acc(knn_classify(topk_smallest(d, k), labels, 4))
+
+    # LC-RWMD
+    d = lc_rwmd_symmetric(docs, queries, emb).T.at[
+        jnp.arange(n_test), jnp.arange(n_test)].set(jnp.inf)
+    a_rwmd = acc(knn_classify(topk_smallest(d, k), labels, 4))
+
+    # pruned WMD (Sinkhorn refinement on LC-RWMD candidates)
+    res = pruned_wmd_topk(docs, queries, emb, k=k + 1, refine_budget=4 * k,
+                          sinkhorn_kw=dict(eps=0.02, eps_scaling=3,
+                                           max_iters=150))
+    # drop the self-match column per query
+    idx = np.asarray(res.topk.indices)
+    d_ = np.asarray(res.topk.dists)
+    preds = []
+    for j in range(n_test):
+        keep = [(i, v) for i, v in zip(idx[j], d_[j]) if i != j][:k]
+        votes = corpus.labels[[i for i, _ in keep]]
+        preds.append(np.bincount(votes, minlength=4).argmax())
+    a_wmd = acc(np.asarray(preds))
+
+    print(f"kNN accuracy (k={k}, {n_test} queries, 4 classes, chance=0.25):")
+    print(f"  WCD      {a_wcd:.3f}   (loose bound, paper Fig. 11)")
+    print(f"  LC-RWMD  {a_rwmd:.3f}   (this paper)")
+    print(f"  WMD      {a_wmd:.3f}   (pruned cascade, paper Fig. 14)")
+    print(f"mean WMD evals/query: {float(np.mean(np.asarray(res.n_refined))):.1f} "
+          f"of {docs.n_docs} docs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.checkpoint.elastic import plan_elastic_mesh, reshard_for_mesh
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint",
+           "plan_elastic_mesh", "reshard_for_mesh"]

@@ -1,0 +1,99 @@
+"""Elastic scaling + straggler mitigation (1000+-node runbook, DESIGN.md §4).
+
+Node failures on a big mesh are routine; the framework's policy:
+
+  1. FAIL-STOP + RESHARD (implemented here): on chip loss, pick the largest
+     healthy mesh (``plan_elastic_mesh``), re-lower the step (cells are mesh-
+     parameterized, launch/cells.py), and restore the latest checkpoint with
+     the new shardings (``reshard_for_mesh``) — checkpoints are mesh-agnostic
+     numpy + manifest, so any mesh can load any checkpoint. The data stream
+     resumes deterministically from the manifest's iterator state.
+
+  2. STRAGGLER MITIGATION: synchronous SPMD turns one slow chip into a
+     fleet-wide stall. Countermeasures implemented/designed:
+       - step-time watchdog (``StragglerWatchdog``): per-step wall-time
+         EWMA; a host exceeding ``threshold x`` the fleet median for
+         ``patience`` consecutive steps is reported for eviction —
+         triggering path 1 (cheaper than TPU gang-rescheduling).
+       - the LC-RWMD serving path needs no global barrier per query batch
+         (top-k merge is the only sync point), so serving degrades
+         gracefully: a straggler shard only delays its own candidates.
+
+  3. CROSS-POD placement: only batch-parallel dims map to the ``pod`` axis,
+     so losing a pod halves throughput but never strands model state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+
+
+def plan_elastic_mesh(n_healthy: int, *, model_parallel: int = 16,
+                      pod_size: int = 256) -> dict:
+    """Largest (pod, data, model) mesh using <= n_healthy chips.
+
+    Keeps the model axis intact (param layout stays valid) and shrinks the
+    data/pod axes — optimizer state resharding is then a pure re-balance of
+    ZeRO shards, not a re-partition of tensors.
+    """
+    if n_healthy < model_parallel:
+        raise ValueError("fewer healthy chips than one model replica")
+    data_total = n_healthy // model_parallel
+    pods = max(1, data_total * model_parallel // pod_size)
+    data_per_pod = data_total // pods
+    shape = ((pods, data_per_pod, model_parallel) if pods > 1
+             else (data_per_pod, model_parallel))
+    axes = ((POD_AXIS, DATA_AXIS, MODEL_AXIS) if pods > 1
+            else (DATA_AXIS, MODEL_AXIS))
+    return {
+        "shape": shape, "axes": axes,
+        "chips_used": pods * data_per_pod * model_parallel,
+        "chips_idle": n_healthy - pods * data_per_pod * model_parallel,
+        "global_batch_scale": (pods * data_per_pod * model_parallel)
+        / (pod_size * 2),
+    }
+
+
+def reshard_for_mesh(ckpt_dir: str, template, new_mesh, pspecs):
+    """Restore the latest checkpoint resharded onto ``new_mesh``."""
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.checkpoint.checkpoint import load_checkpoint
+
+    shardings = jax.tree.map(
+        lambda p: NamedSharding(new_mesh, p), pspecs)
+    return load_checkpoint(ckpt_dir, template=template, shardings=shardings)
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Flags hosts whose step times stay above threshold x fleet median."""
+
+    threshold: float = 1.5
+    patience: int = 5
+    ewma: float = 0.5
+
+    def __post_init__(self):
+        self._t: dict[int, float] = {}
+        self._strikes: dict[int, int] = {}
+
+    def observe(self, host_times: dict[int, float]) -> list[int]:
+        """Feed per-host step wall-times; returns hosts to evict."""
+        for h, t in host_times.items():
+            prev = self._t.get(h, t)
+            self._t[h] = self.ewma * t + (1 - self.ewma) * prev
+        med = float(np.median(list(self._t.values())))
+        evict = []
+        for h, t in self._t.items():
+            if t > self.threshold * med:
+                self._strikes[h] = self._strikes.get(h, 0) + 1
+            else:
+                self._strikes[h] = 0
+            if self._strikes[h] >= self.patience:
+                evict.append(h)
+        return evict

@@ -1,0 +1,14 @@
+"""Architecture registry — import side effects register all specs."""
+
+from repro.configs import gnn_archs, lcrwmd, lm_archs, recsys_archs  # noqa: F401
+from repro.configs.base import ArchSpec, ShapeCell, get_spec, list_archs
+
+ASSIGNED_ARCHS = [
+    "qwen2.5-14b", "llama3-405b", "llama3.2-1b", "deepseek-v2-236b",
+    "grok-1-314b",
+    "nequip",
+    "xdeepfm", "fm", "sasrec", "mind",
+]
+
+__all__ = ["ArchSpec", "ShapeCell", "get_spec", "list_archs",
+           "ASSIGNED_ARCHS"]

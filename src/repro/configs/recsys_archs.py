@@ -1,0 +1,61 @@
+"""The four assigned recsys architectures (exact public configs)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchSpec, recsys_shapes, register
+from repro.models.recsys.models import RecSysConfig
+
+
+def _smoke(cfg: RecSysConfig) -> RecSysConfig:
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-smoke", total_rows=4096,
+        mlp_dims=(16, 16), cin_dims=(8, 8) if cfg.cin_dims else (),
+        seq_len=min(cfg.seq_len, 12),
+    )
+
+
+@register
+def xdeepfm() -> ArchSpec:
+    """[arXiv:1803.05170] CIN 200-200-200 + MLP 400-400."""
+    cfg = RecSysConfig(
+        name="xdeepfm", kind="xdeepfm", n_fields=39, embed_dim=10,
+        total_rows=100_000_000, n_dense=0,
+        mlp_dims=(400, 400), cin_dims=(200, 200, 200),
+    )
+    return ArchSpec(arch_id="xdeepfm", family="recsys", model_cfg=cfg,
+                    smoke_cfg=_smoke(cfg), shapes=recsys_shapes())
+
+
+@register
+def fm() -> ArchSpec:
+    """[Rendle ICDM'10] 2-way FM via the O(nk) sum-square trick."""
+    cfg = RecSysConfig(
+        name="fm", kind="fm", n_fields=39, embed_dim=10,
+        total_rows=100_000_000,
+    )
+    return ArchSpec(arch_id="fm", family="recsys", model_cfg=cfg,
+                    smoke_cfg=_smoke(cfg), shapes=recsys_shapes())
+
+
+@register
+def sasrec() -> ArchSpec:
+    """[arXiv:1808.09781] 2 blocks, 1 head, seq 50, d=50."""
+    cfg = RecSysConfig(
+        name="sasrec", kind="sasrec", n_fields=1, embed_dim=50,
+        total_rows=10_000_000, seq_len=50, n_blocks=2, n_heads=1,
+    )
+    return ArchSpec(arch_id="sasrec", family="recsys", model_cfg=cfg,
+                    smoke_cfg=_smoke(cfg), shapes=recsys_shapes())
+
+
+@register
+def mind() -> ArchSpec:
+    """[arXiv:1904.08030] 4 interests, 3 routing iterations, d=64."""
+    cfg = RecSysConfig(
+        name="mind", kind="mind", n_fields=1, embed_dim=64,
+        total_rows=10_000_000, seq_len=50, n_interests=4, capsule_iters=3,
+    )
+    return ArchSpec(arch_id="mind", family="recsys", model_cfg=cfg,
+                    smoke_cfg=_smoke(cfg), shapes=recsys_shapes())

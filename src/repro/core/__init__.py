@@ -1,0 +1,26 @@
+"""Core algorithms: the paper's LC-RWMD plus every baseline it compares to."""
+
+from repro.core.distances import dists, sq_dists
+from repro.core.lc_rwmd import (
+    lc_rwmd_one_sided,
+    lc_rwmd_symmetric,
+    phase1_z,
+    phase2_spmm,
+    restrict_vocab,
+)
+from repro.core.pipeline import PrunedWMDResult, knn_classify, pruned_wmd_topk
+from repro.core.rwmd import rwmd_many_vs_many, rwmd_one_vs_many, rwmd_pair
+from repro.core.topk import TopK, distributed_topk, merge_topk, topk_smallest
+from repro.core.wcd import centroids, wcd_many_vs_many, wcd_one_vs_many
+from repro.core.wmd import emd_exact_lp, sinkhorn_log, wmd_one_vs_many, wmd_pair
+
+__all__ = [
+    "dists", "sq_dists",
+    "lc_rwmd_one_sided", "lc_rwmd_symmetric", "phase1_z", "phase2_spmm",
+    "restrict_vocab",
+    "PrunedWMDResult", "knn_classify", "pruned_wmd_topk",
+    "rwmd_many_vs_many", "rwmd_one_vs_many", "rwmd_pair",
+    "TopK", "distributed_topk", "merge_topk", "topk_smallest",
+    "centroids", "wcd_many_vs_many", "wcd_one_vs_many",
+    "emd_exact_lp", "sinkhorn_log", "wmd_one_vs_many", "wmd_pair",
+]

@@ -1,0 +1,61 @@
+"""Top-k smallest-distance selection — local and distributed.
+
+The paper's output ``R`` is, per query, the k nearest resident docs.  In the
+distributed setting the resident set is sharded over ``(pod, data)``; each
+shard computes a local top-k (O(n/shards)) and the O(k)-sized candidates are
+merged with one all_gather — "the associated communication cost is typically
+marginal compared with the cost of computation" (paper Sec. V).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class TopK(NamedTuple):
+    dists: Array    # (..., k) ascending distances
+    indices: Array  # (..., k) GLOBAL resident-doc indices
+
+
+def topk_smallest(d: Array, k: int) -> TopK:
+    """Per-row k smallest entries of d (..., n) → TopK of (..., k)."""
+    neg, idx = jax.lax.top_k(-d, k)
+    return TopK(dists=-neg, indices=idx)
+
+
+def topk_smallest_cols(d: Array, k: int) -> TopK:
+    """Per-QUERY top-k over the resident axis of an (n_resident, B) matrix."""
+    return topk_smallest(d.T, k)  # (B, k)
+
+
+def merge_topk(parts: Sequence[TopK], k: int) -> TopK:
+    """Merge several TopK candidate sets (same leading dims) into one."""
+    d = jnp.concatenate([p.dists for p in parts], axis=-1)
+    i = jnp.concatenate([p.indices for p in parts], axis=-1)
+    neg, sel = jax.lax.top_k(-d, k)
+    return TopK(dists=-neg, indices=jnp.take_along_axis(i, sel, axis=-1))
+
+
+def distributed_topk(
+    local_d: Array, k: int, *, axis_names: Sequence[str], shard_offset: Array
+) -> TopK:
+    """Global top-k inside shard_map: local_d is this shard's (n_local, B).
+
+    ``shard_offset`` is the global index of local row 0.  Result is replicated
+    across ``axis_names``.  Communication: one all_gather of (B, k) pairs.
+    """
+    local = topk_smallest(local_d.T, min(k, local_d.shape[0]))  # (B, k̃)
+    local = TopK(local.dists, local.indices + shard_offset)
+    # Gather candidates from every shard along the resident-sharded axes.
+    d_all = local.dists
+    i_all = local.indices
+    for ax in axis_names:
+        d_all = jax.lax.all_gather(d_all, ax, axis=-1, tiled=True)
+        i_all = jax.lax.all_gather(i_all, ax, axis=-1, tiled=True)
+    neg, sel = jax.lax.top_k(-d_all, k)
+    return TopK(dists=-neg, indices=jnp.take_along_axis(i_all, sel, axis=-1))

@@ -1,0 +1,163 @@
+"""Word Mover's Distance — exact EMD semantics, TPU-idiomatic solver.
+
+The paper computes WMD with FastEMD (network simplex) on CPUs, pruned by
+RWMD.  Network simplex is sequential and branchy — no TPU analogue — so the
+on-device solver here is **log-domain Sinkhorn with ε-scaling**
+(Cuturi 2013), which is matrix-scaling (GEMV-shaped, MXU/VPU friendly) and
+converges to the exact EMD value as ε→0.  ``emd_exact_lp`` (scipy linprog,
+host-side) is retained as the test oracle; tests bound
+|sinkhorn − LP| ≤ tol on random histograms (see tests/test_wmd.py).
+
+All entry points take ELL-padded histograms: padding slots (weight 0) are
+handled by assigning them +inf cost rows/columns *in log domain* (i.e. −inf
+log-kernel), which zeroes their transport plan mass exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import dists
+from repro.data.docs import DocSet
+
+Array = jax.Array
+_NEG_INF = -1e30
+
+
+class SinkhornResult(NamedTuple):
+    cost: Array       # ⟨P, C⟩ transport cost (the WMD estimate)
+    n_iters: Array    # iterations executed (across all ε levels)
+    marginal_err: Array  # final L1 violation of the row marginal
+
+
+def _logsumexp(x: Array, axis: int) -> Array:
+    m = jnp.max(x, axis=axis, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    return jnp.squeeze(m, axis) + jnp.log(
+        jnp.sum(jnp.exp(x - m), axis=axis) + 1e-38
+    )
+
+
+def sinkhorn_log(
+    a: Array,
+    b: Array,
+    cost: Array,
+    *,
+    eps: float = 0.01,
+    eps_scaling: int = 4,
+    eps_start: float = 1.0,
+    max_iters: int = 500,
+    tol: float = 1e-5,
+) -> SinkhornResult:
+    """Log-domain Sinkhorn with ε-scaling. a:(h1,), b:(h2,), cost:(h1,h2).
+
+    Zero-mass entries (padding) are excluded via −inf log-marginals.
+    Returns the *unregularized* transport cost ⟨P, C⟩ under the final plan.
+    """
+    h1, h2 = cost.shape
+    valid_a = a > 0
+    valid_b = b > 0
+    log_a = jnp.where(valid_a, jnp.log(jnp.maximum(a, 1e-38)), _NEG_INF)
+    log_b = jnp.where(valid_b, jnp.log(jnp.maximum(b, 1e-38)), _NEG_INF)
+    # Mask padding in the cost so exp(-C/eps) underflows to 0 there.
+    big = jnp.where(valid_a[:, None] & valid_b[None, :], cost, jnp.inf)
+
+    # ε-scaling schedule: geometric from eps_start down to eps.
+    if eps_scaling <= 1:
+        eps_levels = jnp.array([eps], dtype=jnp.float32)
+    else:
+        eps_levels = jnp.geomspace(eps_start, eps, eps_scaling).astype(jnp.float32)
+
+    def run_level(carry, level_eps):
+        f, g, it_total = carry
+
+        def cond(state):
+            f, g, it, err = state
+            return jnp.logical_and(it < max_iters, err > tol)
+
+        def body(state):
+            f, g, it, _ = state
+            # f-update: f = eps*(log_a - LSE_j((g - C)/eps))
+            lk = (g[None, :] - big) / level_eps  # (h1, h2)
+            f_new = level_eps * (log_a - _logsumexp(lk, axis=1))
+            f_new = jnp.where(valid_a, f_new, _NEG_INF)
+            lk2 = (f_new[:, None] - big) / level_eps
+            g_new = level_eps * (log_b - _logsumexp(lk2, axis=0))
+            g_new = jnp.where(valid_b, g_new, _NEG_INF)
+            # Row-marginal violation under the updated potentials.
+            log_p = (f_new[:, None] + g_new[None, :] - big) / level_eps
+            row = jnp.sum(jnp.exp(log_p), axis=1)
+            err = jnp.sum(jnp.abs(row - a))
+            return f_new, g_new, it + 1, err
+
+        f, g, it, err = jax.lax.while_loop(
+            cond, body, (f, g, jnp.int32(0), jnp.float32(jnp.inf))
+        )
+        return (f, g, it_total + it), err
+
+    f0 = jnp.zeros((h1,), jnp.float32)
+    g0 = jnp.zeros((h2,), jnp.float32)
+    (f, g, iters), errs = jax.lax.scan(run_level, (f0, g0, jnp.int32(0)), eps_levels)
+
+    log_p = (f[:, None] + g[None, :] - big) / eps_levels[-1]
+    p = jnp.exp(log_p)
+    # Rescale rows to satisfy the row marginal exactly (rounding step of
+    # Altschuler et al. 2017) so the reported cost is a valid feasible value.
+    row = jnp.sum(p, axis=1)
+    p = p * jnp.where(valid_a, a / jnp.maximum(row, 1e-38), 0.0)[:, None]
+    cost_val = jnp.sum(jnp.where(jnp.isfinite(big), p * big, 0.0))
+    return SinkhornResult(cost=cost_val, n_iters=iters, marginal_err=errs[-1])
+
+
+def wmd_pair(
+    ids1: Array, w1: Array, ids2: Array, w2: Array, emb: Array, **sink_kw
+) -> Array:
+    """WMD (Sinkhorn) between two padded histograms; returns scalar f32."""
+    c = dists(emb[ids1], emb[ids2])
+    return sinkhorn_log(w1, w2, c, **sink_kw).cost
+
+
+def wmd_one_vs_many(
+    resident: DocSet, q_ids: Array, q_w: Array, emb: Array, **sink_kw
+) -> Array:
+    """WMD of one query against every resident doc — vmapped Sinkhorn, (n,)."""
+    def one(ids1, w1):
+        return wmd_pair(ids1, w1, q_ids, q_w, emb, **sink_kw)
+
+    return jax.vmap(one)(resident.ids, resident.weights)
+
+
+# ---------------------------------------------------------------------------
+# Host-side exact oracle (tests / tiny refinement only)
+# ---------------------------------------------------------------------------
+def emd_exact_lp(a, b, cost) -> float:
+    """Exact EMD via scipy linprog (HiGHS). Host-side oracle, NOT jittable."""
+    import numpy as np
+    from scipy.optimize import linprog
+
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    cost = np.asarray(cost, dtype=np.float64)
+    ia = a > 0
+    ib = b > 0
+    a, b, cost = a[ia], b[ib], cost[np.ix_(ia, ib)]
+    h1, h2 = cost.shape
+    # Equality constraints: row sums = a, col sums = b.
+    A_eq = np.zeros((h1 + h2, h1 * h2))
+    for i in range(h1):
+        A_eq[i, i * h2 : (i + 1) * h2] = 1.0
+    for j in range(h2):
+        A_eq[h1 + j, j::h2] = 1.0
+    b_eq = np.concatenate([a, b])
+    # Drop one redundant constraint (marginals both sum to the same mass).
+    res = linprog(
+        cost.reshape(-1), A_eq=A_eq[:-1], b_eq=b_eq[:-1],
+        bounds=(0, None), method="highs",
+    )
+    if not res.success:  # pragma: no cover
+        raise RuntimeError(f"LP failed: {res.message}")
+    return float(res.fun)

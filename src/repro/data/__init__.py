@@ -1,0 +1,3 @@
+from repro.data.docs import DocSet, docset_from_lists, from_csr, make_docset, to_csr
+
+__all__ = ["DocSet", "docset_from_lists", "from_csr", "make_docset", "to_csr"]

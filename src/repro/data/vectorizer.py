@@ -1,0 +1,96 @@
+"""Text ingestion: tokenizer + hashing vectorizer -> ELL DocSets.
+
+The paper's system ingests news documents into term-frequency histograms
+over a (up to 3M-word) vocabulary. This module provides the real-text path:
+a deterministic word tokenizer, a build-or-hash vocabulary, and histogram
+construction with stop-word removal (the paper's h excludes stop-words).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+
+import numpy as np
+
+from repro.data.docs import DocSet, make_docset
+
+_TOKEN_RE = re.compile(r"[a-z0-9']+")
+
+# Minimal english stop list (the paper excludes stop-words from h).
+STOP_WORDS = frozenset(
+    "a an and are as at be by for from has he in is it its of on that the to "
+    "was were will with this these those i you they we she his her them our "
+    "not or but if then than so no yes do does did done have had having".split()
+)
+
+
+def tokenize(text: str) -> list[str]:
+    return [t for t in _TOKEN_RE.findall(text.lower())
+            if t not in STOP_WORDS and len(t) > 1]
+
+
+@dataclasses.dataclass
+class HashingVectorizer:
+    """Stateless vocabulary via hashing (the production path for unbounded
+    vocabularies; the paper's v_e restriction happens downstream via
+    ``restrict_vocab``)."""
+
+    n_features: int = 1 << 20
+    h_max: int = 64
+
+    def word_id(self, word: str) -> int:
+        h = 2166136261
+        for ch in word.encode():
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+        return int(h % self.n_features)
+
+    def doc_to_histogram(self, text: str) -> tuple[np.ndarray, np.ndarray]:
+        counts = Counter(self.word_id(t) for t in tokenize(text))
+        items = counts.most_common(self.h_max)
+        ids = np.full(self.h_max, -1, np.int32)
+        w = np.zeros(self.h_max, np.float32)
+        for i, (wid, c) in enumerate(items):
+            ids[i] = wid
+            w[i] = c
+        return ids, w
+
+    def corpus_to_docset(self, texts: list[str]) -> DocSet:
+        ids = np.stack([self.doc_to_histogram(t)[0] for t in texts])
+        w = np.stack([self.doc_to_histogram(t)[1] for t in texts])
+        return make_docset(ids, w)
+
+
+@dataclasses.dataclass
+class VocabVectorizer:
+    """Explicit vocabulary (fit on the resident corpus — gives the exact v_e
+    semantics of the paper; OOV query words are dropped)."""
+
+    h_max: int = 64
+
+    def __post_init__(self):
+        self.vocab: dict[str, int] = {}
+
+    def fit(self, texts: list[str]) -> "VocabVectorizer":
+        for t in texts:
+            for w in tokenize(t):
+                if w not in self.vocab:
+                    self.vocab[w] = len(self.vocab)
+        return self
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.vocab)
+
+    def transform(self, texts: list[str]) -> DocSet:
+        n = len(texts)
+        ids = np.full((n, self.h_max), -1, np.int32)
+        w = np.zeros((n, self.h_max), np.float32)
+        for i, t in enumerate(texts):
+            counts = Counter(self.vocab[x] for x in tokenize(t)
+                             if x in self.vocab)
+            for j, (wid, c) in enumerate(counts.most_common(self.h_max)):
+                ids[i, j] = wid
+                w[i, j] = c
+        return make_docset(ids, w)

@@ -1,0 +1,267 @@
+"""Distributed LC-RWMD over a (pod, data, model) TPU mesh.
+
+Sharding (the paper's "replicate the smaller set, distribute the larger",
+Sec. V/VI, expressed as mesh axes):
+
+  resident docs (ids, weights)  -> rows over (pod, data)    [the big set]
+  embedding table E             -> rows (vocab) over model  [v_e x m]
+  query batch                   -> replicated
+
+Collective schedule per query batch (B queries, k results):
+  1. query-embedding gather:  psum over model of masked local rows — O(B·h·m)
+  2. phase 1 (fused kernel):  NO collective — Z stays vocab-sharded
+  3. phase 2 partial SpMM:    psum over model — O(n_local·B)
+  4. top-k merge:             all_gather over (pod, data) of (B, k) pairs
+
+Total cross-pod traffic is only step 4's k-sized payload — "the associated
+communication cost is typically marginal" (paper Sec. V) — which is what
+makes the `pod` axis safe for DCN-speed links.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.distances import safe_sqrt, sq_dists
+from repro.core.topk import TopK, distributed_topk
+from repro.data.docs import DocSet
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+
+Array = jax.Array
+_INF = 3.4e38
+
+
+class ServeResult(NamedTuple):
+    topk: TopK        # (B, k) replicated: global doc ids + distances
+    d_local: Array    # (n_local, B) this shard's distances (diagnostics)
+
+
+def _batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in (POD_AXIS, DATA_AXIS))
+
+
+def _z_from_t(
+    emb_local: Array, t_q: Array, q_valid: Array, *, bf16_matmul: bool = False
+) -> Array:
+    """Phase 1 against a local vocab shard: Z (v_local, B), distances."""
+    v_l, m = emb_local.shape
+    b, h, _ = t_q.shape
+    sq = sq_dists(emb_local, t_q.reshape(b * h, m), bf16_matmul=bf16_matmul)
+    sq = jnp.where(q_valid.reshape(-1)[None, :] > 0, sq, _INF)
+    return safe_sqrt(jnp.min(sq.reshape(v_l, b, h), axis=2))
+
+
+def _gather_query_embeddings(
+    q_ids: Array, emb_local: Array, v_local: int
+) -> Array:
+    """E[q_ids] with E row-sharded over `model`: mask-gather-psum. (B,h,m)."""
+    mi = jax.lax.axis_index(MODEL_AXIS)
+    lo = (mi * v_local).astype(jnp.int32)
+    rel = q_ids - lo
+    inb = (rel >= 0) & (rel < v_local)
+    local = emb_local[jnp.clip(rel, 0, v_local - 1)]  # (B, h, m)
+    local = jnp.where(inb[..., None], local, 0.0)
+    return jax.lax.psum(local, MODEL_AXIS)
+
+
+def _phase2_partial(
+    r_ids: Array, r_w: Array, z_local: Array, v_local: int
+) -> Array:
+    """Masked local ELL-SpMM contribution; full D after psum over model."""
+    mi = jax.lax.axis_index(MODEL_AXIS)
+    lo = (mi * v_local).astype(jnp.int32)
+    rel = r_ids - lo
+    inb = (rel >= 0) & (rel < v_local)
+    zg = z_local[jnp.clip(rel, 0, v_local - 1)]  # (n_l, h, B)
+    w = r_w * inb.astype(r_w.dtype)
+    return jnp.einsum("nh,nhb->nb", w, zg)
+
+
+def build_serve_step(
+    mesh: jax.sharding.Mesh,
+    *,
+    k: int,
+    refine: bool = False,
+    bf16_matmul: bool = True,
+    phase1_full_mesh: bool = True,
+):
+    """Returns jit'd ``serve(resident, queries, emb) -> ServeResult``.
+
+    ``phase1_full_mesh`` (§Perf lcrwmd iteration 1 — beyond-paper): the
+    paper's GPU mapping replicates phase 1 across the resident-data shards
+    (every data row computes the same vocab-slice Z -> useful-FLOP ratio
+    1/16 on a 16x16 mesh).  Instead, shard the vocabulary MODEL-major over
+    the FULL mesh (each of the 256 devices scans v/256 rows), then all-gather
+    Z along `data` — the gather is O(v/model * B) floats (~29 MB) against a
+    16x phase-1 FLOP reduction.  ``False`` keeps the paper-faithful mapping
+    (the recorded baseline).
+
+    ``refine=True`` adds the symmetric-bound refinement: the swapped-direction
+    RWMD term is evaluated with the fused pairwise kernel ONLY on the top-k
+    candidates (k per query, not n), then the max-bound re-ranks them.  This
+    recovers the paper's tighter max(D1, D2ᵀ) bound at serving time without
+    the full second LC pass (which only pays off in all-pairs mode).
+    """
+    batch_axes = _batch_axes(mesh)
+    n_batch_shards = 1
+    for a in batch_axes:
+        n_batch_shards *= mesh.shape[a]
+    n_model = mesh.shape[MODEL_AXIS]
+
+    def kernel(r_ids, r_w, q_ids, q_w, emb_local):
+        v_local = emb_local.shape[0]
+        n_local = r_ids.shape[0]
+        if phase1_full_mesh:
+            # emb rows sharded (MODEL major, then batch axes): shard
+            # (m, d0, d1...) owns rows [(m*D + d)*v_local, ...).
+            didx = jnp.int32(0)
+            for a in batch_axes:
+                didx = didx * mesh.shape[a] + jax.lax.axis_index(a)
+            mi = jax.lax.axis_index(MODEL_AXIS)
+            lo = (mi * n_batch_shards + didx) * v_local
+            # query embedding gather: mask + psum over the whole mesh
+            rel = q_ids - lo
+            inb = (rel >= 0) & (rel < v_local)
+            t_q = emb_local[jnp.clip(rel, 0, v_local - 1)]
+            t_q = jnp.where(inb[..., None], t_q, 0.0)
+            for a in batch_axes:
+                t_q = jax.lax.psum(t_q, a)
+            t_q = jax.lax.psum(t_q, MODEL_AXIS)
+            # phase 1 on this device's v/256 slice, then re-assemble the
+            # model-axis slice by gathering along the batch axes.
+            z_local = _z_from_t(emb_local, t_q, q_w, bf16_matmul=bf16_matmul)
+            for a in reversed(batch_axes):
+                z_local = jax.lax.all_gather(z_local, a, axis=0, tiled=True)
+            # z_local now covers rows [mi*v/model, (mi+1)*v/model)
+            partial = _phase2_partial(r_ids, r_w, z_local,
+                                      v_local * n_batch_shards)
+        else:
+            t_q = _gather_query_embeddings(q_ids, emb_local, v_local)
+            z_local = _z_from_t(emb_local, t_q, q_w, bf16_matmul=bf16_matmul)
+            partial = _phase2_partial(r_ids, r_w, z_local, v_local)
+        d_local = jax.lax.psum(partial, MODEL_AXIS)  # (n_l, B)
+
+        # Global row offset of this shard: row-major over (pod, data).
+        offset = jnp.int32(0)
+        for a in batch_axes:
+            offset = offset * mesh.shape[a] + jax.lax.axis_index(a)
+        offset = offset * n_local
+
+        tk = distributed_topk(d_local, k, axis_names=batch_axes,
+                              shard_offset=offset)
+        return (tk.dists, tk.indices), d_local
+
+    rspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
+    if phase1_full_mesh:
+        espec = P((MODEL_AXIS,) + batch_axes, None)
+    else:
+        espec = P(MODEL_AXIS, None)
+    qspec = P(None, None)
+
+    shmapped = jax.shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(rspec, rspec, qspec, qspec, espec),
+        out_specs=((P(None, None), P(None, None)), rspec),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def serve(resident: DocSet, queries: DocSet, emb: Array) -> ServeResult:
+        (tk_d, tk_i), d_local = shmapped(
+            resident.ids, resident.weights, queries.ids, queries.weights, emb
+        )
+        tk = TopK(tk_d, tk_i)
+        if refine:
+            tk = _symmetric_refine(resident, queries, emb, tk)
+        return ServeResult(topk=tk, d_local=d_local)
+
+    return serve
+
+
+def _symmetric_refine(
+    resident: DocSet, queries: DocSet, emb: Array, tk: TopK
+) -> TopK:
+    """Tighten D1 candidates with the swapped-direction bound (paper's
+    max(D1, D2ᵀ)) evaluated only on the (B, k) candidate pairs."""
+    from repro.core.rwmd import rwmd_pair
+
+    def per_query(q_ids, q_w, cand_idx, cand_d):
+        def one(i, d1):
+            d_sym = rwmd_pair(
+                resident.ids[i], resident.weights[i], q_ids, q_w, emb
+            )
+            return jnp.maximum(d1, d_sym)
+
+        d = jax.vmap(one)(cand_idx, cand_d)
+        order = jnp.argsort(d)
+        return TopK(d[order], cand_idx[order])
+
+    return jax.vmap(per_query)(queries.ids, queries.weights, tk.indices, tk.dists)
+
+
+def build_allpairs_d1(
+    mesh: jax.sharding.Mesh, *, bf16_matmul: bool = True,
+    phase1_full_mesh: bool = True,
+):
+    """All-pairs one-sided LC-RWMD: D1 (n1 sharded over batch axes, n2).
+
+    The symmetric all-pairs bound runs this twice with sets swapped and takes
+    max(D1, D2ᵀ) — exactly the paper's Sec. IV procedure.  n2 plays the role
+    of a query batch and is replicated; callers chunk it.
+    ``phase1_full_mesh`` applies the same beyond-paper vocab sharding as the
+    serve path (§Perf Cell C): 16x less redundant phase-1 work.
+    """
+    batch_axes = _batch_axes(mesh)
+    n_batch_shards = 1
+    for a in batch_axes:
+        n_batch_shards *= mesh.shape[a]
+
+    def kernel(r_ids, r_w, q_ids, q_w, emb_local):
+        v_local = emb_local.shape[0]
+        if phase1_full_mesh:
+            didx = jnp.int32(0)
+            for a in batch_axes:
+                didx = didx * mesh.shape[a] + jax.lax.axis_index(a)
+            mi = jax.lax.axis_index(MODEL_AXIS)
+            lo = (mi * n_batch_shards + didx) * v_local
+            rel = q_ids - lo
+            inb = (rel >= 0) & (rel < v_local)
+            t_q = emb_local[jnp.clip(rel, 0, v_local - 1)]
+            t_q = jnp.where(inb[..., None], t_q, 0.0)
+            for a in batch_axes:
+                t_q = jax.lax.psum(t_q, a)
+            t_q = jax.lax.psum(t_q, MODEL_AXIS)
+            z_local = _z_from_t(emb_local, t_q, q_w, bf16_matmul=bf16_matmul)
+            for a in reversed(batch_axes):
+                z_local = jax.lax.all_gather(z_local, a, axis=0, tiled=True)
+            partial = _phase2_partial(r_ids, r_w, z_local,
+                                      v_local * n_batch_shards)
+        else:
+            t_q = _gather_query_embeddings(q_ids, emb_local, v_local)
+            z_local = _z_from_t(emb_local, t_q, q_w, bf16_matmul=bf16_matmul)
+            partial = _phase2_partial(r_ids, r_w, z_local, v_local)
+        return jax.lax.psum(partial, MODEL_AXIS)
+
+    rspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
+    espec = (P((MODEL_AXIS,) + batch_axes, None) if phase1_full_mesh
+             else P(MODEL_AXIS, None))
+
+    shmapped = jax.shard_map(
+        kernel,
+        mesh=mesh,
+        in_specs=(rspec, rspec, P(None, None), P(None, None), espec),
+        out_specs=rspec,
+        check_vma=False,
+    )
+
+    @jax.jit
+    def d1(set1: DocSet, set2: DocSet, emb: Array) -> Array:
+        return shmapped(set1.ids, set1.weights, set2.ids, set2.weights, emb)
+
+    return d1

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the LC-RWMD hot spots.
+
+Layout per repo convention: ``<name>.py`` holds the raw ``pl.pallas_call``
+(+ BlockSpec tiling), ``ops.py`` the jit'd public wrappers, ``ref.py`` the
+pure-jnp oracles the kernels are tested against (tests/test_kernels.py).
+"""

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: fused causal GQA attention (flash / online-softmax).
+
+§Perf prefill iteration 2 (EXPERIMENTS.md): after head-sharding (iteration
+1) the prefill cells remain memory-bound because XLA materializes the
+(B,H,S,T) score tensor in HBM ~5x per layer.  This kernel keeps score tiles
+in VMEM and carries the online-softmax statistics (running max m, running
+sum l, accumulator o) in VMEM scratch across KV tiles, reducing attention
+HBM traffic from O(S^2) to O(S*d) per block-row — the standard
+FlashAttention-2 scheme re-tiled for MXU/VMEM.
+
+Grid: ``(B, Hq, S/bq, T/bk)`` — KV tiles innermost; scratch persists across
+the innermost dimension.  GQA: query head h reads KV head ``h // group``
+directly via the BlockSpec index_map (KV never expanded to Hq width).
+
+Causal masking is applied in-tile; fully-masked tiles are skipped with
+``pl.when`` (upper-triangular tiles cost only the branch).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, bq: int, bk: int, causal: bool, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal: tile is live iff some kv position <= some q position.
+    live = (not causal) or (ik * bk <= iq * bq + bq - 1)
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0, :, 0, :]                    # (bq, dh)
+        k = k_ref[0, :, 0, :]                    # (bk, dh)
+        v = v_ref[0, :, 0, :]                    # (bk, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, _NEG)
+        m_prev = m_ref[...]                       # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                    # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)           # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,   # (B, S, Hq, dh)
+    k: jax.Array,   # (B, T, Hkv, dh)
+    v: jax.Array,   # (B, T, Hkv, dh)
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, hq, dh = q.shape
+    _, t, hkv, _ = k.shape
+    group = hq // hkv
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    grid = (b, hq, s // bq, t // bk)
+    scale = float(dh) ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda b_, h, iq, ik: (b_, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda b_, h, iq, ik: (b_, ik, h // group, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda b_, h, iq, ik: (b_, ik, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh),
+                               lambda b_, h, iq, ik: (b_, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, hq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running sum
+            pltpu.VMEM((bq, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_hbm_bytes(b, s, t, hq, hkv, dh, *, block_q=512, causal=True,
+                    dtype_bytes=2) -> int:
+    """Analytic HBM traffic of one kernel invocation, for the §Perf roofline
+    substitution (the dry-run cannot lower a TPU kernel on this CPU host).
+
+    Per the BlockSpec tiling above:
+      Q tiles: each (1,bq,1,dh) tile stays in VMEM across the inner KV sweep
+               -> read once: B*Hq*S*dh.
+      K,V:     each KV tile is re-read for every q block (per Q head; the
+               index_map dedupe across a GQA group is NOT assumed — charge
+               per Hq, conservatively): B*Hq*nq_eff*T*dh each, where
+               causal halves the swept area.
+      O:       written once: B*Hq*S*dh.
+    """
+    nq = max(1, s // min(block_q, s))
+    nq_eff = (nq + 1) / 2 if causal else nq
+    q_bytes = b * hq * s * dh * dtype_bytes
+    kv_bytes = 2 * b * hq * int(nq_eff * t) * dh * dtype_bytes
+    o_bytes = b * hq * s * dh * dtype_bytes
+    return q_bytes + kv_bytes + o_bytes

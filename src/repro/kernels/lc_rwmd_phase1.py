@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: fused LC-RWMD Phase 1 (distance + min-reduce).
+
+Computes ``Z[w, j] = min_q ||E[w] - E[q_j]||`` for every vocabulary word w
+and query doc j WITHOUT materializing the (v, B·h) distance matrix in HBM —
+the GPU implementation in the paper (CUBLAS GEMM then Thrust row-min) writes
+and re-reads that matrix; here the ``-2·E@Tᵀ`` tile runs on the MXU and the
+min-reduction happens in VMEM registers, so HBM traffic drops from
+O(v·B·h) to O(v·m + B·h·m + v·B).
+
+Grid: ``(v // block_v, B, h // block_h)``; the h axis is innermost so each
+(v-tile, query) output block accumulates a running min across h tiles.
+
+Block layout (all VMEM):
+  emb   (block_v, m)       index (i, j, p) -> (i, 0)
+  t     (1, block_h, m)    index (i, j, p) -> (j, p, 0)
+  valid (1, block_h)       index (i, j, p) -> (j, p)      [f32 0/1]
+  out Z (block_v, 1)       index (i, j, p) -> (i, j)      [revisited over p]
+
+Alignment contract (enforced by ops.lc_rwmd_phase1): m and block_h are
+multiples of 128, block_v a multiple of 8; padding words carry valid=0 and
+padding vocab rows are sliced off by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INF = 3.4e38  # large finite sentinel (Python float: kernels cannot capture consts)
+
+
+def _phase1_kernel(emb_ref, t_ref, valid_ref, z_ref, *, bf16_matmul: bool):
+    p = pl.program_id(2)
+
+    e = emb_ref[...]  # (bv, m) f32
+    t = t_ref[0]      # (bh, m) f32
+    valid = valid_ref[0]  # (bh,) f32 0/1
+
+    e2 = jnp.sum(e * e, axis=-1, keepdims=True)         # (bv, 1)
+    t2 = jnp.sum(t * t, axis=-1, keepdims=True).T       # (1, bh)
+    if bf16_matmul:
+        et = jax.lax.dot_general(
+            e.astype(jnp.bfloat16), t.astype(jnp.bfloat16),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+    else:
+        et = jax.lax.dot_general(
+            e, t, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+    sq = jnp.maximum(e2 + t2 - 2.0 * et, 0.0)           # (bv, bh)
+    sq = jnp.where(valid[None, :] > 0, sq, _INF)
+    tile_min = jnp.min(sq, axis=1, keepdims=True)       # (bv, 1)
+
+    @pl.when(p == 0)
+    def _init():
+        z_ref[...] = tile_min
+
+    @pl.when(p > 0)
+    def _acc():
+        z_ref[...] = jnp.minimum(z_ref[...], tile_min)
+
+
+def lc_rwmd_phase1_pallas(
+    emb: jax.Array,      # (v, m) f32, v % block_v == 0, m % 128 == 0
+    t: jax.Array,        # (B, h, m) f32, h % block_h == 0
+    valid: jax.Array,    # (B, h) f32 0/1
+    *,
+    block_v: int = 512,
+    block_h: int = 128,
+    bf16_matmul: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call (pre-padded inputs). Returns SQUARED-min Z (v, B).
+
+    The wrapper in ops.py applies sqrt + unpadding; keeping the kernel in
+    squared space saves a transcendental per (v-tile, query, h-tile) visit.
+    """
+    v, m = emb.shape
+    b, h, _ = t.shape
+    grid = (v // block_v, b, h // block_h)
+
+    return pl.pallas_call(
+        functools.partial(_phase1_kernel, bf16_matmul=bf16_matmul),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v, m), lambda i, j, p: (i, 0)),
+            pl.BlockSpec((1, block_h, m), lambda i, j, p: (j, p, 0)),
+            pl.BlockSpec((1, block_h), lambda i, j, p: (j, p)),
+        ],
+        out_specs=pl.BlockSpec((block_v, 1), lambda i, j, p: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((v, b), jnp.float32),
+        interpret=interpret,
+    )(emb, t, valid)

@@ -1,0 +1,175 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Responsibilities: hardware-alignment padding (m, h → multiples of 128;
+v, n → multiples of the v/n block), dtype policy, interpret-mode fallback on
+CPU (the kernels target TPU; ``interpret=True`` executes the kernel body in
+Python for validation, per the repo's CPU-container contract), and
+un-padding of results.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import lc_rwmd_phase1 as _p1
+from repro.kernels import rwmd_pairwise as _rw
+from repro.kernels import segment_spmm as _seg
+from repro.kernels import spmm_ell as _sp
+
+Array = jax.Array
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: Array, mult: int, axis: int, value=0) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_v", "block_h", "bf16_matmul", "interpret")
+)
+def lc_rwmd_phase1(
+    emb: Array,      # (v, m) float
+    q_ids: Array,    # (B, h) int32
+    q_w: Array,      # (B, h) float (0 = padding)
+    *,
+    block_v: int = 512,
+    block_h: int = 128,
+    bf16_matmul: bool = False,
+    interpret: bool | None = None,
+) -> Array:
+    """Z (v, B) f32 — min distance from every vocab word to each query doc."""
+    if interpret is None:
+        interpret = _on_cpu()
+    v, m = emb.shape
+    b, h = q_ids.shape
+
+    emb_f = _pad_to(_pad_to(emb.astype(jnp.float32), 128, axis=1), block_v, axis=0)
+    t = emb_f[q_ids.reshape(-1)].reshape(b, h, emb_f.shape[1])
+    t = _pad_to(t, block_h, axis=1)
+    valid = _pad_to((q_w > 0).astype(jnp.float32), block_h, axis=1)
+
+    z_sq = _p1.lc_rwmd_phase1_pallas(
+        emb_f, t, valid,
+        block_v=block_v, block_h=min(block_h, t.shape[1]),
+        bf16_matmul=bf16_matmul, interpret=interpret,
+    )
+    z = jnp.sqrt(jnp.maximum(z_sq[:v], 0.0))
+    return z
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmm_ell(
+    ids: Array,   # (n, h) int32
+    w: Array,     # (n, h) float
+    z: Array,     # (v, B) float
+    *,
+    interpret: bool | None = None,
+) -> Array:
+    """D (n, B) f32 = ELL-sparse(ids, w) @ z."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n, h = ids.shape
+    z_p = _pad_to(z.astype(jnp.float32), 128, axis=1)
+    out = _sp.spmm_ell_pallas(ids, w.astype(jnp.float32), z_p, interpret=interpret)
+    return out[:, : z.shape[1]]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "bf16_matmul", "interpret")
+)
+def rwmd_pairwise(
+    emb: Array,       # (v, m)
+    r_ids: Array,     # (n, h1) resident ids
+    r_w: Array,       # (n, h1)
+    q_ids: Array,     # (B, h2) query ids
+    q_w: Array,       # (B, h2)
+    *,
+    block_n: int = 8,
+    bf16_matmul: bool = False,
+    interpret: bool | None = None,
+) -> Array:
+    """Quadratic RWMD distance matrix (n, B) f32, fully fused per tile."""
+    if interpret is None:
+        interpret = _on_cpu()
+    emb_f = _pad_to(emb.astype(jnp.float32), 128, axis=1)
+    n, h1 = r_ids.shape
+    b, h2 = q_ids.shape
+
+    t1 = emb_f[r_ids.reshape(-1)].reshape(n, h1, emb_f.shape[1])
+    t2 = emb_f[q_ids.reshape(-1)].reshape(b, h2, emb_f.shape[1])
+    # Pad word axes to lane width so min-reductions stay aligned; padding
+    # words get weight 0 (=> masked inside the kernel).
+    t1 = _pad_to(t1, 128, axis=1)
+    w1 = _pad_to(r_w.astype(jnp.float32), 128, axis=1)
+    t2 = _pad_to(t2, 128, axis=1)
+    w2 = _pad_to(q_w.astype(jnp.float32), 128, axis=1)
+    # Pad doc axis to the doc-tile size.
+    t1 = _pad_to(t1, block_n, axis=0)
+    w1 = _pad_to(w1, block_n, axis=0)
+
+    out = _rw.rwmd_pairwise_pallas(
+        t1, w1, t2, w2,
+        block_n=block_n, bf16_matmul=bf16_matmul, interpret=interpret,
+    )
+    return out[:n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool = True, block_q: int = 512, block_k: int = 512,
+    interpret: bool | None = None,
+) -> Array:
+    """Fused causal GQA attention (flash). q (B,S,Hq,D); k/v (B,T,Hkv,D)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, s, hq, d = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, k.shape[1])
+    # pad seq dims to block multiples; padded kv columns are masked by causal
+    # position math only when causal; for non-causal, mask via -inf keys.
+    assert s % bq == 0 and k.shape[1] % bk == 0, "pad seqs to block multiple"
+    return _fa.flash_attention_pallas(
+        q, k, v, causal=causal, block_q=bq, block_k=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "interpret"))
+def segment_spmm(
+    src: Array,   # (E,) int32
+    dst: Array,   # (E,) int32, sorted ascending (CSR edge order)
+    feat: Array,  # (N, D) float
+    rad: Array,   # (E,) float (0 at padding edges)
+    n_out: int,
+    *,
+    interpret: bool | None = None,
+) -> Array:
+    """Fused GNN gather-scale-scatter: out[n] = sum_{dst=n} rad*feat[src].
+
+    Zero-degree output rows are masked to 0 (unvisited blocks are undefined
+    in the revisit-accumulate pattern). Feature dim padded to lane width.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    d0 = feat.shape[1]
+    feat_p = _pad_to(feat.astype(jnp.float32), 128, axis=1)
+    meta = jnp.stack([src, dst]).astype(jnp.int32)
+    out = _seg.segment_spmm_pallas(
+        meta, feat_p, rad.astype(jnp.float32)[None, :], n_out,
+        interpret=interpret)
+    deg = jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst,
+                              num_segments=n_out)
+    return jnp.where(deg[:, None] > 0, out[:, :d0], 0.0)

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+_INF = jnp.float32(jnp.inf)
+
+
+def lc_rwmd_phase1_ref(emb: Array, q_ids: Array, q_w: Array) -> Array:
+    """Z[w, j] = min over valid words q of query j of ||E[w] - E[q]||.
+
+    emb: (v, m) f32; q_ids: (B, h) int32; q_w: (B, h) f32 (0 = padding).
+    Returns (v, B) f32.  Materializes the (v, B*h) distance matrix — exactly
+    what the fused kernel avoids.
+    """
+    emb = emb.astype(jnp.float32)
+    b, h = q_ids.shape
+    t = emb[q_ids.reshape(-1)]  # (B*h, m)
+    e2 = jnp.sum(emb * emb, axis=-1)[:, None]
+    t2 = jnp.sum(t * t, axis=-1)[None, :]
+    sq = jnp.maximum(e2 + t2 - 2.0 * (emb @ t.T), 0.0)  # (v, B*h)
+    sq = jnp.where((q_w > 0).reshape(-1)[None, :], sq, _INF)
+    z = jnp.min(sq.reshape(-1, b, h), axis=2)  # (v, B)
+    return jnp.sqrt(jnp.maximum(z, 0.0))
+
+
+def spmm_ell_ref(ids: Array, w: Array, z: Array) -> Array:
+    """D[i, j] = Σ_p w[i,p] · Z[ids[i,p], j].
+
+    ids/w: (n, h); z: (v, B).  Returns (n, B) f32.
+    """
+    return jnp.einsum("nh,nhb->nb", w.astype(jnp.float32), z[ids].astype(jnp.float32))
+
+
+def rwmd_pairwise_ref(
+    t1: Array, w1: Array, t2: Array, w2: Array
+) -> Array:
+    """Symmetric quadratic RWMD of a tile of docs vs ONE query.
+
+    t1: (n, h1, m) resident word embeddings; w1: (n, h1) weights (0 = pad);
+    t2: (h2, m) query embeddings; w2: (h2,).
+    Returns (n,) f32: max(d12, d21) per resident doc.
+    """
+    t1 = t1.astype(jnp.float32)
+    t2 = t2.astype(jnp.float32)
+    a2 = jnp.sum(t1 * t1, axis=-1)  # (n, h1)
+    b2 = jnp.sum(t2 * t2, axis=-1)  # (h2,)
+    ab = jnp.einsum("nhm,qm->nhq", t1, t2)
+    sq = jnp.maximum(a2[..., None] + b2[None, None, :] - 2.0 * ab, 0.0)
+    c = jnp.sqrt(sq)  # (n, h1, h2)
+    m1 = w1 > 0
+    m2 = w2 > 0
+    row_min = jnp.min(jnp.where(m2[None, None, :], c, _INF), axis=2)  # (n, h1)
+    d12 = jnp.sum(w1 * jnp.where(m1, row_min, 0.0), axis=1)
+    col_min = jnp.min(jnp.where(m1[..., None], c, _INF), axis=1)  # (n, h2)
+    d21 = col_min @ jnp.where(m2, w2, 0.0)
+    return jnp.maximum(d12, d21)
+
+
+def sinkhorn_step_ref(
+    f: Array, g: Array, log_a: Array, log_b: Array, cost: Array, eps: Array
+) -> tuple[Array, Array]:
+    """One symmetric Sinkhorn update in log domain (f then g)."""
+
+    def lse(x, axis):
+        m = jnp.max(x, axis=axis, keepdims=True)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        return jnp.squeeze(m, axis) + jnp.log(jnp.sum(jnp.exp(x - m), axis=axis) + 1e-38)
+
+    f_new = eps * (log_a - lse((g[None, :] - cost) / eps, 1))
+    g_new = eps * (log_b - lse((f_new[:, None] - cost) / eps, 0))
+    return f_new, g_new
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Plain masked-softmax GQA attention oracle. q (B,S,Hq,D); k/v (B,T,Hkv,D)."""
+    b, sq, hq, d = q.shape
+    _, t, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    s_ = jnp.einsum("bshgd,bthd->bhgst", qg, k.astype(jnp.float32))
+    s_ = s_ / jnp.sqrt(jnp.float32(d))
+    if causal:
+        qpos = jnp.arange(sq)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        s_ = jnp.where((kpos <= qpos)[None, None, None], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def segment_spmm_ref(src, dst, feat, rad, n_out):
+    """out[n] = sum_{e: dst[e]=n} rad[e] * feat[src[e]] (pure-jnp oracle)."""
+    msg = rad[:, None] * feat[src]
+    return jax.ops.segment_sum(msg, dst, num_segments=n_out)

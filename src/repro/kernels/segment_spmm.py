@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused gather-scale-scatter for GNN message passing.
+
+The NequIP/GNN roofline cells are memory-bound on per-edge message tensors
+round-tripping HBM (§Roofline): the jnp path materializes
+``msg = rad[e] * feat[src[e]]`` (E x D) before ``segment_sum``.  This kernel
+fuses gather -> scale -> scatter-accumulate so messages live only in VMEM:
+
+    out[n, :] = sum_{e : dst[e] = n}  rad[e] * feat[src[e], :]
+
+Contract: edges are SORTED BY dst (the standard CSR ordering — the host
+sampler/loader provides it).  The scalar-prefetched dst array steers the
+output BlockSpec, so each output row-block is revisited consecutively
+(required by TPU's revisit-accumulate semantics); src steers the feat
+gather exactly like spmm_ell's embedding pattern.
+
+Grid: ``(E,)`` — one edge per step.  Padding edges (mask via rad == 0) must
+point at a dedicated sink row (n_nodes - 1 by convention in ops.py) so they
+stay sorted; their contribution is zero.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _seg_kernel(meta_ref, feat_ref, rad_ref, out_ref):
+    # meta_ref: SMEM (2, E) int32 — row 0: src (consumed by index_map),
+    #           row 1: dst (steers the out block; also read here).
+    e = pl.program_id(0)
+    first = jnp.logical_or(
+        e == 0, meta_ref[1, e] != meta_ref[1, jnp.maximum(e - 1, 0)])
+    contrib = rad_ref[0, e] * feat_ref[...]  # (1, D)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = contrib
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        out_ref[...] += contrib
+
+
+def segment_spmm_pallas(
+    meta: jax.Array,   # (2, E) int32: [src; dst], dst sorted ascending
+    feat: jax.Array,   # (N, D) float
+    rad: jax.Array,    # (1, E) float edge scales (0 = padding)
+    n_out: int,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    _, e = meta.shape
+    n, d = feat.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, meta: (meta[0, i], 0)),  # feat row
+            pl.BlockSpec((1, e), lambda i, meta: (0, 0)),           # rad
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, meta: (meta[1, i], 0)),
+    )
+    return pl.pallas_call(
+        _seg_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out, d), feat.dtype),
+        interpret=interpret,
+    )(meta, feat, rad)

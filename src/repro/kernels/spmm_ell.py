@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: LC-RWMD Phase 2 — ELL-format SpMM via scalar prefetch.
+
+Computes ``D[i, j] = Σ_p w[i, p] · Z[ids[i, p], j]`` (sparse resident matrix
+times the dense Phase-1 output).  The paper uses CUSPARSE CSR SpMM; TPUs
+have no sparse unit, so we use the canonical Pallas *scalar-prefetch*
+embedding-gather pattern: the ELL column-id array rides in SMEM and steers
+the BlockSpec index_map, so each grid step DMAs exactly the Z row it needs
+into VMEM — random-access gather expressed as block choreography.
+
+Grid: ``(n // block_n, h)`` — outer over doc tiles, inner over ELL slots;
+the output block for doc tile i is revisited across all h slots and
+accumulated in VMEM (written back once at the end by Pallas).
+
+Blocks:
+  z row tile (block_n rows gathered ONE slot at a time): (1, B)
+    index (i, p, ids) -> row ids[...]  — one gathered Z row per (doc, slot)
+  would give grid (n, h); instead we gather a (1, B) row per *sub-step* by
+  flattening (doc-in-tile) into the grid:  grid = (n, h), block_n folded in.
+
+For simplicity and correctness-first, this kernel uses grid (n, h) with one
+doc per outer step; the hillclimbed variant (see EXPERIMENTS.md §Perf) uses
+the dense one-hot matmul formulation instead, which is MXU-bound.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(ids_ref, w_ref, z_ref, out_ref):
+    # ids_ref: SMEM (n, h) int32 (scalar-prefetch operand)
+    # w_ref:   VMEM (1, h) f32 — weights of the current doc
+    # z_ref:   VMEM (1, B) f32 — the gathered Z row for (doc i, slot p)
+    # out_ref: VMEM (1, B) f32 — accumulator for doc i (revisited over p)
+    del ids_ref  # consumed by the index_map, not the body
+    p = pl.program_id(1)
+    w = w_ref[0, p]  # scalar weight of slot p
+
+    @pl.when(p == 0)
+    def _init():
+        out_ref[...] = w * z_ref[...]
+
+    @pl.when(p > 0)
+    def _acc():
+        out_ref[...] += w * z_ref[...]
+
+
+def spmm_ell_pallas(
+    ids: jax.Array,   # (n, h) int32 ELL column ids (0 at padding)
+    w: jax.Array,     # (n, h) f32 weights (0 at padding)
+    z: jax.Array,     # (v, B) f32 dense Phase-1 output
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    n, h = ids.shape
+    v, b = z.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, h),
+        in_specs=[
+            pl.BlockSpec((1, h), lambda i, p, ids: (i, 0)),        # w
+            pl.BlockSpec((1, b), lambda i, p, ids: (ids[i, p], 0)),  # z row
+        ],
+        out_specs=pl.BlockSpec((1, b), lambda i, p, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
+        interpret=interpret,
+    )(ids, w, z)

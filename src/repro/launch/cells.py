@@ -1,0 +1,520 @@
+"""Cell builders: (arch x shape x mesh) -> (step_fn, ShapeDtypeStruct args).
+
+This is the dry-run core: every cell produces a jit-able step function plus
+abstract inputs (ShapeDtypeStructs carrying NamedShardings — no allocation)
+so ``jax.jit(step).lower(*args).compile()`` exercises the full production
+sharding.  ``model_flops`` carries the analytic useful-FLOPs for §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeCell, get_spec
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+from repro.models.transformer import model as lm
+from repro.models.transformer.sharding import pspec_tree
+from repro.training.optimizer import AdamWConfig, init_state
+from repro.training.train_step import build_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_id: str
+    step_fn: Callable
+    args: tuple                  # pytree(s) of ShapeDtypeStruct
+    model_flops: float           # analytic useful FLOPs per step
+    kind: str
+    notes: str = ""
+    donate_argnums: tuple = ()
+
+
+def _batch_axes(mesh):
+    return tuple(a for a in mesh.axis_names if a in (POD_AXIS, DATA_AXIS))
+
+
+def _ba(mesh):
+    ax = _batch_axes(mesh)
+    return ax if len(ax) > 1 else ax[0]
+
+
+def _sh(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def _sds(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(shapes_tree, pspecs_tree, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shapes_tree, pspecs_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_exec_cfg(spec: ArchSpec, cell: ShapeCell, mesh):
+    cfg = spec.model_cfg
+    over = dict(cell.exec_overrides)
+    n_micro = over.pop("n_microbatches", 1)
+    updates = {}
+    if "attn_chunk" in over:
+        updates["attn_chunk"] = over.pop("attn_chunk")
+    if cell.kind == "prefill":
+        # attention heads sharded over model (§Perf prefill iter 1: GSPMD
+        # otherwise replicates prefill attention over `model`, 16x traffic).
+        # NOT applied to train: measured regressions for BOTH GQA (fights the
+        # Megatron-SP layout; collectives ~2x) and MLA (memory 76->130 s) —
+        # see §Perf refuted-extension notes.
+        updates["attn_head_pspec"] = (_ba(mesh), None, MODEL_AXIS, None)
+    if cell.kind == "train":
+        # Megatron-SP: boundary seq-sharded (compact remat stash), gathered
+        # inside each block so dW stays single-axis partial (§Perf iter 3).
+        if cfg.d_model >= 5120:
+            updates["act_pspec"] = (_ba(mesh), MODEL_AXIS, None)
+            updates["act_inner_pspec"] = (_ba(mesh), None, None)
+        else:
+            updates["act_pspec"] = (_ba(mesh), None, None)
+    if cfg.moe is not None and cell.kind in ("train", "prefill"):
+        # expert-parallel dispatched tensors (E over model when E >= mesh;
+        # F-TP archs keep E replicated) — §Perf MoE note.
+        if cfg.moe.n_experts >= mesh.shape[MODEL_AXIS]:
+            updates["moe_expert_pspec"] = (_ba(mesh), MODEL_AXIS, None, None)
+    if updates:
+        cfg = dataclasses.replace(cfg, **updates)
+    return cfg, n_micro
+
+
+def _lm_param_sds(cfg, mesh):
+    shapes = jax.eval_shape(functools.partial(lm.init_params, cfg=cfg),
+                            jax.random.key(0))
+    expert_tp = bool(cfg.moe and cfg.moe.n_experts < mesh.shape[MODEL_AXIS])
+    pspecs = pspec_tree(shapes, expert_tp=expert_tp)
+    return _with_shardings(shapes, pspecs, mesh), pspecs
+
+
+def _strip_leading(pspec: P) -> P:
+    """Drop the stacked-layer leading axis from a param PartitionSpec."""
+    return P(*tuple(pspec)[1:]) if len(tuple(pspec)) else pspec
+
+
+def _lm_train_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    cfg, n_micro = _lm_exec_cfg(spec, cell, mesh)
+    s, b = cell.params["seq_len"], cell.params["global_batch"]
+    params_sds, pspecs = _lm_param_sds(cfg, mesh)
+    # §Perf iter 1: weight-cotangent sharding (see model._grad_sharded_id).
+    gsp = {"stack": jax.tree.map(_strip_leading, pspecs["layers"])}
+    if "prefix_layers" in pspecs:
+        gsp["prefix"] = pspecs["prefix_layers"][0]
+    cfg = dataclasses.replace(cfg, grad_shard_pspecs=gsp)
+    opt_cfg = AdamWConfig(
+        moment_dtype="bfloat16" if cfg.param_dtype == "bfloat16" else "float32")
+    opt_shapes = jax.eval_shape(
+        functools.partial(init_state, opt_cfg), params_sds)
+    opt_pspecs = type(opt_shapes)(step=P(), m=pspecs, v=pspecs)
+    opt_sds = _with_shardings(opt_shapes, opt_pspecs, mesh)
+    bsh = _sh(mesh, _ba(mesh), None)
+    batch = {
+        "tokens": _sds((b, s), jnp.int32, bsh),
+        "labels": _sds((b, s), jnp.int32, bsh),
+    }
+    step = build_train_step(
+        lambda p, bt: lm.lm_loss(p, bt, cfg), opt_cfg, n_microbatches=n_micro,
+        grad_pspecs=pspecs)
+    tokens = b * s
+    return Cell(
+        arch_id=spec.arch_id, shape_id=cell.name, step_fn=step,
+        args=(params_sds, opt_sds, batch),
+        model_flops=6.0 * cfg.n_active_params * tokens,
+        kind="train", donate_argnums=(0, 1),
+    )
+
+
+def _lm_prefill_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    cfg, _ = _lm_exec_cfg(spec, cell, mesh)
+    s, b = cell.params["seq_len"], cell.params["global_batch"]
+    params_sds, _ = _lm_param_sds(cfg, mesh)
+    bsh = _sh(mesh, _ba(mesh), None)
+    tokens = _sds((b, s), jnp.int32, bsh)
+
+    def step(params, toks):
+        return lm.forward_with_cache(params, toks, cfg, max_len=s)
+
+    return Cell(
+        arch_id=spec.arch_id, shape_id=cell.name, step_fn=step,
+        args=(params_sds, tokens),
+        model_flops=2.0 * cfg.n_active_params * b * s,
+        kind="prefill",
+    )
+
+
+def _lm_decode_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    cfg, _ = _lm_exec_cfg(spec, cell, mesh)
+    t, b = cell.params["seq_len"], cell.params["global_batch"]
+    ctx_par = cell.params.get("context_parallel", False)
+    kv_quant = cell.params.get("kv_quant", False)
+    params_sds, _ = _lm_param_sds(cfg, mesh)
+    l = cfg.n_layers
+    cdt = jnp.dtype(cfg.dtype)
+
+    if ctx_par:  # batch=1: shard the cache SEQUENCE over (data, model)
+        seq_axes = tuple(a for a in mesh.axis_names if a != POD_AXIS)
+        cache_spec = (None, None, seq_axes)
+        tok_sh = _sh(mesh, None, None)
+        len_sh = _sh(mesh, None)
+    else:        # batch over batch axes, seq over model (no head padding)
+        cache_spec = (None, _ba(mesh), MODEL_AXIS)
+        tok_sh = _sh(mesh, _ba(mesh), None)
+        len_sh = _sh(mesh, _ba(mesh))
+
+    if kv_quant:
+        from repro.models.transformer.kv_quant import QuantKVCache
+        kshape = (l, b, t, cfg.n_kv_heads, cfg.d_head)
+        sshape = (l, b, t, cfg.n_kv_heads)
+        csp = _sh(mesh, *cache_spec, None, None)
+        ssp = _sh(mesh, *cache_spec, None)
+        cache = QuantKVCache(
+            k_q=_sds(kshape, jnp.int8, csp),
+            k_scale=_sds(sshape, jnp.float32, ssp),
+            v_q=_sds(kshape, jnp.int8, csp),
+            v_scale=_sds(sshape, jnp.float32, ssp),
+            lengths=_sds((b,), jnp.int32, len_sh))
+        tokens = _sds((b, 1), jnp.int32, tok_sh)
+
+        def qstep(params, cache_in, toks):
+            return lm.decode_step_quant(params, cache_in, toks, cfg)
+
+        return Cell(
+            arch_id=spec.arch_id, shape_id=cell.name, step_fn=qstep,
+            args=(params_sds, cache, tokens),
+            model_flops=2.0 * cfg.n_active_params * b,
+            kind="decode", donate_argnums=(1,), notes="int8 KV cache")
+
+    if cfg.attention == "gqa":
+        kshape = (l, b, t, cfg.n_kv_heads, cfg.d_head)
+        csp = _sh(mesh, *cache_spec, None, None)
+        cache = lm.KVCache(
+            k=_sds(kshape, cdt, csp), v=_sds(kshape, cdt, csp),
+            lengths=_sds((b,), jnp.int32, len_sh))
+    else:
+        m = cfg.mla
+        cache = lm.KVCache(
+            k=_sds((l, b, t, m.kv_lora_rank), cdt, _sh(mesh, *cache_spec, None)),
+            v=_sds((l, b, t, m.qk_rope_head_dim), cdt,
+                   _sh(mesh, *cache_spec, None)),
+            lengths=_sds((b,), jnp.int32, len_sh))
+
+    tokens = _sds((b, 1), jnp.int32, tok_sh)
+
+    def step(params, cache_in, toks):
+        return lm.decode_step(params, cache_in, toks, cfg)
+
+    return Cell(
+        arch_id=spec.arch_id, shape_id=cell.name, step_fn=step,
+        args=(params_sds, cache, tokens),
+        model_flops=2.0 * cfg.n_active_params * b,
+        kind="decode", donate_argnums=(1,),
+        notes="context-parallel cache" if ctx_par else "",
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+def _nequip_flops(cfg, n_edges, n_nodes, *, train: bool, forces: bool) -> float:
+    from repro.models.gnn.nequip import _paths
+    c = cfg.d_hidden
+    per_edge = 0.0
+    for (l1, l2, l3) in _paths(cfg.l_max):
+        per_edge += 2.0 * c * (2 * l1 + 1) * (2 * l2 + 1) * (2 * l3 + 1)
+    per_edge += 2.0 * cfg.n_rbf * cfg.radial_hidden \
+        + 2.0 * cfg.radial_hidden * len(_paths(cfg.l_max)) * c
+    irr = sum(2 * l + 1 for l in range(cfg.l_max + 1))
+    per_node = 2.0 * 2 * c * c * irr  # lin_in + lin_out
+    fwd = cfg.n_layers * (n_edges * per_edge + n_nodes * per_node)
+    mult = 3.0 if train else 1.0          # fwd + bwd
+    if forces:
+        mult *= 2.0                        # grad-of-grad for the force term
+    return fwd * mult
+
+
+def _gnn_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    from repro.models.gnn.nequip import nequip_loss
+
+    cfg = spec.model_cfg
+    p = cell.params
+    n, e, g = p["n_nodes"], p["n_edges"], p["n_graphs"]
+    n_dev = 1
+    for a in mesh.axis_names:
+        n_dev *= mesh.shape[a]
+    e = _round_up(e, n_dev)  # ELL-style edge padding (masked), DESIGN.md §4
+    d_feat = p["d_feat"]
+    forces = p.get("forces", True)
+    cfg = dataclasses.replace(
+        cfg, d_feat=d_feat, force_loss_weight=1.0 if forces else 0.0)
+
+    params_shapes = jax.eval_shape(
+        functools.partial(__import__("repro.models.gnn.nequip",
+                                     fromlist=["init_params"]).init_params,
+                          cfg=cfg), jax.random.key(0))
+    rep = jax.tree.map(lambda s: _sds(s.shape, s.dtype, _sh(mesh)),
+                       params_shapes)
+
+    all_axes = tuple(mesh.axis_names)
+    esh = _sh(mesh, all_axes)          # edges sharded over the whole mesh
+    esh2 = _sh(mesh, None, all_axes)   # (2, E)
+    nsh = _sh(mesh)                    # nodes replicated (psum-accumulated)
+    batch = {
+        "positions": _sds((n, 3), jnp.float32, nsh),
+        "edge_index": _sds((2, e), jnp.int32, esh2),
+        "edge_mask": _sds((e,), jnp.bool_, esh),
+        "node_mask": _sds((n,), jnp.bool_, nsh),
+        "graph_ids": _sds((n,), jnp.int32, nsh),
+        "n_graphs": g,
+        "energies": _sds((g,), jnp.float32, nsh),
+        "forces": _sds((n, 3), jnp.float32, nsh),
+    }
+    if d_feat:
+        batch["node_feat"] = _sds((n, d_feat), jnp.float32, nsh)
+    else:
+        batch["species"] = _sds((n,), jnp.int32, nsh)
+
+    opt_cfg = AdamWConfig()
+    opt_shapes = jax.eval_shape(
+        functools.partial(init_state, opt_cfg), params_shapes)
+    opt_sds = jax.tree.map(lambda s: _sds(s.shape, s.dtype, _sh(mesh)),
+                           opt_shapes)
+
+    n_graphs = batch.pop("n_graphs")  # static
+    loss = lambda pp, bb: nequip_loss(pp, dict(bb, n_graphs=n_graphs), cfg)
+    step = build_train_step(loss, opt_cfg, n_microbatches=1)
+
+    return Cell(
+        arch_id=spec.arch_id, shape_id=cell.name, step_fn=step,
+        args=(rep, opt_sds, batch),
+        model_flops=_nequip_flops(cfg, e, n, train=True, forces=forces),
+        kind="gnn_train", donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+def _recsys_flops(cfg, batch, kind: str, n_cand: int = 0) -> float:
+    d, f = cfg.embed_dim, cfg.n_fields
+    if cfg.kind == "fm":
+        fwd = batch * (2 * f * d)
+    elif cfg.kind == "xdeepfm":
+        cin = 0
+        h_prev = f
+        for h in cfg.cin_dims:
+            cin += 2 * h_prev * f * d * h
+            h_prev = h
+        mlp, prev = 0, f * d
+        for h in cfg.mlp_dims:
+            mlp += 2 * prev * h
+            prev = h
+        fwd = batch * (cin + mlp)
+    elif cfg.kind == "sasrec":
+        t = cfg.seq_len
+        per_block = 4 * 2 * t * d * d + 2 * 2 * t * t * d + 2 * 2 * t * d * d
+        fwd = batch * cfg.n_blocks * per_block
+    else:  # mind
+        t, k = cfg.seq_len, cfg.n_interests
+        fwd = batch * (2 * t * d * d + cfg.capsule_iters * 4 * k * t * d)
+    if kind == "train":
+        fwd *= 3
+    if n_cand:
+        fwd += batch * 2 * n_cand * d
+    return float(fwd)
+
+
+def _recsys_param_sds(cfg, mesh):
+    from repro.models.recsys.models import init_params as rs_init
+    shapes = jax.eval_shape(functools.partial(rs_init, cfg=cfg),
+                            jax.random.key(0))
+
+    def spec_for(path, leaf):
+        key = ".".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in path)
+        if key == "table":
+            return P(MODEL_AXIS, None)   # row-sharded embedding table
+        return P()
+
+    pspecs = jax.tree_util.tree_map_with_path(spec_for, shapes)
+    return _with_shardings(shapes, pspecs, mesh), pspecs
+
+
+def _recsys_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    from repro.models.recsys import models as R
+
+    cfg = spec.model_cfg
+    b = cell.params["batch"]
+    params_sds, pspecs = _recsys_param_sds(cfg, mesh)
+    n_bsh = 1
+    for a in _batch_axes(mesh):
+        n_bsh *= mesh.shape[a]
+    if b >= n_bsh:
+        bsh = _sh(mesh, _ba(mesh), None)
+        bsh1 = _sh(mesh, _ba(mesh))
+    else:  # tiny batches (retrieval b=1) replicate
+        bsh = _sh(mesh, None, None)
+        bsh1 = _sh(mesh, None)
+    with_seq = cfg.kind in ("sasrec", "mind")
+
+    def mk_batch(bb, n_cand=0):
+        out = {"sparse_ids": _sds((bb, cfg.n_fields), jnp.int32, bsh),
+               "label": _sds((bb,), jnp.float32, bsh1)}
+        if with_seq:
+            out["hist"] = _sds((bb, cfg.seq_len), jnp.int32, bsh)
+            out["hist_mask"] = _sds((bb, cfg.seq_len), jnp.bool_, bsh)
+            out["target"] = _sds((bb,), jnp.int32, bsh1)
+        if n_cand:
+            # candidates replicated on batch, sharded over the model axis
+            out["cand"] = _sds((bb, n_cand), jnp.int32,
+                               _sh(mesh, None, MODEL_AXIS))
+            out.pop("label")
+        return out
+
+    if cell.kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_shapes = jax.eval_shape(
+            functools.partial(init_state, opt_cfg),
+            jax.eval_shape(lambda: None) if False else params_sds)
+        opt_pspecs = type(opt_shapes)(step=P(), m=pspecs, v=pspecs)
+        opt_sds = _with_shardings(opt_shapes, opt_pspecs, mesh)
+        step = build_train_step(
+            lambda p, bt: R.bce_loss(p, bt, cfg), opt_cfg, n_microbatches=1)
+        return Cell(spec.arch_id, cell.name, step,
+                    (params_sds, opt_sds, mk_batch(b)),
+                    _recsys_flops(cfg, b, "train"), "train",
+                    donate_argnums=(0, 1))
+
+    if cell.kind == "serve_logits":
+        def step(params, batch):
+            return R.LOGIT_FNS[cfg.kind](params, batch, cfg)
+        return Cell(spec.arch_id, cell.name, step, (params_sds, mk_batch(b)),
+                    _recsys_flops(cfg, b, "serve"), "serve_logits")
+
+    if cell.kind == "retrieval":
+        n_cand = cell.params["n_candidates"]
+        k = cell.params.get("k", 100)
+
+        def step(params, batch):
+            from repro.core.topk import topk_smallest
+            scores = R.retrieval_scores(params, batch, cfg)
+            return topk_smallest(-scores, k)  # top-k LARGEST scores
+
+        return Cell(spec.arch_id, cell.name, step,
+                    (params_sds, mk_batch(b, n_cand=n_cand)),
+                    _recsys_flops(cfg, b, "serve", n_cand=n_cand),
+                    "retrieval")
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# LC-RWMD cells (the paper)
+# ---------------------------------------------------------------------------
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+def _lcrwmd_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    from repro.distributed.lcrwmd_dist import build_allpairs_d1, build_serve_step
+
+    cfg = spec.model_cfg
+    p = cell.params
+    n_shards = 1
+    for a in _batch_axes(mesh):
+        n_shards *= mesh.shape[a]
+    n_model = mesh.shape[MODEL_AXIS]
+
+    if cell.kind == "lcrwmd_serve":
+        n = _round_up(p["n_resident"], n_shards)
+        v = _round_up(p["vocab"], n_model * n_shards)  # full-mesh phase 1
+        h, b, hq = p["h_resident"], p["n_query"], p["h_query"]
+        k = p.get("k", cfg.k)
+        serve = build_serve_step(mesh, k=k, bf16_matmul=cfg.bf16_matmul)
+        rsh = _sh(mesh, _ba(mesh), None)
+        rep = _sh(mesh, None, None)
+        from repro.data.docs import DocSet
+        resident = DocSet(ids=_sds((n, h), jnp.int32, rsh),
+                          weights=_sds((n, h), jnp.float32, rsh))
+        queries = DocSet(ids=_sds((b, hq), jnp.int32, rep),
+                         weights=_sds((b, hq), jnp.float32, rep))
+        emb = _sds((v, cfg.emb_dim), jnp.float32, _sh(mesh, MODEL_AXIS, None))
+        flops = (2.0 * v * b * hq * cfg.emb_dim   # phase 1 distance GEMM
+                 + 2.0 * n * h * b)               # phase 2 SpMM
+        return Cell(spec.arch_id, cell.name,
+                    lambda r, q, e: serve(r, q, e),
+                    (resident, queries, emb), flops, "lcrwmd_serve",
+                    notes=f"padded n={n} v={v}")
+
+    if cell.kind == "lcrwmd_allpairs":
+        n1 = _round_up(p["n_set1"], n_shards)
+        n2 = p["n_set2"]
+        v = _round_up(p["vocab"], n_model * n_shards)  # full-mesh phase 1
+        h = p["h"]
+        d1 = build_allpairs_d1(mesh, bf16_matmul=cfg.bf16_matmul)
+        from repro.data.docs import DocSet
+        rsh = _sh(mesh, _ba(mesh), None)
+        rep = _sh(mesh, None, None)
+        set1 = DocSet(ids=_sds((n1, h), jnp.int32, rsh),
+                      weights=_sds((n1, h), jnp.float32, rsh))
+        set2 = DocSet(ids=_sds((n2, h), jnp.int32, rep),
+                      weights=_sds((n2, h), jnp.float32, rep))
+        emb = _sds((v, cfg.emb_dim), jnp.float32, _sh(mesh, MODEL_AXIS, None))
+        flops = 2.0 * v * n2 * h * cfg.emb_dim + 2.0 * n1 * h * n2
+        return Cell(spec.arch_id, cell.name, lambda a, b_, e: d1(a, b_, e),
+                    (set1, set2, emb), flops, "lcrwmd_allpairs",
+                    notes=f"padded n1={n1} v={v}")
+    raise ValueError(cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+def build_cell(arch_id: str, shape_id: str, mesh) -> Cell:
+    spec = get_spec(arch_id)
+    cell = spec.shapes[shape_id]
+    if cell.skip_reason:
+        raise ValueError(f"cell {arch_id}/{shape_id} skipped: {cell.skip_reason}")
+    if spec.family == "lm":
+        if cell.kind == "train":
+            return _lm_train_cell(spec, cell, mesh)
+        if cell.kind == "prefill":
+            return _lm_prefill_cell(spec, cell, mesh)
+        if cell.kind == "decode":
+            return _lm_decode_cell(spec, cell, mesh)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, cell, mesh)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, cell, mesh)
+    if spec.family == "lcrwmd":
+        return _lcrwmd_cell(spec, cell, mesh)
+    raise ValueError((spec.family, cell.kind))
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every (arch, shape) pair, assigned archs first, then the paper's own."""
+    from repro.configs import ASSIGNED_ARCHS
+
+    out = []
+    for a in ASSIGNED_ARCHS + ["lcrwmd"]:
+        spec = get_spec(a)
+        for s in spec.shapes:
+            out.append((a, s))
+    return out

@@ -1,0 +1,58 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* jax
+initializes, and smoke tests must keep seeing 1 device.
+
+Mesh semantics:
+  pod   — cross-pod axis (DCN-speed). Only embarrassingly-parallel dims are
+          placed here (resident docs, global batch); no per-layer collectives.
+  data  — intra-pod batch/FSDP axis (ICI).
+  model — tensor/expert/vocab-parallel axis (ICI).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+
+def _mk(shape, axes):
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = (POD_AXIS, DATA_AXIS, MODEL_AXIS) if multi_pod else (DATA_AXIS, MODEL_AXIS)
+    return _mk(shape, axes)
+
+
+def make_host_mesh(
+    data: int = 1, model: int = 1, pod: int | None = None
+) -> jax.sharding.Mesh:
+    """Small mesh over however many devices exist (tests / CPU smoke runs)."""
+    n = len(jax.devices())
+    if data * model * (pod or 1) > n:
+        raise ValueError(f"requested {data}x{model}x{pod} > {n} devices")
+    if pod is None:
+        return _mk((data, model), (DATA_AXIS, MODEL_AXIS))
+    return _mk((pod, data, model), (POD_AXIS, DATA_AXIS, MODEL_AXIS))
+
+
+def mesh_axis_names(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Axes over which batch-like (embarrassingly parallel) dims shard."""
+    return tuple(a for a in mesh.axis_names if a in (POD_AXIS, DATA_AXIS))
+
+
+def n_chips(mesh: jax.sharding.Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,98 @@
+"""Sharded embedding tables + EmbeddingBag for recsys (DLRM-style).
+
+JAX has no native EmbeddingBag or CSR sparse — per the brief this IS part of
+the system: lookups are ``jnp.take`` + ``jax.ops.segment_sum``; the
+distributed path row-shards one unified hash table over the `model` axis and
+resolves lookups with the mask-gather-psum pattern inside shard_map (same
+collective schedule as the LC-RWMD phase-2 SpMM, deliberately shared code
+shape).
+
+All sparse fields share ONE table of ``total_rows`` hashed rows
+(quotient-remainder-free variant of the hashing trick): field f, raw id x ->
+row ``(f * P + x) % total_rows``.  Multi-hot bags reduce with segment_sum.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+
+Array = jax.Array
+_HASH_PRIME = 2_654_435_761  # Knuth multiplicative hash
+
+
+def hash_ids(field_ids: Array, raw_ids: Array, total_rows: int) -> Array:
+    """Deterministic row ids for (field, raw id) pairs."""
+    h = (raw_ids.astype(jnp.uint32) * jnp.uint32(_HASH_PRIME)
+         + field_ids.astype(jnp.uint32) * jnp.uint32(0x9E3779B9))
+    return (h % jnp.uint32(total_rows)).astype(jnp.int32)
+
+
+def embedding_lookup(table: Array, rows: Array) -> Array:
+    """Plain single-device lookup: (..., ) int32 -> (..., D)."""
+    return jnp.take(table, rows, axis=0)
+
+
+def embedding_bag(
+    table: Array, rows: Array, bag_ids: Array, n_bags: int,
+    weights: Array | None = None, *, mode: str = "sum",
+) -> Array:
+    """EmbeddingBag: gather rows then segment-reduce into bags.
+
+    rows/bag_ids: (nnz,) int32; returns (n_bags, D).
+    """
+    g = jnp.take(table, rows, axis=0)  # (nnz, D)
+    if weights is not None:
+        g = g * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(g, bag_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(g, bag_ids, num_segments=n_bags)
+        c = jax.ops.segment_sum(jnp.ones_like(rows, jnp.float32), bag_ids,
+                                num_segments=n_bags)
+        return s / jnp.maximum(c[:, None], 1.0)
+    if mode == "max":
+        return jax.ops.segment_max(g, bag_ids, num_segments=n_bags)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# distributed lookup (rows sharded over the `model` axis)
+# ---------------------------------------------------------------------------
+def sharded_lookup_local(table_local: Array, rows: Array,
+                         v_local: int) -> Array:
+    """Inside shard_map: each model shard contributes its rows; psum merges.
+
+    table_local (v_local, D); rows (...,) GLOBAL row ids.  Returns (..., D)
+    replicated over `model`.
+    """
+    mi = jax.lax.axis_index(MODEL_AXIS)
+    lo = (mi * v_local).astype(jnp.int32)
+    rel = rows - lo
+    inb = (rel >= 0) & (rel < v_local)
+    local = jnp.take(table_local, jnp.clip(rel, 0, v_local - 1), axis=0)
+    local = jnp.where(inb[..., None], local, 0.0)
+    return jax.lax.psum(local, MODEL_AXIS)
+
+
+def build_sharded_bag_lookup(mesh: jax.sharding.Mesh, *, n_fields: int):
+    """jit'd ``(table, row_ids (B, F)) -> (B, F, D)`` with table rows sharded
+    over `model` and the batch sharded over the batch axes (one-hot fields)."""
+    batch_axes = tuple(a for a in mesh.axis_names if a in (POD_AXIS, DATA_AXIS))
+    bspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
+
+    def kernel(table_local, rows):
+        v_local = table_local.shape[0]
+        return sharded_lookup_local(table_local, rows, v_local)
+
+    shmapped = jax.shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P(MODEL_AXIS, None), bspec),
+        out_specs=P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
+                    None, None),
+        check_vma=False,
+    )
+    return jax.jit(shmapped)

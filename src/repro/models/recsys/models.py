@@ -1,0 +1,265 @@
+"""RecSys architectures: FM, xDeepFM (CIN), SASRec, MIND.
+
+Shared contract — batch dict:
+  sparse_ids  (B, F) int32 global hashed table rows (one id per field; the
+              embedding layer also supports multi-hot bags, see embedding.py)
+  dense_feat  (B, Fd) f32 (optional)
+  label       (B,) f32 {0,1} (training)
+SASRec/MIND additionally:
+  hist        (B, T) int32 item rows, hist_mask (B, T) bool
+  target      (B,) int32 item row (train) / cand (B, Nc) int32 (retrieval)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.recsys.embedding import embedding_lookup
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RecSysConfig:
+    name: str
+    kind: Literal["fm", "xdeepfm", "sasrec", "mind"]
+    n_fields: int = 39
+    embed_dim: int = 10
+    total_rows: int = 10_000_000   # unified hashed table rows
+    n_dense: int = 0
+    mlp_dims: tuple[int, ...] = (400, 400)
+    cin_dims: tuple[int, ...] = (200, 200, 200)
+    # sequential (sasrec/mind)
+    seq_len: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    n_interests: int = 4
+    capsule_iters: int = 3
+    dtype: str = "float32"
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: RecSysConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    keys = iter(jax.random.split(key, 64))
+
+    def dense(fan_in, shape):
+        return (jax.random.normal(next(keys), shape, jnp.float32)
+                * fan_in ** -0.5).astype(dt)
+
+    d = cfg.embed_dim
+    p: dict = {
+        "table": dense(d, (cfg.total_rows, d)),
+        "field_bias": jnp.zeros((cfg.n_fields,), dt),
+        "bias": jnp.zeros((), dt),
+    }
+    if cfg.kind == "fm":
+        if cfg.n_dense:
+            p["w_dense"] = dense(cfg.n_dense, (cfg.n_dense, 1))
+        return p
+
+    if cfg.kind == "xdeepfm":
+        if cfg.n_dense:
+            p["w_dense"] = dense(cfg.n_dense, (cfg.n_dense, cfg.mlp_dims[0]))
+        # CIN: layer k maps (H_{k-1} x F) outer field maps -> H_k via 1x1 conv
+        cin = []
+        h_prev = cfg.n_fields
+        for h in cfg.cin_dims:
+            cin.append(dense(h_prev * cfg.n_fields, (h_prev * cfg.n_fields, h)))
+            h_prev = h
+        p["cin"] = cin
+        p["cin_out"] = dense(sum(cfg.cin_dims), (sum(cfg.cin_dims), 1))
+        # deep MLP branch
+        mlp, prev = [], cfg.n_fields * d + (cfg.mlp_dims[0] if cfg.n_dense else 0)
+        for h in cfg.mlp_dims:
+            mlp.append({"w": dense(prev, (prev, h)), "b": jnp.zeros((h,), dt)})
+            prev = h
+        p["mlp"] = mlp
+        p["mlp_out"] = dense(prev, (prev, 1))
+        return p
+
+    # sequential models share the item table + positional embeddings
+    p["pos"] = dense(d, (cfg.seq_len, d))
+    if cfg.kind == "sasrec":
+        blocks = []
+        for _ in range(cfg.n_blocks):
+            blocks.append({
+                "ln1": jnp.ones((d,), dt), "ln2": jnp.ones((d,), dt),
+                "wq": dense(d, (d, d)), "wk": dense(d, (d, d)),
+                "wv": dense(d, (d, d)), "wo": dense(d, (d, d)),
+                "w1": dense(d, (d, d)), "b1": jnp.zeros((d,), dt),
+                "w2": dense(d, (d, d)), "b2": jnp.zeros((d,), dt),
+            })
+        p["blocks"] = blocks
+        p["final_ln"] = jnp.ones((d,), dt)
+        return p
+
+    if cfg.kind == "mind":
+        p["caps_bilinear"] = dense(d, (d, d))   # S: behavior -> interest space
+        p["label_w"] = dense(d, (d, d))
+        return p
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# FM (Rendle ICDM'10): O(nk) sum-square trick
+# ---------------------------------------------------------------------------
+def fm_logits(p, batch, cfg: RecSysConfig) -> Array:
+    emb = embedding_lookup(p["table"], batch["sparse_ids"])  # (B, F, D)
+    s = jnp.sum(emb, axis=1)                                 # (B, D)
+    pairwise = 0.5 * jnp.sum(s * s - jnp.sum(emb * emb, axis=1), axis=-1)
+    linear = jnp.sum(p["field_bias"])  # per-field bias (ids folded in table)
+    out = pairwise + linear + p["bias"]
+    if cfg.n_dense and "dense_feat" in batch:
+        out = out + (batch["dense_feat"] @ p["w_dense"])[:, 0]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM (arXiv:1803.05170): CIN + deep MLP
+# ---------------------------------------------------------------------------
+def _cin(p, x0: Array, cfg: RecSysConfig) -> Array:
+    """Compressed Interaction Network. x0 (B, F, D) -> (B, sum(H_k))."""
+    b, f, d = x0.shape
+    xs = []
+    xk = x0
+    for w in p["cin"]:
+        hk = xk.shape[1]
+        # outer interaction: z (B, Hk*F, D)
+        z = (xk[:, :, None, :] * x0[:, None, :, :]).reshape(b, hk * f, d)
+        xk = jnp.einsum("bzd,zh->bhd", z, w)     # 1x1 conv compress
+        xk = jax.nn.relu(xk)
+        xs.append(jnp.sum(xk, axis=-1))          # sum-pool over D -> (B, Hk)
+    return jnp.concatenate(xs, axis=-1)
+
+
+def xdeepfm_logits(p, batch, cfg: RecSysConfig) -> Array:
+    emb = embedding_lookup(p["table"], batch["sparse_ids"])  # (B, F, D)
+    b = emb.shape[0]
+    cin_feat = _cin(p, emb, cfg)
+    cin_term = (cin_feat @ p["cin_out"])[:, 0]
+
+    deep = emb.reshape(b, -1)
+    if cfg.n_dense and "dense_feat" in batch:
+        deep = jnp.concatenate(
+            [deep, jax.nn.relu(batch["dense_feat"] @ p["w_dense"])], axis=-1)
+    h = deep
+    for layer in p["mlp"]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    deep_term = (h @ p["mlp_out"])[:, 0]
+
+    # FM-style linear term + bias
+    return cin_term + deep_term + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# SASRec (arXiv:1808.09781)
+# ---------------------------------------------------------------------------
+def _ln(x, scale):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def sasrec_user_embedding(p, batch, cfg: RecSysConfig) -> Array:
+    """Causal self-attention over the item history -> (B, D) user vector."""
+    hist = batch["hist"]           # (B, T)
+    mask = batch["hist_mask"]      # (B, T) bool
+    b, t = hist.shape
+    x = embedding_lookup(p["table"], hist) + p["pos"][None, :t]
+    x = x * mask[..., None]
+    neg = -1e30
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    attn_mask = jnp.where(causal[None] & mask[:, None, :], 0.0, neg)  # (B,T,T)
+    for blk in p["blocks"]:
+        h = _ln(x, blk["ln1"])
+        q, k, v = h @ blk["wq"], h @ blk["wk"], h @ blk["wv"]
+        s = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(
+            jnp.float32(cfg.embed_dim))
+        a = jax.nn.softmax(s + attn_mask, axis=-1)
+        x = x + (a @ v) @ blk["wo"]
+        h = _ln(x, blk["ln2"])
+        x = x + jax.nn.relu(h @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+    x = _ln(x, p["final_ln"])
+    # user representation = hidden state at the last valid position
+    last = jnp.maximum(jnp.sum(mask, axis=1) - 1, 0)  # (B,)
+    return jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+
+
+def sasrec_logits(p, batch, cfg: RecSysConfig) -> Array:
+    u = sasrec_user_embedding(p, batch, cfg)             # (B, D)
+    tgt = embedding_lookup(p["table"], batch["target"])  # (B, D)
+    return jnp.sum(u * tgt, axis=-1) + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# MIND (arXiv:1904.08030): multi-interest dynamic-routing capsules
+# ---------------------------------------------------------------------------
+def mind_interests(p, batch, cfg: RecSysConfig) -> Array:
+    """Behavior->interest capsules via B2I dynamic routing. -> (B, K, D)."""
+    hist = batch["hist"]; mask = batch["hist_mask"]
+    b, t = hist.shape
+    k = cfg.n_interests
+    e = embedding_lookup(p["table"], hist)               # (B, T, D)
+    u = e @ p["caps_bilinear"]                           # shared S matrix
+    logits_b = jnp.zeros((b, k, t), u.dtype)             # routing logits
+    neg = -1e30
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(
+            jnp.where(mask[:, None, :], logits_b, neg), axis=-1)  # (B,K,T)
+        z = jnp.einsum("bkt,btd->bkd", w, u)
+        # squash
+        n2 = jnp.sum(z * z, axis=-1, keepdims=True)
+        cap = z * (n2 / (1 + n2)) / jnp.sqrt(n2 + 1e-9)
+        logits_b = logits_b + jnp.einsum("bkd,btd->bkt", cap, u)
+    return cap                                            # (B, K, D)
+
+
+def mind_logits(p, batch, cfg: RecSysConfig) -> Array:
+    """Label-aware attention: score = max_k <interest_k, target>."""
+    caps = mind_interests(p, batch, cfg)                  # (B, K, D)
+    tgt = embedding_lookup(p["table"], batch["target"]) @ p["label_w"]
+    return jnp.max(jnp.einsum("bkd,bd->bk", caps, tgt), axis=-1) + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# retrieval scoring: one query vs n_candidates (batched dot, NOT a loop)
+# ---------------------------------------------------------------------------
+def retrieval_scores(p, batch, cfg: RecSysConfig) -> Array:
+    """cand (B, Nc) -> scores (B, Nc); reuses the LC-RWMD top-k machinery."""
+    cand = embedding_lookup(p["table"], batch["cand"])    # (B, Nc, D)
+    if cfg.kind in ("fm", "xdeepfm"):
+        # two-tower style: context vector = sum of field embeddings
+        ctx = jnp.sum(
+            embedding_lookup(p["table"], batch["sparse_ids"]), axis=1)
+        return jnp.einsum("bnd,bd->bn", cand, ctx)
+    if cfg.kind == "sasrec":
+        u = sasrec_user_embedding(p, batch, cfg)
+        return jnp.einsum("bnd,bd->bn", cand, u)
+    if cfg.kind == "mind":
+        caps = mind_interests(p, batch, cfg)              # (B, K, D)
+        s = jnp.einsum("bnd,bkd->bnk", cand @ p["label_w"], caps)
+        return jnp.max(s, axis=-1)
+    raise ValueError(cfg.kind)
+
+
+LOGIT_FNS = {
+    "fm": fm_logits,
+    "xdeepfm": xdeepfm_logits,
+    "sasrec": sasrec_logits,
+    "mind": mind_logits,
+}
+
+
+def bce_loss(p, batch, cfg: RecSysConfig):
+    logits = LOGIT_FNS[cfg.kind](p, batch, cfg)
+    y = batch["label"]
+    l = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                 + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return l, {"bce": l}

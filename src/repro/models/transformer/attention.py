@@ -1,0 +1,79 @@
+"""GQA attention: dense, query-chunked (long prefill), and decode paths.
+
+Pure-JAX formulations chosen to lower well under GSPMD:
+  - grouped heads stay factored (B,S,Hkv,G,D) so KV is never materialized
+    at Hq width (GQA's whole point);
+  - the chunked path scans query blocks (O(S·chunk) score memory) for
+    32k+ prefill;
+  - the decode path masks by cache length and works on a fixed-size cache
+    so serving shapes are static.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+_NEG = -1e30
+
+
+def _scores_softmax_ctx(q, k, v, mask, scale):
+    """q (B,S,Hkv,G,D); k/v (B,T,Hkv,D); mask broadcastable (B,1,1,S,T)."""
+    s = jnp.einsum("bshgd,bthd->bhgst", q, k, preferred_element_type=jnp.float32)
+    s = s * scale + mask
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgst,bthd->bshgd", p, v)
+
+
+def gqa_attention(
+    q: Array,  # (B, S, Hq, D)
+    k: Array,  # (B, T, Hkv, D)
+    v: Array,  # (B, T, Hkv, D)
+    *,
+    causal: bool = True,
+    q_offset: Array | int = 0,   # absolute position of q[0] (decode/chunks)
+    kv_len: Array | None = None,  # (B,) valid cache length (decode)
+    chunk: int = 0,
+) -> Array:
+    """Returns (B, S, Hq, D).  fp32 softmax, inputs' dtype elsewhere."""
+    b, s, hq, d = q.shape
+    _, t, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    scale = jnp.float32(1.0 / (d ** 0.5))
+
+    def mask_for(q_pos, k_pos):
+        m = jnp.zeros((b, 1, 1, q_pos.shape[0], t), jnp.float32)
+        if causal:
+            m = jnp.where(
+                k_pos[None, None, None, None, :] <= q_pos[None, None, None, :, None],
+                m, _NEG)
+        if kv_len is not None:
+            m = jnp.where(
+                k_pos[None, None, None, None, :] < kv_len[:, None, None, None, None],
+                m, _NEG)
+        return m
+
+    k_pos = jnp.arange(t, dtype=jnp.int32)
+
+    if chunk and s > chunk and s % chunk == 0:
+        # Scan over query chunks: score memory O(B*H*chunk*T).
+        qs = qg.reshape(b, s // chunk, chunk, hkv, g, d)
+
+        def body(_, args):
+            qc, idx = args
+            q_pos = q_offset + idx * chunk + jnp.arange(chunk, dtype=jnp.int32)
+            o = _scores_softmax_ctx(qc, k, v, mask_for(q_pos, k_pos), scale)
+            return None, o
+
+        _, out = jax.lax.scan(
+            body, None,
+            (jnp.moveaxis(qs, 1, 0), jnp.arange(s // chunk, dtype=jnp.int32)),
+        )
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, hkv, g, d)
+    else:
+        q_pos = q_offset + jnp.arange(s, dtype=jnp.int32)
+        out = _scores_softmax_ctx(qg, k, v, mask_for(q_pos, k_pos), scale)
+
+    return out.reshape(b, s, hq, d)

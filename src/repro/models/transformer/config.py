@@ -1,0 +1,134 @@
+"""Transformer configuration covering every assigned LM architecture.
+
+One dataclass expresses dense GQA (qwen/llama), MLA (deepseek-v2) and MoE
+(deepseek-v2, grok-1) variants; per-arch instances live in repro/configs/.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0              # shared (always-on) experts
+    d_expert_ff: int = 0           # per-expert FFN width
+    capacity_factor: float = 1.25  # dispatch capacity multiplier
+    first_dense_layers: int = 0    # leading layers that stay dense
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01  # load-balancing loss
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434)."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                      # dense-FFN width (or dense layers of MoE nets)
+    vocab_size: int
+    d_head: int = 0                # 0 -> d_model // n_heads
+    attention: Literal["gqa", "mla"] = "gqa"
+    mla: MLAConfig | None = None
+    moe: MoEConfig | None = None
+    qkv_bias: bool = False         # qwen2.5 uses bias on QKV only
+    tie_embeddings: bool = False
+    rope_theta: float = 500_000.0
+    rms_eps: float = 1e-5
+    max_seq_len: int = 32768
+    dtype: str = "bfloat16"        # activation/compute dtype
+    param_dtype: str = "float32"   # master param dtype
+
+    # execution knobs (overridable per shape-cell by the launcher)
+    remat: bool = True
+    scan_layers: bool = True
+    attn_chunk: int = 0            # 0 -> dense attention; else q-chunked scan
+    # Megatron-style sequence-parallel residual stream: a PartitionSpec-able
+    # tuple for (batch, seq, hidden), e.g. (("pod","data"), "model", None).
+    # Applied as with_sharding_constraint at block boundaries; requires a
+    # mesh context (dry-run / launcher); None disables (CPU tests).
+    act_pspec: tuple | None = None
+    # Megatron-SP inner spec: the residual stream is gathered to this spec
+    # INSIDE each block (seq local for matmuls/attention) and re-scattered at
+    # the next block boundary; the remat stash keeps the compact boundary
+    # layout. None -> no inner reshard (§Perf iteration 3).
+    act_inner_pspec: tuple | None = None
+    # Weight-cotangent sharding (EXPERIMENTS.md §Perf iter 1): pytrees of
+    # PartitionSpec for one stacked layer / the prefix layers.  When set,
+    # each layer's params pass through an identity custom_vjp whose backward
+    # constrains dW to the ZeRO shard layout at creation — turning XLA's
+    # full-f32 dW all-reduce + all-gather into a reduce-scatter.
+    grad_shard_pspecs: object = None
+    # iter-2 experiment (custom-vjp dW annotation): regressed vs autodiff
+    # (2126s -> 2523s collective); kept behind a flag for the §Perf record.
+    custom_dw: bool = False
+    # Attention-head sharding for q/k/v activations, e.g.
+    # (("pod","data"), None, "model", None). Without it GSPMD leaves prefill
+    # attention replicated over `model` -> 16x redundant score traffic
+    # (§Perf prefill iteration 1).
+    attn_head_pspec: tuple | None = None
+    # MoE dispatched-tensor sharding (g, E, C, D), e.g.
+    # (("pod","data"), "model", None, None) — see moe.moe_ffn.
+    moe_expert_pspec: tuple | None = None
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        if self.attention == "mla" and self.mla is None:
+            object.__setattr__(self, "mla", MLAConfig())
+        if self.n_heads % self.n_kv_heads != 0 and self.attention == "gqa":
+            raise ValueError("n_heads must be a multiple of n_kv_heads")
+
+    @property
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for rooflines."""
+        d, l = self.d_model, self.n_layers
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.attention == "gqa":
+            attn = d * (self.n_heads * self.d_head) + 2 * d * (
+                self.n_kv_heads * self.d_head) + (self.n_heads * self.d_head) * d
+        else:
+            m = self.mla
+            q = d * m.q_lora_rank + m.q_lora_rank * self.n_heads * (
+                m.qk_nope_head_dim + m.qk_rope_head_dim)
+            kv = d * (m.kv_lora_rank + m.qk_rope_head_dim) + m.kv_lora_rank * (
+                self.n_heads * (m.qk_nope_head_dim + m.v_head_dim))
+            o = self.n_heads * m.v_head_dim * d
+            attn = q + kv + o
+        dense_ffn = 3 * d * self.d_ff
+        if self.moe is None:
+            ffn_total = l * dense_ffn
+        else:
+            moe_ffn = 3 * d * self.moe.d_expert_ff * (
+                self.moe.n_experts + self.moe.n_shared) + d * self.moe.n_experts
+            nd = self.moe.first_dense_layers
+            ffn_total = nd * dense_ffn + (l - nd) * moe_ffn
+        norms = l * 2 * d + d
+        return emb + l * attn + ffn_total + norms
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared experts)."""
+        if self.moe is None:
+            return self.n_params
+        d, l = self.d_model, self.n_layers
+        moe_active = 3 * d * self.moe.d_expert_ff * (
+            self.moe.top_k + self.moe.n_shared) + d * self.moe.n_experts
+        moe_full = 3 * d * self.moe.d_expert_ff * (
+            self.moe.n_experts + self.moe.n_shared) + d * self.moe.n_experts
+        nd = self.moe.first_dense_layers
+        return self.n_params - (l - nd) * (moe_full - moe_active)

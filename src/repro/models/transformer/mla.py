@@ -1,0 +1,201 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Train/prefill path decompresses the latent per head (faithful to the paper).
+The decode path uses the ABSORBED formulation: queries are projected into
+the latent space (q · W_uk) so attention runs directly against the compact
+(kv_lora + rope) cache — no per-head K/V expansion, which is what makes a
+524k-token cache tractable (see DESIGN.md §4 / EXPERIMENTS.md §Perf).
+
+Cache per token: kv_lora_rank + qk_rope_head_dim floats (e.g. 512+64),
+vs n_heads*(d_nope+d_v)=32768 for naive MHA — a 57x reduction.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.config import TransformerConfig
+from repro.models.transformer.rope import apply_rope, rope_cos_sin
+
+Array = jax.Array
+_NEG = -1e30
+
+
+class MLACache(NamedTuple):
+    c_kv: Array    # (B, T, kv_lora_rank)
+    k_rope: Array  # (B, T, qk_rope_head_dim)
+
+
+def _rms(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return ((x.astype(jnp.float32) * jax.lax.rsqrt(var + eps))
+            .astype(x.dtype) * scale.astype(x.dtype))
+
+
+def mla_qkv(p, x, cfg: TransformerConfig, positions):
+    """Shared projections. Returns (q_nope, q_rope, c_kv, k_rope_pos)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    ct = lambda w: w.astype(x.dtype)
+    # Q: low-rank down, norm, up; split nope/rope per head.
+    cq = _rms(x @ ct(p["wq_a"]), p["q_ln"], cfg.rms_eps)
+    q = (cq @ ct(p["wq_b"])).reshape(
+        b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim :]
+    # KV: joint down-projection; split latent / shared rope key.
+    kv_a = x @ ct(p["w_kv_a"])  # (B,S, kv_lora + rope)
+    c_kv = _rms(kv_a[..., : m.kv_lora_rank], p["kv_ln"], cfg.rms_eps)
+    k_rope = kv_a[..., m.kv_lora_rank :]  # (B,S,rope) single shared head
+    cos, sin = rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention_train(p, x, cfg: TransformerConfig, positions) -> Array:
+    """Full-sequence causal MLA (decompressed K/V — faithful to the paper)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = mla_qkv(p, x, cfg, positions)
+
+    ct = lambda w: w.astype(x.dtype)
+    k_nope = jnp.einsum("btr,rhn->bthn", c_kv, ct(p["w_uk"]))  # (B,T,H,nope)
+    v = jnp.einsum("btr,rhn->bthn", c_kv, ct(p["w_uv"]))       # (B,T,H,vd)
+    if cfg.attn_head_pspec is not None:
+        from jax.sharding import PartitionSpec as P
+        hp = P(*cfg.attn_head_pspec)
+        q_nope = jax.lax.with_sharding_constraint(q_nope, hp)
+        q_rope = jax.lax.with_sharding_constraint(q_rope, hp)
+        k_nope = jax.lax.with_sharding_constraint(k_nope, hp)
+        v = jax.lax.with_sharding_constraint(v, hp)
+
+    scale = jnp.float32((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    scores = (
+        jnp.einsum("bshn,bthn->bhst", q_nope, k_nope,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bshr,btr->bhst", q_rope, k_rope,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    pos = jnp.arange(s, dtype=jnp.int32)
+    scores = jnp.where(pos[None, None, None, :] <= pos[None, None, :, None],
+                       scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhst,bthn->bshn", w, v)               # (B,S,H,vd)
+    return ctx.reshape(b, s, h * m.v_head_dim) @ ct(p["wo"])
+
+
+def mla_attention_decode(
+    p, x, cfg: TransformerConfig, cache: MLACache, lengths: Array
+) -> tuple[Array, MLACache]:
+    """One-token absorbed-MLA decode against the latent cache.
+
+    x: (B, 1, D); lengths: (B,) current cache fill. Returns (out, new cache).
+    """
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    positions = lengths[:, None]  # (B,1) absolute position of the new token
+    q_nope, q_rope, c_new, kr_new = mla_qkv(p, x, cfg, positions)
+
+    # Append to cache at position `lengths` (static-size cache, dynamic idx).
+    t = cache.c_kv.shape[1]
+    onehot = jax.nn.one_hot(lengths, t, dtype=cache.c_kv.dtype)  # (B,T)
+    c_kv = cache.c_kv + onehot[..., None] * c_new[:, 0, None, :]
+    k_rope = cache.k_rope + onehot[..., None] * kr_new[:, 0, None, :]
+
+    ct = lambda w: w.astype(x.dtype)
+    # Absorbed scores: q_c = q_nope · W_uk  -> latent space.
+    q_c = jnp.einsum("bshn,rhn->bshr", q_nope, ct(p["w_uk"]))  # (B,1,H,r)
+    scale = jnp.float32((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_c, c_kv, preferred_element_type=jnp.float32)
+        + jnp.einsum("bshr,btr->bhst", q_rope, k_rope,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    k_pos = jnp.arange(t, dtype=jnp.int32)
+    scores = jnp.where(
+        k_pos[None, None, None, :] <= lengths[:, None, None, None], scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_c = jnp.einsum("bhst,btr->bshr", w, c_kv)           # (B,1,H,r)
+    ctx = jnp.einsum("bshr,rhn->bshn", ctx_c, ct(p["w_uv"]))  # (B,1,H,vd)
+    out = ctx.reshape(b, s, h * m.v_head_dim) @ ct(p["wo"])
+    return out, MLACache(c_kv=c_kv, k_rope=k_rope)
+
+
+def mla_init(key, cfg: TransformerConfig, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    k = jax.random.split(key, 6)
+    sd = d ** -0.5
+
+    def init(kk, shape, scale):
+        return (jax.random.normal(kk, shape, jnp.float32) * scale).astype(dtype)
+
+    return {
+        "wq_a": init(k[0], (d, m.q_lora_rank), sd),
+        "q_ln": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": init(k[1], (m.q_lora_rank,
+                            h * (m.qk_nope_head_dim + m.qk_rope_head_dim)),
+                     m.q_lora_rank ** -0.5),
+        "w_kv_a": init(k[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), sd),
+        "kv_ln": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_uk": init(k[3], (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                     m.kv_lora_rank ** -0.5),
+        "w_uv": init(k[4], (m.kv_lora_rank, h, m.v_head_dim),
+                     m.kv_lora_rank ** -0.5),
+        "wo": init(k[5], (h * m.v_head_dim, d), (h * m.v_head_dim) ** -0.5),
+    }
+
+
+def mla_attention_decode_quant(
+    p, x, cfg: TransformerConfig, c_q, c_scale, k_rope, lengths
+):
+    """Absorbed MLA decode against an int8 latent cache (§Perf decode lane).
+
+    c_q (B,T,r) int8 with per-(B,T) scale; scores and context factor the
+    scale OUTSIDE the dots (same scheme as the GQA int8 cache):
+        score = (q_c . c_int8) * scale + q_rope . k_rope
+        ctx_c = (p * scale) @ c_int8
+    Returns (out, (c_q, c_scale, k_rope)) with the new token appended.
+    """
+    from repro.models.transformer.kv_quant import quantize_kv
+
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, c_new, kr_new = mla_qkv(p, x, cfg, lengths[:, None])
+
+    t = c_q.shape[1]
+    onehot = jax.nn.one_hot(lengths, t, dtype=jnp.float32)  # (B,T)
+    cq_new, cs_new = quantize_kv(c_new[:, 0])               # (B,r), (B,)
+    c_q = c_q + (onehot[..., None]
+                 * cq_new.astype(jnp.float32)[:, None]).astype(jnp.int8)
+    c_scale = c_scale + onehot * cs_new[:, None]
+    k_rope = k_rope + (onehot[..., None]
+                       * kr_new[:, 0, None, :]).astype(k_rope.dtype)
+
+    ct = lambda w: w.astype(x.dtype)
+    q_c = jnp.einsum("bshn,rhn->bshr", q_nope, ct(p["w_uk"]))
+    scale = jnp.float32((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_c.astype(jnp.float32),
+                   c_q.astype(jnp.float32)) * c_scale[:, None, None, :]
+        + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                     k_rope.astype(jnp.float32))
+    ) * scale
+    k_pos = jnp.arange(t, dtype=jnp.int32)
+    scores = jnp.where(
+        k_pos[None, None, None, :] <= lengths[:, None, None, None],
+        scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1)
+    pw = w * c_scale[:, None, None, :]                      # fold scale
+    ctx_c = jnp.einsum("bhst,btr->bshr", pw, c_q.astype(jnp.float32))
+    ctx = jnp.einsum("bshr,rhn->bshn", ctx_c.astype(x.dtype), ct(p["w_uv"]))
+    out = ctx.reshape(b, s, h * m.v_head_dim) @ ct(p["wo"])
+    return out, (c_q, c_scale, k_rope)

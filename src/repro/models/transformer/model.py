@@ -1,0 +1,562 @@
+"""Transformer model: init / forward / loss / decode, pure-functional JAX.
+
+Layer params are stacked along a leading ``n_layers`` axis and traversed
+with ``jax.lax.scan`` (keeps HLO size O(1) in depth — essential for the
+126-layer dry-runs), with per-layer ``jax.checkpoint`` when cfg.remat.
+Heterogeneous-depth nets (deepseek-v2's first-dense-layer) keep a small
+python-level ``prefix_layers`` list before the scanned stack.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.attention import gqa_attention
+from repro.models.transformer.config import TransformerConfig
+from repro.models.transformer.mla import (
+    MLACache,
+    mla_attention_decode,
+    mla_attention_train,
+    mla_init,
+)
+from repro.models.transformer.moe import moe_ffn, moe_init
+from repro.models.transformer.rope import apply_rope, rope_cos_sin
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    """Decode cache. GQA: k/v (L,B,T,Hkv,dh). MLA: c_kv (L,B,T,r), k_rope."""
+    k: Array
+    v: Array
+    lengths: Array  # (B,) tokens already in cache
+
+
+def rmsnorm(x: Array, scale: Array, eps: float) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return ((x.astype(jnp.float32) * jax.lax.rsqrt(var + eps))
+            .astype(x.dtype) * scale.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _dense_ffn_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = d_model ** -0.5
+
+    def init(kk, shape, scale):
+        return (jax.random.normal(kk, shape, jnp.float32) * scale).astype(dtype)
+
+    return {
+        "w_gate": init(k1, (d_model, d_ff), s),
+        "w_in": init(k2, (d_model, d_ff), s),
+        "w_out": init(k3, (d_ff, d_model), d_ff ** -0.5),
+    }
+
+
+def _gqa_init(key, cfg: TransformerConfig, dtype):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+
+    def init(kk, shape, scale):
+        return (jax.random.normal(kk, shape, jnp.float32) * scale).astype(dtype)
+
+    p = {
+        "wq": init(ks[0], (d, hq * dh), s),
+        "wk": init(ks[1], (d, hkv * dh), s),
+        "wv": init(ks[2], (d, hkv * dh), s),
+        "wo": init(ks[3], (hq * dh, d), (hq * dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def _layer_init(key, cfg: TransformerConfig, dtype, *, dense: bool):
+    ka, kf = jax.random.split(key)
+    attn = (_gqa_init(ka, cfg, dtype) if cfg.attention == "gqa"
+            else mla_init(ka, cfg, dtype))
+    if dense or cfg.moe is None:
+        ffn = _dense_ffn_init(kf, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        ffn = moe_init(kf, cfg.d_model, cfg.moe, dtype)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn,
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": ffn,
+    }
+
+
+def init_params(key, cfg: TransformerConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_stack = cfg.n_layers - n_prefix
+    k_emb, k_pre, k_stack, k_out = jax.random.split(key, 4)
+
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * cfg.d_model ** -0.5
+                  ).astype(dtype),
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+    }
+    if n_prefix:
+        params["prefix_layers"] = [
+            _layer_init(k, cfg, dtype, dense=True)
+            for k in jax.random.split(k_pre, n_prefix)
+        ]
+    params["layers"] = jax.vmap(
+        lambda k: _layer_init(k, cfg, dtype, dense=False)
+    )(jax.random.split(k_stack, n_stack))
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(k_out, (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5).astype(dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / scoring)
+# ---------------------------------------------------------------------------
+def _gqa_block_train(cfg, p, h, positions, psp=None):
+    b, s, _ = h.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ct = lambda w: w.astype(h.dtype)
+    g = (lambda n: psp.get(n)) if psp else (lambda n: None)
+    q = _mm(h, p["wq"], g("wq"))
+    k = _mm(h, p["wk"], g("wk"))
+    v = _mm(h, p["wv"], g("wv"))
+    if cfg.qkv_bias:
+        q = q + ct(p["bq"]); k = k + ct(p["bk"]); v = v + ct(p["bv"])
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    cos, sin = rope_cos_sin(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if cfg.attn_head_pspec is not None:
+        from jax.sharding import PartitionSpec as P
+        hp = P(*cfg.attn_head_pspec)
+        q = jax.lax.with_sharding_constraint(q, hp)
+        k = jax.lax.with_sharding_constraint(k, hp)
+        v = jax.lax.with_sharding_constraint(v, hp)
+    out = gqa_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    return _mm(out.reshape(b, s, hq * dh), p["wo"], g("wo"))
+
+
+def _dense_ffn(cfg, p, h, psp=None):
+    g = (lambda n: psp.get(n)) if psp else (lambda n: None)
+    hidden = jax.nn.silu(_mm(h, p["w_gate"], g("w_gate"))) \
+        * _mm(h, p["w_in"], g("w_in"))
+    return _mm(hidden, p["w_out"], g("w_out"))
+
+
+def _constrain_act(x, cfg: TransformerConfig):
+    """Sequence-parallel residual stream (Megatron SP under GSPMD)."""
+    if cfg.act_pspec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*cfg.act_pspec))
+
+
+def _gather_act(x, cfg: TransformerConfig):
+    """Megatron-SP: gather the boundary-sharded stream for block compute."""
+    if cfg.act_inner_pspec is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*cfg.act_inner_pspec))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_sharded_id(w, pspec):
+    """Identity whose BACKWARD constrains the cotangent to ``pspec``.
+
+    §Perf iteration 1 (EXPERIMENTS.md): without this, XLA materializes each
+    layer's full weight cotangent (f32, replicated) and all-reduces it per
+    microbatch; constraining dW at creation makes GSPMD reduce-scatter it
+    straight into the (data, model) ZeRO shard.
+    """
+    return w
+
+
+def _gsid_fwd(w, pspec):
+    return w, None
+
+
+def _gsid_bwd(pspec, _, dy):
+    return (jax.lax.with_sharding_constraint(dy, pspec),)
+
+
+_grad_sharded_id.defvjp(_gsid_fwd, _gsid_bwd)
+
+
+def _shard_layer_grads(lp, pspecs):
+    """Wrap one layer's param pytree; None pspecs -> no-op."""
+    if pspecs is None:
+        return lp
+    return jax.tree.map(_grad_sharded_id, lp, pspecs)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _mm_psharded(x, w, pspec):
+    """x @ w with a hand-written backward that computes dW and annotates it
+    sharded AT THE DOT OUTPUT (§Perf iteration 2).
+
+    Iteration 1 (constraint on the autodiff cotangent, post convert/reshape)
+    was REFUTED: GSPMD still materialized full f32 dW with an all-reduce and
+    sliced afterwards.  Annotating the producing dot itself lets the
+    partitioner emit reduce-scatters over (data, model) instead.  dW is
+    computed in bf16 (halves collective payload), upcast only at the fp32
+    accumulator.
+    """
+    return x @ w.astype(x.dtype)
+
+
+def _mmps_fwd(x, w, pspec):
+    return x @ w.astype(x.dtype), (x, w)
+
+
+def _mmps_bwd(pspec, res, dy):
+    x, w = res
+    dx = dy @ w.astype(dy.dtype).T
+    nbatch = x.ndim - 1
+    dw = jax.lax.dot_general(
+        x, dy.astype(x.dtype),
+        ((tuple(range(nbatch)), tuple(range(nbatch))), ((), ())),
+    )
+    if pspec is not None:
+        dw = jax.lax.with_sharding_constraint(dw, pspec)
+    return dx, dw.astype(w.dtype)
+
+
+_mm_psharded.defvjp(_mmps_fwd, _mmps_bwd)
+
+
+def _mm(x, w, pspec):
+    """Matmul dispatch: annotated-bwd path when a pspec is supplied."""
+    if pspec is None:
+        return x @ w.astype(x.dtype)
+    return _mm_psharded(x, w, pspec)
+
+
+def _block_train(cfg: TransformerConfig, lp, x, positions, *, dense: bool):
+    x = _constrain_act(x, cfg)   # boundary layout (stashed by remat)
+    x = _gather_act(x, cfg)      # inner layout (recomputed, not stashed)
+    psp = None
+    if cfg.grad_shard_pspecs is not None:
+        key = "prefix" if dense and cfg.moe else "stack"
+        psp = cfg.grad_shard_pspecs.get(key)
+    if not cfg.custom_dw:
+        psp = None
+    h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+    if cfg.attention == "gqa":
+        a = _gqa_block_train(cfg, lp["attn"], h, positions,
+                             psp=psp.get("attn") if psp else None)
+    else:
+        a = mla_attention_train(lp["attn"], h, cfg, positions)
+    x = x + a
+    h = rmsnorm(x, lp["ln2"], cfg.rms_eps)
+    if dense or cfg.moe is None:
+        f = _dense_ffn(cfg, lp["ffn"], h,
+                       psp=psp.get("ffn") if psp else None)
+        aux = jnp.float32(0.0)
+    else:
+        f, aux = moe_ffn(lp["ffn"], h, cfg.moe, dtype=h.dtype,
+                         expert_pspec=cfg.moe_expert_pspec)
+    return x + f, aux
+
+
+def forward(params, tokens: Array, cfg: TransformerConfig) -> tuple[Array, Array]:
+    """tokens (B,S) -> (logits (B,S,V) f32, aux_loss scalar)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    x = params["embed"][tokens].astype(dtype)
+
+    aux_total = jnp.float32(0.0)
+    for lp in params.get("prefix_layers", []):
+        x, aux = _block_train(cfg, lp, x, positions, dense=True)
+        aux_total += aux
+
+    block = functools.partial(_block_train, cfg, dense=False)
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    def body(carry, lp):
+        x, aux_acc = carry
+        x, aux = block(lp, x, positions)
+        return (x, aux_acc + aux), None
+
+    if cfg.scan_layers:
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+    else:
+        n = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            (x, aux_total), _ = body((x, aux_total), lp)
+
+    x = rmsnorm(x, params["final_ln"], cfg.rms_eps)
+    unembed = params.get("unembed", params["embed"])
+    logits = (x @ unembed.astype(dtype).T).astype(jnp.float32)
+    return logits, aux_total
+
+
+def forward_with_cache(
+    params, tokens: Array, cfg: TransformerConfig, max_len: int
+) -> tuple[Array, KVCache]:
+    """Batched prefill: full causal forward that also emits the KV cache.
+
+    tokens (B,S) -> (logits (B,S,V), cache padded to max_len).  This is the
+    production prefill (one pass, MXU-dense); `prefill()` below is the
+    sequential reference.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    x = params["embed"][tokens].astype(dtype)
+    n_prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+
+    def attn_kv(lp, h):
+        """Per-layer K/V (GQA) or latent (MLA) for the cache."""
+        if cfg.attention == "gqa":
+            hkv, dh = cfg.n_kv_heads, cfg.d_head
+            ct = lambda w: w.astype(h.dtype)
+            k = h @ ct(lp["attn"]["wk"]); v = h @ ct(lp["attn"]["wv"])
+            if cfg.qkv_bias:
+                k = k + ct(lp["attn"]["bk"]); v = v + ct(lp["attn"]["bv"])
+            k = k.reshape(b, s, hkv, dh)
+            cos, sin = rope_cos_sin(positions, dh, cfg.rope_theta)
+            return apply_rope(k, cos, sin), v.reshape(b, s, hkv, dh)
+        m = cfg.mla
+        p = lp["attn"]
+        kv_a = h @ p["w_kv_a"].astype(h.dtype)
+        from repro.models.transformer.mla import _rms
+        c_kv = _rms(kv_a[..., : m.kv_lora_rank], p["kv_ln"], cfg.rms_eps)
+        k_rope = kv_a[..., m.kv_lora_rank:]
+        cos, sin = rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+        return c_kv, apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    def pad_t(a):
+        return jnp.pad(a, [(0, 0), (0, max_len - s)] + [(0, 0)] * (a.ndim - 2))
+
+    ks, vs = [], []
+    for lp in params.get("prefix_layers", []):
+        h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        k, v = attn_kv(lp, h)
+        ks.append(pad_t(k)); vs.append(pad_t(v))
+        x, _ = _block_train(cfg, lp, x, positions, dense=True)
+
+    block = functools.partial(_block_train, cfg, dense=False)
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        k, v = attn_kv(lp, h)
+        x, _ = block(lp, x, positions)
+        return x, (pad_t(k), pad_t(v))
+
+    x, (k_stack, v_stack) = jax.lax.scan(body, x, params["layers"])
+    if n_prefix:
+        k_stack = jnp.concatenate([jnp.stack(ks), k_stack], axis=0)
+        v_stack = jnp.concatenate([jnp.stack(vs), v_stack], axis=0)
+
+    x = rmsnorm(x, params["final_ln"], cfg.rms_eps)
+    unembed = params.get("unembed", params["embed"])
+    logits = (x @ unembed.astype(dtype).T).astype(jnp.float32)
+    cache = KVCache(k=k_stack, v=v_stack,
+                    lengths=jnp.full((b,), s, jnp.int32))
+    return logits, cache
+
+
+def lm_loss(params, batch: dict, cfg: TransformerConfig) -> tuple[Array, dict]:
+    """batch: tokens (B,S) int32, labels (B,S) int32 (-100 = ignore)."""
+    logits, aux = forward(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    valid = labels >= 0
+    labels_c = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    ce = jnp.sum(jnp.where(valid, lse - gold, 0.0)) / jnp.maximum(
+        jnp.sum(valid), 1)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "n_tokens": jnp.sum(valid)}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None) -> KVCache:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    l = cfg.n_layers  # prefix layers included in the same stacked cache
+    if cfg.attention == "gqa":
+        shape_k = (l, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+        return KVCache(k=jnp.zeros(shape_k, dtype), v=jnp.zeros(shape_k, dtype),
+                       lengths=jnp.zeros((batch,), jnp.int32))
+    m = cfg.mla
+    return KVCache(
+        k=jnp.zeros((l, batch, max_len, m.kv_lora_rank), dtype),
+        v=jnp.zeros((l, batch, max_len, m.qk_rope_head_dim), dtype),
+        lengths=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _gqa_block_decode(cfg, p, x, k_cache, v_cache, lengths):
+    """x (B,1,D); k/v_cache (B,T,Hkv,dh). Returns (out, new_k, new_v)."""
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ct = lambda w: w.astype(x.dtype)
+    q = x @ ct(p["wq"]); k = x @ ct(p["wk"]); v = x @ ct(p["wv"])
+    if cfg.qkv_bias:
+        q = q + ct(p["bq"]); k = k + ct(p["bk"]); v = v + ct(p["bv"])
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    pos = lengths[:, None]
+    cos, sin = rope_cos_sin(pos, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    t = k_cache.shape[1]
+    onehot = jax.nn.one_hot(lengths, t, dtype=k_cache.dtype)  # (B,T)
+    k_cache = k_cache + onehot[:, :, None, None] * k[:, 0, None]
+    v_cache = v_cache + onehot[:, :, None, None] * v[:, 0, None]
+    out = gqa_attention(q, k_cache, v_cache, causal=False, kv_len=lengths + 1)
+    return out.reshape(b, s, hq * dh) @ ct(p["wo"]), k_cache, v_cache
+
+
+def decode_step(
+    params, cache: KVCache, tokens: Array, cfg: TransformerConfig
+) -> tuple[Array, KVCache]:
+    """One decode step: tokens (B,1) -> (logits (B,1,V) f32, updated cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    lengths = cache.lengths
+    n_prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+
+    def layer_step(x, lp, kc, vc, dense):
+        h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        if cfg.attention == "gqa":
+            a, kc, vc = _gqa_block_decode(cfg, lp["attn"], h, kc, vc, lengths)
+        else:
+            a, mc = mla_attention_decode(
+                lp["attn"], h, cfg, MLACache(c_kv=kc, k_rope=vc), lengths)
+            kc, vc = mc.c_kv, mc.k_rope
+        x = x + a
+        h = rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        if dense or cfg.moe is None:
+            f = _dense_ffn(cfg, lp["ffn"], h)
+        else:
+            f, _ = moe_ffn(lp["ffn"], h, cfg.moe, dtype=h.dtype)
+        return x + f, kc, vc
+
+    new_k_prefix, new_v_prefix = [], []
+    for i, lp in enumerate(params.get("prefix_layers", [])):
+        x, kc, vc = layer_step(x, lp, cache.k[i], cache.v[i], dense=True)
+        new_k_prefix.append(kc); new_v_prefix.append(vc)
+
+    def body(x, scanned):
+        lp, kc, vc = scanned
+        x, kc, vc = layer_step(x, lp, kc, vc, dense=False)
+        return x, (kc, vc)
+
+    x, (k_stack, v_stack) = jax.lax.scan(
+        body, x, (params["layers"], cache.k[n_prefix:], cache.v[n_prefix:]))
+
+    if n_prefix:
+        k_all = jnp.concatenate([jnp.stack(new_k_prefix), k_stack], axis=0)
+        v_all = jnp.concatenate([jnp.stack(new_v_prefix), v_stack], axis=0)
+    else:
+        k_all, v_all = k_stack, v_stack
+
+    x = rmsnorm(x, params["final_ln"], cfg.rms_eps)
+    unembed = params.get("unembed", params["embed"])
+    logits = (x @ unembed.astype(dtype).T).astype(jnp.float32)
+    return logits, KVCache(k=k_all, v=v_all, lengths=lengths + 1)
+
+
+def decode_step_quant(params, cache, tokens: Array, cfg: TransformerConfig):
+    """GQA decode against an int8-quantized KV cache (§Perf decode lane).
+
+    Same contract as decode_step but cache is a
+    :class:`repro.models.transformer.kv_quant.QuantKVCache` — halves the
+    decode HBM stream vs bf16 (the dominant roofline term of every decode
+    cell).  MLA archs keep the fp latent cache (already 57x compressed).
+    """
+    from repro.models.transformer.kv_quant import (
+        QuantKVCache, quant_attention_decode, quantize_kv)
+
+    assert cfg.attention == "gqa", "int8 cache: GQA archs (MLA is compact)"
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    lengths = cache.lengths
+    b = tokens.shape[0]
+    t = cache.k_q.shape[2]
+    onehot = jax.nn.one_hot(lengths, t, dtype=jnp.float32)  # (B, T)
+
+    def layer_step(x, lp, kq, ks, vq, vs):
+        h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        p = lp["attn"]
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        ct = lambda w: w.astype(h.dtype)
+        qv = h @ ct(p["wq"]); kv = h @ ct(p["wk"]); vv = h @ ct(p["wv"])
+        if cfg.qkv_bias:
+            qv = qv + ct(p["bq"]); kv = kv + ct(p["bk"]); vv = vv + ct(p["bv"])
+        qv = qv.reshape(b, 1, hq, dh)
+        kv = kv.reshape(b, 1, hkv, dh)
+        vv = vv.reshape(b, 1, hkv, dh)
+        cos, sin = rope_cos_sin(lengths[:, None], dh, cfg.rope_theta)
+        qv = apply_rope(qv, cos, sin)
+        kv = apply_rope(kv, cos, sin)
+        # quantize the new token's K/V and insert at position `lengths`
+        k_new_q, k_new_s = quantize_kv(kv[:, 0])   # (B,Hkv,dh), (B,Hkv)
+        v_new_q, v_new_s = quantize_kv(vv[:, 0])
+        kq = kq + (onehot[:, :, None, None]
+                   * k_new_q.astype(jnp.float32)[:, None]).astype(jnp.int8)
+        ks = ks + onehot[:, :, None] * k_new_s[:, None]
+        vq = vq + (onehot[:, :, None, None]
+                   * v_new_q.astype(jnp.float32)[:, None]).astype(jnp.int8)
+        vs = vs + onehot[:, :, None] * v_new_s[:, None]
+        a = quant_attention_decode(qv, kq, ks, vq, vs, lengths + 1)
+        x = x + (a.reshape(b, 1, hq * dh).astype(h.dtype) @ ct(p["wo"]))
+        h2 = rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        if cfg.moe is None:
+            f = _dense_ffn(cfg, lp["ffn"], h2)
+        else:
+            f, _ = moe_ffn(lp["ffn"], h2, cfg.moe, dtype=h2.dtype)
+        return x + f, kq, ks, vq, vs
+
+    def body(x, scanned):
+        lp, kq, ks, vq, vs = scanned
+        x, kq, ks, vq, vs = layer_step(x, lp, kq, ks, vq, vs)
+        return x, (kq, ks, vq, vs)
+
+    x, (kq, ks, vq, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache.k_q, cache.k_scale,
+                  cache.v_q, cache.v_scale))
+    x = rmsnorm(x, params["final_ln"], cfg.rms_eps)
+    unembed = params.get("unembed", params["embed"])
+    logits = (x @ unembed.astype(dtype).T).astype(jnp.float32)
+    return logits, QuantKVCache(k_q=kq, k_scale=ks, v_q=vq, v_scale=vs,
+                                lengths=lengths + 1)
+
+
+def prefill(params, tokens: Array, cfg: TransformerConfig,
+            max_len: int) -> tuple[Array, KVCache]:
+    """Sequential-decode prefill (clarity-first reference; serving cells lower
+    decode_step, and benchmark prefill uses forward() for scoring)."""
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len)
+    logits = None
+    for i in range(s):
+        logits, cache = decode_step(params, cache, tokens[:, i:i + 1], cfg)
+    return logits, cache

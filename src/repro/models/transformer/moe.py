@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN: GShard-style grouped dispatch + shared experts.
+
+Token groups bound the dispatch tensor: tokens are reshaped to
+(G, group_size, D) with G sharded over the batch axes, and capacity is
+per-group ``C = ceil(top_k * group_size / E * capacity_factor)``.  The
+dispatch/combine one-hots are (G, group, E, C) — O(group·E·C) transient per
+group instead of O(N·E·C) global.  Under GSPMD the
+``einsum('gnec,gnd->gecd')`` dispatch lowers to an all-to-all over the
+`model` (expert) axis — exactly the expert-parallel schedule.
+
+Overflowed tokens (beyond capacity) are DROPPED (their combine weight is 0,
+residual carries them) — standard GShard/Switch semantics; the aux
+load-balancing loss keeps drop rates low.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.config import MoEConfig
+
+Array = jax.Array
+
+
+def _swiglu(x, w_gate, w_in, w_out):
+    ct = lambda w: w.astype(x.dtype)
+    h = jax.nn.silu(x @ ct(w_gate)) * (x @ ct(w_in))
+    return h @ ct(w_out)
+
+
+def moe_ffn(
+    p: dict,
+    x: Array,           # (B, S, D)
+    moe: MoEConfig,
+    *,
+    group_size: int = 1024,
+    dtype=jnp.bfloat16,
+    expert_pspec: tuple | None = None,  # (g, E, C, D) sharding for the
+    # dispatched tensors; silences GSPMD's "involuntary full
+    # rematerialization" on the expert-output einsum (§Perf MoE note)
+) -> tuple[Array, Array]:
+    """Returns (out (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    n = b * s
+    e, k = moe.n_experts, moe.top_k
+    gsz = min(group_size, n)
+    g = n // gsz
+    cap = int(math.ceil(k * gsz / e * moe.capacity_factor))
+    cap = max(cap, 1)
+
+    xt = x.reshape(g, gsz, d)
+
+    # --- routing -----------------------------------------------------------
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (g,n,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                     # (g,n,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)     # renormalize
+
+    # Aux load-balance loss (Switch): E * sum_e f_e * P_e.
+    me = jnp.mean(probs, axis=1)                               # (g,E)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=2), axis=1)
+    aux = moe.aux_loss_weight * e * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    # --- capacity positions (sequential over the k choices) ----------------
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.int32)         # (g,n,k,E)
+    # Priority: choice slot 0 first, then within slot by token order.
+    oh = jnp.moveaxis(onehot, 2, 1).reshape(g, k * gsz, e)     # (g, k*n, E)
+    pos = jnp.cumsum(oh, axis=1) - 1                           # (g, k*n, E)
+    pos = jnp.sum(pos * oh, axis=-1)                           # (g, k*n)
+    pos = jnp.moveaxis(pos.reshape(g, k, gsz), 1, 2)           # (g, n, k)
+    keep = (pos < cap).astype(jnp.float32)
+
+    # --- dispatch / combine one-hots ---------------------------------------
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)       # (g,n,k,C)
+    disp = jnp.einsum("gnke,gnkc,gnk->gnec",
+                      onehot.astype(jnp.float32), pos_oh, keep)
+    comb = jnp.einsum("gnec,gnk,gnke->gnec", disp, top_p * keep,
+                      onehot.astype(jnp.float32))
+
+    # --- expert compute -----------------------------------------------------
+    ct = lambda w: w.astype(dtype)
+
+    def wsc_e(a):
+        if expert_pspec is None:
+            return a
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(a, P(*expert_pspec))
+
+    xe = wsc_e(jnp.einsum("gnec,gnd->gecd", disp.astype(dtype),
+                          xt.astype(dtype)))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, ct(p["w_experts_gate"]))) \
+        * jnp.einsum("gecd,edf->gecf", xe, ct(p["w_experts_in"]))
+    ye = wsc_e(jnp.einsum("gecf,efd->gecd", h, ct(p["w_experts_out"])))
+    out = jnp.einsum("gnec,gecd->gnd", comb.astype(dtype), ye)
+
+    # --- shared (always-on) experts ----------------------------------------
+    if moe.n_shared > 0:
+        out = out + _swiglu(xt, p["w_shared_gate"], p["w_shared_in"],
+                            p["w_shared_out"])
+
+    return out.reshape(b, s, d), aux
+
+
+def moe_init(key, d_model: int, moe: MoEConfig, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    e, f = moe.n_experts, moe.d_expert_ff
+
+    def init(kk, shape, scale):
+        return (jax.random.normal(kk, shape, jnp.float32) * scale).astype(dtype)
+
+    p = {
+        "router": init(ks[0], (d_model, e), d_model ** -0.5),
+        "w_experts_gate": init(ks[1], (e, d_model, f), d_model ** -0.5),
+        "w_experts_in": init(ks[2], (e, d_model, f), d_model ** -0.5),
+        "w_experts_out": init(ks[3], (e, f, d_model), f ** -0.5),
+    }
+    if moe.n_shared > 0:
+        fs = moe.n_shared * f
+        p.update({
+            "w_shared_gate": init(ks[4], (d_model, fs), d_model ** -0.5),
+            "w_shared_in": init(ks[5], (d_model, fs), d_model ** -0.5),
+            "w_shared_out": init(ks[6], (fs, d_model), fs ** -0.5),
+        })
+    return p

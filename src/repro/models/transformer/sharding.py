@@ -1,0 +1,88 @@
+"""Sharding rules for transformer params/activations over (pod, data, model).
+
+Strategy (Megatron TP x ZeRO-3/FSDP, pod axis only carries batch):
+  - 2D weights: d_model dim -> data (FSDP), heads/ff dim -> model (TP).
+  - embedding/unembedding: vocab -> model, d_model -> data.
+  - MoE expert stacks: experts -> model (expert parallel), d_model -> data.
+  - activations: batch -> (pod, data); seq for long-context decode -> data.
+  - optimizer state: same spec as its param (ZeRO-3).
+
+XLA GSPMD tolerates non-divisible dims (it pads) — e.g. qwen's 40 heads on
+a 16-way model axis; the padding waste shows up honestly in the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio and is attacked in §Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+
+
+def batch_spec(mesh) -> tuple:
+    """Axes the global batch shards over."""
+    if POD_AXIS in mesh.axis_names:
+        return (POD_AXIS, DATA_AXIS)
+    return (DATA_AXIS,)
+
+
+def param_spec(path: str, shape: tuple[int, ...], *,
+               expert_tp: bool = False) -> P:
+    """PartitionSpec for a parameter identified by its pytree path.
+
+    Stacked-layer params carry a leading n_layers dim (unsharded).
+    ``expert_tp=True``: shard expert FFN width instead of the expert axis —
+    the right call when n_experts < model-axis size (e.g. grok's 8 experts
+    on a 16-way axis would pad 2x; TP over d_ff pads nothing).
+    """
+    stacked = path.startswith("layers.")
+    def wrap(*spec):
+        return P(*(((None,) + spec) if stacked else spec))
+
+    leaf = path.split(".")[-1]
+    nd = len(shape) - (1 if stacked else 0)
+
+    if leaf in ("embed", "unembed"):          # (vocab, d_model)
+        return wrap(MODEL_AXIS, DATA_AXIS)
+    if leaf in ("w_experts_in", "w_experts_gate"):   # (E, d_model, d_ff)
+        if expert_tp:
+            return wrap(None, DATA_AXIS, MODEL_AXIS)
+        return wrap(MODEL_AXIS, DATA_AXIS, None)
+    if leaf == "w_experts_out":               # (E, d_ff, d_model)
+        if expert_tp:
+            return wrap(None, MODEL_AXIS, DATA_AXIS)
+        return wrap(MODEL_AXIS, None, DATA_AXIS)
+    if leaf == "router":                      # (d_model, E)
+        return wrap(DATA_AXIS, None)
+    if leaf in ("wq", "wk", "wv", "w_in", "w_gate",   # (d_model, out)
+                "wq_b", "w_uk", "w_uv", "w_kv_a", "wq_a"):
+        return wrap(DATA_AXIS, MODEL_AXIS)
+    if leaf in ("wo", "w_out"):               # (in, d_model)
+        return wrap(MODEL_AXIS, DATA_AXIS)
+    if nd == 1:                               # norms scales, biases
+        return wrap(None)
+    if nd == 2:                               # fallback 2D
+        return wrap(DATA_AXIS, MODEL_AXIS)
+    return wrap(*([None] * nd))
+
+
+def params_pspecs(params, *, expert_tp: bool = False) -> dict:
+    """Map an (init or eval_shape) param pytree to PartitionSpecs."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = {}
+    for path, leaf in flat:
+        key = ".".join(
+            p.key if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out[key] = param_spec(key, leaf.shape, expert_tp=expert_tp)
+    return out
+
+
+def pspec_tree(params, *, expert_tp: bool = False):
+    """Like params_pspecs but returns a pytree congruent with params."""
+    def one(path, leaf):
+        key = ".".join(p.key if hasattr(p, "key") else str(p.idx) for p in path)
+        return param_spec(key, leaf.shape, expert_tp=expert_tp)
+
+    return jax.tree_util.tree_map_with_path(one, params)

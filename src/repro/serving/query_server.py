@@ -1,0 +1,103 @@
+"""LC-RWMD query server: batched similarity serving against a resident corpus.
+
+Production loop per the paper's deployment (Sec. VI): a RESIDENT document
+set is loaded once (sharded over the batch axes of the mesh); TRANSIENT
+query documents stream in, are micro-batched, vectorized against the
+resident vocabulary, and answered with top-k nearest documents.  Optional
+refinement stages tighten the LC-RWMD lower bound per the pruning cascade:
+
+    LC-RWMD (all residents)  ->  top-k  ->  [symmetric RWMD refine]
+                                         ->  [Sinkhorn-WMD re-rank]
+
+The server is synchronous-batched (collect up to ``max_batch`` or
+``max_wait_s``); stale-but-full batches keep the MXU busy — the paper's
+many-to-many mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topk_smallest
+from repro.core.pipeline import pruned_wmd_topk
+from repro.data.docs import DocSet, make_docset
+from repro.distributed.lcrwmd_dist import build_serve_step
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    k: int = 16
+    max_batch: int = 64
+    max_wait_s: float = 0.01
+    h_max: int = 32
+    refine_symmetric: bool = True
+    rerank_wmd: bool = False        # exact-style re-rank of the top-k
+    wmd_kw: dict = dataclasses.field(
+        default_factory=lambda: dict(eps=0.02, eps_scaling=3, max_iters=200))
+
+
+class QueryServer:
+    """Single-process reference implementation (the mesh does the scaling)."""
+
+    def __init__(self, resident: DocSet, emb, mesh, cfg: ServerConfig):
+        self.resident = resident
+        self.emb = jnp.asarray(emb)
+        self.cfg = cfg
+        self._serve = build_serve_step(
+            mesh, k=cfg.k, refine=cfg.refine_symmetric, bf16_matmul=False)
+        self._pending: list[tuple[np.ndarray, np.ndarray]] = []
+        self.stats = {"queries": 0, "batches": 0, "wmd_reranks": 0}
+
+    # -- request path ------------------------------------------------------
+    def submit(self, ids: np.ndarray, weights: np.ndarray):
+        """Queue one query histogram (padded to h_max by the caller/vectorizer)."""
+        self._pending.append((ids, weights))
+
+    def flush(self):
+        """Serve everything pending; returns list of (doc_ids, distances)."""
+        if not self._pending:
+            return []
+        qs, self._pending = self._pending, []
+        h = self.cfg.h_max
+        ids = np.zeros((len(qs), h), np.int32)
+        w = np.zeros((len(qs), h), np.float32)
+        for i, (qi, qw) in enumerate(qs):
+            n = min(len(qi), h)
+            ids[i, :n] = qi[:n]
+            w[i, :n] = qw[:n]
+        queries = make_docset(np.where(w > 0, ids, -1), w)
+        res = self._serve(self.resident, queries, self.emb)
+        self.stats["queries"] += len(qs)
+        self.stats["batches"] += 1
+
+        out = []
+        tk_i = np.asarray(res.topk.indices)
+        tk_d = np.asarray(res.topk.dists)
+        if self.cfg.rerank_wmd:
+            rr = pruned_wmd_topk(
+                self.resident, queries, self.emb, k=self.cfg.k,
+                refine_budget=2 * self.cfg.k, sinkhorn_kw=self.cfg.wmd_kw)
+            tk_i = np.asarray(rr.topk.indices)
+            tk_d = np.asarray(rr.topk.dists)
+            self.stats["wmd_reranks"] += len(qs)
+        for j in range(len(qs)):
+            out.append((tk_i[j], tk_d[j]))
+        return out
+
+    def serve_stream(self, stream: Sequence[tuple[np.ndarray, np.ndarray]]):
+        """Batched streaming: yields answers in arrival order."""
+        t0 = time.perf_counter()
+        for q in stream:
+            self.submit(*q)
+            full = len(self._pending) >= self.cfg.max_batch
+            stale = (time.perf_counter() - t0) > self.cfg.max_wait_s
+            if full or stale:
+                yield from self.flush()
+                t0 = time.perf_counter()
+        yield from self.flush()

@@ -1,0 +1,23 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device override is
+# dryrun.py-only, per the multi-pod dry-run contract).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+from repro.data.synth import Corpus, CorpusSpec, make_corpus
+
+
+@pytest.fixture(scope="session")
+def small_corpus() -> Corpus:
+    return make_corpus(CorpusSpec(
+        n_docs=96, vocab_size=512, emb_dim=48, h_max=16, mean_h=8.0,
+        n_classes=4, seed=7,
+    ))
+
+
+@pytest.fixture(scope="session")
+def rng() -> np.random.Generator:
+    return np.random.default_rng(0)

@@ -1,0 +1,67 @@
+"""Subprocess helper: validates distributed LC-RWMD on an 8-device host mesh.
+
+Run as:  XLA_FLAGS unset!  (this file sets it before importing jax)
+         python tests/dist_check.py
+Exits nonzero on mismatch.  Invoked by tests/test_distributed.py.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+
+    from repro.core import lc_rwmd_one_sided, topk_smallest
+    from repro.data.synth import CorpusSpec, make_corpus
+    from repro.distributed.lcrwmd_dist import build_allpairs_d1, build_serve_step
+    from repro.launch.mesh import make_host_mesh
+
+    corpus = make_corpus(CorpusSpec(
+        n_docs=64, vocab_size=512, emb_dim=32, h_max=8, mean_h=5.0, seed=3))
+    ds, emb = corpus.docs, jnp.asarray(corpus.emb)
+    queries = ds[:6]
+    k = 5
+
+    # Reference: single-device pure-jnp path.
+    d_ref = np.asarray(lc_rwmd_one_sided(ds, queries, emb))  # (n, B)
+    tk_ref = topk_smallest(jnp.asarray(d_ref).T, k)
+
+    for (da, mo, po) in [(4, 2, None), (2, 2, 2), (1, 8, None), (8, 1, None)]:
+      for full_mesh in (False, True):
+        mesh = make_host_mesh(data=da, model=mo, pod=po)
+        serve = build_serve_step(mesh, k=k, bf16_matmul=False,
+                                 phase1_full_mesh=full_mesh)
+        res = serve(ds, queries, emb)
+        np.testing.assert_allclose(
+            np.asarray(res.topk.dists), np.asarray(tk_ref.dists),
+            rtol=1e-4, atol=1e-2,
+            err_msg=f"mesh {(po, da, mo)} fm={full_mesh} top-k mismatch",
+        )
+        # Indices can tie-break differently; check distances at the indices.
+        got_idx = np.asarray(res.topk.indices)
+        for j in range(queries.n_docs):
+            np.testing.assert_allclose(
+                d_ref[got_idx[j], j], np.asarray(tk_ref.dists)[j],
+                rtol=1e-4, atol=1e-2,
+                err_msg=f"mesh {(po, da, mo)} index set mismatch q={j}",
+            )
+
+        d1 = build_allpairs_d1(mesh, bf16_matmul=False,
+                               phase1_full_mesh=full_mesh)(ds, queries, emb)
+        np.testing.assert_allclose(np.asarray(d1), d_ref, rtol=1e-4, atol=1e-2)
+
+    print("dist_check OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""RWMD / LC-RWMD / WCD / WMD semantic correctness + lower-bound chain."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    lc_rwmd_one_sided,
+    lc_rwmd_symmetric,
+    restrict_vocab,
+    rwmd_many_vs_many,
+    rwmd_pair,
+    sq_dists,
+    wcd_many_vs_many,
+)
+from repro.core.wmd import emd_exact_lp, sinkhorn_log
+from repro.core.distances import dists
+from repro.data.docs import DocSet, make_docset
+
+
+def _brute_rwmd(ids1, w1, ids2, w2, emb):
+    """O(h^2) per-pair numpy RWMD — independent oracle."""
+    emb = np.asarray(emb, np.float64)
+    m1, m2 = w1 > 0, w2 > 0
+    t1, t2 = emb[ids1], emb[ids2]
+    c = np.sqrt(
+        np.maximum(
+            (t1**2).sum(1)[:, None] + (t2**2).sum(1)[None, :] - 2 * t1 @ t2.T, 0
+        )
+    )
+    d12 = float((w1[m1] * c[np.ix_(m1, m2)].min(axis=1)).sum())
+    d21 = float((w2[m2] * c[np.ix_(m1, m2)].min(axis=0)).sum())
+    return max(d12, d21)
+
+
+def test_rwmd_pair_matches_bruteforce(small_corpus, rng):
+    ds, emb = small_corpus.docs, small_corpus.emb
+    for _ in range(10):
+        i, j = rng.integers(0, ds.n_docs, 2)
+        got = float(rwmd_pair(ds.ids[i], ds.weights[i], ds.ids[j], ds.weights[j],
+                              jnp.asarray(emb)))
+        want = _brute_rwmd(np.asarray(ds.ids[i]), np.asarray(ds.weights[i]),
+                           np.asarray(ds.ids[j]), np.asarray(ds.weights[j]), emb)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-4)
+
+
+def test_lc_rwmd_equals_quadratic(small_corpus):
+    """The paper's central claim of equivalence: LC-RWMD == quadratic RWMD."""
+    ds, emb = small_corpus.docs, jnp.asarray(small_corpus.emb)
+    queries = ds[:12]
+    d_lc = lc_rwmd_symmetric(ds, queries, emb)
+    d_q = rwmd_many_vs_many(ds, queries, emb)
+    np.testing.assert_allclose(np.asarray(d_lc), np.asarray(d_q), rtol=1e-4, atol=1e-5)
+
+
+def test_lc_rwmd_one_sided_semantics(small_corpus):
+    """D1[i,j] == sum_p w[i,p] * min_q dist(word_p, query_word_q)."""
+    ds, emb = small_corpus.docs, jnp.asarray(small_corpus.emb)
+    queries = ds[5:9]
+    d1 = np.asarray(lc_rwmd_one_sided(ds, queries, emb))
+    ids, w = np.asarray(ds.ids), np.asarray(ds.weights)
+    qids, qw = np.asarray(queries.ids), np.asarray(queries.weights)
+    embn = small_corpus.emb.astype(np.float64)
+    for i in [0, 3, 17]:
+        for j in range(4):
+            m1, m2 = w[i] > 0, qw[j] > 0
+            t1, t2 = embn[ids[i][m1]], embn[qids[j][m2]]
+            c = np.sqrt(np.maximum(
+                (t1**2).sum(1)[:, None] + (t2**2).sum(1)[None, :] - 2 * t1 @ t2.T, 0))
+            want = (w[i][m1] * c.min(axis=1)).sum()
+            np.testing.assert_allclose(d1[i, j], want, rtol=2e-3, atol=1e-4)
+
+
+def test_vocab_chunking_invariance(small_corpus):
+    ds, emb = small_corpus.docs, jnp.asarray(small_corpus.emb)
+    queries = ds[:4]
+    a = lc_rwmd_one_sided(ds, queries, emb)
+    b = lc_rwmd_one_sided(ds, queries, emb, vocab_chunk=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_restrict_vocab_invariance(small_corpus):
+    """The paper's v_e optimization must not change any distance."""
+    ds, emb = small_corpus.docs, jnp.asarray(small_corpus.emb)
+    queries = ds[:6]
+    full = lc_rwmd_one_sided(ds, queries, emb)
+    sub_ds, sub_emb, old_to_new = restrict_vocab(ds, emb)
+    sub_q = DocSet(
+        ids=jnp.maximum(jnp.asarray(np.asarray(old_to_new))[queries.ids], 0),
+        weights=queries.weights,
+    )
+    # Queries may contain words outside the resident vocab; only valid when
+    # they don't — construct queries from resident docs, so they don't.
+    got = lc_rwmd_one_sided(sub_ds, sub_q, sub_emb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), rtol=1e-5)
+
+
+def test_wcd_lower_bounds_wmd(small_corpus, rng):
+    """WCD ≤ WMD (Kusner et al. Jensen bound; NOTE: WCD vs RWMD is unordered)."""
+    ds, emb = small_corpus.docs, small_corpus.emb
+    wcd_all = np.asarray(wcd_many_vs_many(ds, ds[:8], jnp.asarray(emb)))
+    for _ in range(6):
+        i = int(rng.integers(0, ds.n_docs))
+        j = int(rng.integers(0, 8))
+        w1 = np.asarray(ds.weights[i]); w2 = np.asarray(ds.weights[j])
+        t1 = emb[np.asarray(ds.ids[i])]; t2 = emb[np.asarray(ds.ids[j])]
+        c = np.sqrt(np.maximum(
+            (t1**2).sum(1)[:, None] + (t2**2).sum(1)[None, :] - 2 * t1 @ t2.T, 0))
+        c = np.where((w1 > 0)[:, None] & (w2 > 0)[None, :], c, 0.0)
+        lp = emd_exact_lp(w1, w2, c)
+        assert wcd_all[i, j] <= lp + 1e-3, (wcd_all[i, j], lp)
+
+
+def test_sinkhorn_matches_lp_oracle(small_corpus, rng):
+    ds, emb = small_corpus.docs, small_corpus.emb
+    for _ in range(5):
+        i, j = rng.integers(0, ds.n_docs, 2)
+        w1 = np.asarray(ds.weights[i]); w2 = np.asarray(ds.weights[j])
+        t1 = emb[np.asarray(ds.ids[i])]; t2 = emb[np.asarray(ds.ids[j])]
+        c = np.sqrt(np.maximum(
+            (t1**2).sum(1)[:, None] + (t2**2).sum(1)[None, :] - 2 * t1 @ t2.T, 0))
+        c = np.where((w1 > 0)[:, None] & (w2 > 0)[None, :], c, 0.0)
+        lp = emd_exact_lp(w1, w2, c)
+        sk = float(sinkhorn_log(
+            jnp.asarray(w1), jnp.asarray(w2), jnp.asarray(c, dtype=jnp.float32),
+            eps=0.005, eps_scaling=5, max_iters=2000, tol=1e-6,
+        ).cost)
+        # Sinkhorn cost converges to LP from above-ish; bound the gap.
+        assert abs(sk - lp) <= 0.05 * max(lp, 1e-3) + 1e-3, (sk, lp)
+
+
+def test_rwmd_lower_bounds_wmd(small_corpus, rng):
+    ds, emb = small_corpus.docs, small_corpus.emb
+    for _ in range(6):
+        i, j = rng.integers(0, ds.n_docs, 2)
+        w1 = np.asarray(ds.weights[i]); w2 = np.asarray(ds.weights[j])
+        t1 = emb[np.asarray(ds.ids[i])]; t2 = emb[np.asarray(ds.ids[j])]
+        c = np.sqrt(np.maximum(
+            (t1**2).sum(1)[:, None] + (t2**2).sum(1)[None, :] - 2 * t1 @ t2.T, 0))
+        c = np.where((w1 > 0)[:, None] & (w2 > 0)[None, :], c, 0.0)
+        lp = emd_exact_lp(w1, w2, c)
+        rw = _brute_rwmd(np.asarray(ds.ids[i]), w1, np.asarray(ds.ids[j]), w2, emb)
+        assert rw <= lp + 1e-5, (rw, lp)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.integers(1, 9), q=st.integers(1, 9), m=st.integers(1, 17),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sq_dists_property(p, q, m, seed):
+    r = np.random.default_rng(seed)
+    a = r.normal(size=(p, m)).astype(np.float32)
+    b = r.normal(size=(q, m)).astype(np.float32)
+    got = np.asarray(sq_dists(jnp.asarray(a), jnp.asarray(b)))
+    want = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    assert (got >= 0).all()
+
+
+def test_identical_docs_zero_distance(small_corpus):
+    ds, emb = small_corpus.docs, jnp.asarray(small_corpus.emb)
+    d = lc_rwmd_symmetric(ds[:5], ds[:5], emb)
+    np.testing.assert_allclose(np.asarray(jnp.diag(d)), 0.0, atol=5e-2)  # fp32 gram-expansion floor: sqrt(eps*|e|^2)

@@ -1,0 +1,57 @@
+"""DocSet container: normalization, masking, CSR round-trip (+ property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.docs import DocSet, from_csr, make_docset, to_csr
+
+
+def test_weights_l1_normalized(small_corpus):
+    w = np.asarray(small_corpus.docs.weights)
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_mask_matches_padding(small_corpus):
+    ds = small_corpus.docs
+    mask = np.asarray(ds.mask)
+    w = np.asarray(ds.weights)
+    assert ((w > 0) == mask).all()
+    assert (np.asarray(ds.lengths) == mask.sum(axis=1)).all()
+
+
+def test_csr_roundtrip(small_corpus):
+    ds = small_corpus.docs
+    v = small_corpus.spec.vocab_size
+    indptr, indices, data = to_csr(ds, v)
+    back = from_csr(indptr, indices, data, ds.h_max)
+    # Compare as dense histograms (ELL slot order may differ).
+    def dense(d):
+        out = np.zeros((d.n_docs, v), np.float64)
+        ids, w = np.asarray(d.ids), np.asarray(d.weights)
+        for i in range(d.n_docs):
+            np.add.at(out[i], ids[i][w[i] > 0], w[i][w[i] > 0])
+        return out
+    np.testing.assert_allclose(dense(back), dense(ds), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 8),
+    h=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_make_docset_properties(n, h, seed):
+    r = np.random.default_rng(seed)
+    ids = r.integers(-1, 50, size=(n, h)).astype(np.int32)
+    w = r.uniform(0, 3, size=(n, h)).astype(np.float32)
+    # Guarantee at least one valid word per doc.
+    ids[:, 0] = np.abs(ids[:, 0])
+    w[:, 0] = np.maximum(w[:, 0], 0.1)
+    ds = make_docset(ids, w)
+    wj = np.asarray(ds.weights)
+    assert (wj >= 0).all()
+    np.testing.assert_allclose(wj.sum(axis=1), 1.0, rtol=1e-5)
+    # Padding ids were clamped to valid range.
+    assert (np.asarray(ds.ids) >= 0).all()

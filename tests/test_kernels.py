@@ -1,0 +1,172 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per the repo contract: each kernel is swept over shapes/dtypes and asserted
+allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mk_queries(rng, b, h, v):
+    ids = rng.integers(0, v, size=(b, h)).astype(np.int32)
+    w = rng.uniform(0.1, 1.0, size=(b, h)).astype(np.float32)
+    # Random padding tail per query (>=1 valid word).
+    for j in range(b):
+        cut = rng.integers(1, h + 1)
+        w[j, cut:] = 0.0
+    w /= np.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+    return jnp.asarray(ids), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("v,m,b,h", [
+    (512, 48, 4, 16),
+    (1024, 300, 2, 32),   # paper's m=300 (pads to 384 internally)
+    (256, 64, 8, 8),
+    (640, 128, 1, 130),   # h crosses the 128 block boundary
+])
+def test_phase1_kernel_matches_ref(v, m, b, h):
+    rng = np.random.default_rng(hash((v, m, b, h)) % 2**31)
+    emb = jnp.asarray(rng.normal(size=(v, m)).astype(np.float32))
+    q_ids, q_w = _mk_queries(rng, b, h, v)
+    want = ref.lc_rwmd_phase1_ref(emb, q_ids, q_w)
+    got = ops.lc_rwmd_phase1(emb, q_ids, q_w, block_v=128, interpret=True)
+    # atol floor: sqrt(eps)*|e| gram-expansion noise on near-zero distances.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_phase1_kernel_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    emb = jnp.asarray(rng.normal(size=(256, 32)).astype(np.float32)).astype(dtype)
+    q_ids, q_w = _mk_queries(rng, 3, 8, 256)
+    want = ref.lc_rwmd_phase1_ref(emb.astype(jnp.float32), q_ids, q_w)
+    got = ops.lc_rwmd_phase1(emb, q_ids, q_w, block_v=128, interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=1e-2)
+
+
+def test_phase1_kernel_bf16_matmul_close():
+    rng = np.random.default_rng(11)
+    emb = jnp.asarray(rng.normal(size=(384, 96)).astype(np.float32))
+    q_ids, q_w = _mk_queries(rng, 4, 16, 384)
+    want = ref.lc_rwmd_phase1_ref(emb, q_ids, q_w)
+    got = ops.lc_rwmd_phase1(
+        emb, q_ids, q_w, block_v=128, bf16_matmul=True, interpret=True)
+    # bf16 gram expansion noise floor at zero distance: sqrt(bf16_eps*|e|^2)
+    # ~ 0.6 for |e|^2 ~ 96. Self-match distances are the worst case; all
+    # non-trivial distances agree to 5%. (Documented in DESIGN.md §2.)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-2, atol=0.7)
+
+
+@pytest.mark.parametrize("n,h,v,b", [
+    (16, 8, 512, 4),
+    (64, 16, 256, 1),
+    (8, 32, 1024, 12),
+])
+def test_spmm_ell_kernel_matches_ref(n, h, v, b):
+    rng = np.random.default_rng(hash((n, h, v, b)) % 2**31)
+    ids = jnp.asarray(rng.integers(0, v, size=(n, h)).astype(np.int32))
+    w = rng.uniform(0, 1, size=(n, h)).astype(np.float32)
+    w[rng.random(size=w.shape) < 0.3] = 0.0  # random padding
+    w = jnp.asarray(w)
+    z = jnp.asarray(rng.normal(size=(v, b)).astype(np.float32))
+    want = ref.spmm_ell_ref(ids, w, z)
+    got = ops.spmm_ell(ids, w, z, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,h1,h2,m,b", [
+    (16, 8, 8, 48, 2),
+    (8, 16, 4, 300, 3),
+    (24, 4, 12, 64, 1),
+])
+def test_rwmd_pairwise_kernel_matches_ref(n, h1, h2, m, b):
+    rng = np.random.default_rng(hash((n, h1, h2, m, b)) % 2**31)
+    v = 256
+    emb = jnp.asarray(rng.normal(size=(v, m)).astype(np.float32))
+    r_ids, r_w = _mk_queries(rng, n, h1, v)
+    q_ids, q_w = _mk_queries(rng, b, h2, v)
+    t1 = emb[r_ids.reshape(-1)].reshape(n, h1, m)
+    t2 = emb[q_ids.reshape(-1)].reshape(b, h2, m)
+    want = np.stack(
+        [np.asarray(ref.rwmd_pairwise_ref(t1, r_w, t2[j], q_w[j])) for j in range(b)],
+        axis=1,
+    )
+    got = ops.rwmd_pairwise(emb, r_ids, r_w, q_ids, q_w, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-2)
+
+
+def test_kernel_path_equals_jnp_path(small_corpus):
+    """End-to-end: core.lc_rwmd with use_kernel=True == pure-jnp path."""
+    from repro.core import lc_rwmd_one_sided
+
+    ds = small_corpus.docs
+    emb = jnp.asarray(small_corpus.emb)
+    queries = ds[:4]
+    a = lc_rwmd_one_sided(ds, queries, emb)
+    b = lc_rwmd_one_sided(ds, queries, emb, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,dh,causal", [
+    (2, 256, 4, 2, 64, True),
+    (1, 512, 8, 8, 32, True),    # MHA
+    (2, 256, 4, 1, 64, True),    # MQA
+    (1, 256, 4, 2, 128, False),  # bidirectional
+])
+def test_flash_attention_matches_ref(b, s, hq, hkv, dh, causal):
+    rng = np.random.default_rng(hash((b, s, hq, hkv, dh)) % 2**31)
+    q = jnp.asarray(rng.normal(size=(b, s, hq, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=128,
+                              block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)).astype(np.float32))
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    got = ops.flash_attention(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                              v.astype(jnp.bfloat16), causal=True,
+                              block_q=128, block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want), rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("n,e,d", [(16, 64, 32), (50, 200, 8), (8, 8, 130)])
+def test_segment_spmm_matches_ref(n, e, d):
+    rng = np.random.default_rng(hash((n, e, d)) % 2**31)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = np.sort(rng.integers(0, n, e)).astype(np.int32)  # CSR order
+    feat = rng.normal(size=(n, d)).astype(np.float32)
+    rad = rng.uniform(0.1, 1, e).astype(np.float32)
+    rad[rng.random(e) < 0.2] = 0.0  # padding edges
+    want = ref.segment_spmm_ref(jnp.asarray(src), jnp.asarray(dst),
+                                jnp.asarray(feat), jnp.asarray(rad), n)
+    got = ops.segment_spmm(jnp.asarray(src), jnp.asarray(dst),
+                           jnp.asarray(feat), jnp.asarray(rad), n,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_segment_spmm_zero_degree_rows():
+    # nodes 3..7 receive no edges -> rows must be exactly zero
+    src = jnp.asarray(np.array([0, 1, 2], np.int32))
+    dst = jnp.asarray(np.array([0, 0, 2], np.int32))
+    feat = jnp.asarray(np.ones((8, 16), np.float32))
+    rad = jnp.asarray(np.ones(3, np.float32))
+    out = np.asarray(ops.segment_spmm(src, dst, feat, rad, 8, interpret=True))
+    assert out[0].sum() == 32.0 and out[2].sum() == 16.0
+    assert (out[[1, 3, 4, 5, 6, 7]] == 0).all()

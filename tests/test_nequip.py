@@ -1,0 +1,163 @@
+"""NequIP: E(3) equivariance (the make-or-break property), force consistency,
+sampler correctness, training smoke."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy.spatial.transform import Rotation
+
+from repro.models.gnn.nequip import (
+    NequIPConfig,
+    forward_energy,
+    forward_energy_forces,
+    init_params,
+    nequip_loss,
+)
+from repro.models.gnn.sampler import random_graph, sample_fanout_subgraph
+
+
+def _mk_batch(n=24, e=96, seed=0, n_graphs=2, d_feat=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 4.0, (n, 3)).astype(np.float32)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    ok = src != dst
+    src, dst = np.where(ok, src, (src + 1) % n), dst
+    batch = {
+        "positions": jnp.asarray(pos),
+        "edge_index": jnp.asarray(np.stack([src, dst])),
+        "edge_mask": jnp.asarray(np.ones(e, bool)),
+        "node_mask": jnp.asarray(np.ones(n, bool)),
+        "graph_ids": jnp.asarray((np.arange(n) % n_graphs).astype(np.int32)),
+        "n_graphs": n_graphs,
+        "species": jnp.asarray(rng.integers(0, 4, n).astype(np.int32)),
+        "energies": jnp.asarray(rng.normal(size=n_graphs).astype(np.float32)),
+        "forces": jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32)),
+    }
+    if d_feat:
+        batch["node_feat"] = jnp.asarray(
+            rng.normal(size=(n, d_feat)).astype(np.float32))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return NequIPConfig(n_layers=2, d_hidden=8, l_max=2, n_rbf=4, cutoff=5.0)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(jax.random.key(0), cfg)
+
+
+def test_energy_invariant_under_rotation_translation(cfg, params):
+    """E(R·x + t) == E(x): the entire SH/CG stack must be consistent."""
+    batch = _mk_batch()
+    e0 = np.asarray(forward_energy(params, batch, cfg))
+    for seed in range(3):
+        rot = Rotation.random(random_state=seed).as_matrix().astype(np.float32)
+        t = np.float32([1.3, -0.7, 2.1])
+        pos2 = np.asarray(batch["positions"]) @ rot.T + t
+        e1 = np.asarray(forward_energy(
+            params, dict(batch, positions=jnp.asarray(pos2)), cfg))
+        np.testing.assert_allclose(e1, e0, rtol=5e-5, atol=5e-5)
+
+
+def test_forces_equivariant_under_rotation(cfg, params):
+    """F(R·x) == R·F(x)."""
+    batch = _mk_batch()
+    _, f0 = forward_energy_forces(params, batch, cfg)
+    rot = Rotation.random(random_state=7).as_matrix().astype(np.float32)
+    pos2 = np.asarray(batch["positions"]) @ rot.T
+    _, f1 = forward_energy_forces(
+        params, dict(batch, positions=jnp.asarray(pos2)), cfg)
+    np.testing.assert_allclose(
+        np.asarray(f1), np.asarray(f0) @ rot.T, rtol=1e-4, atol=1e-4)
+
+
+def test_forces_are_exact_gradient(cfg, params):
+    """Finite-difference check of forces on a few coordinates."""
+    batch = _mk_batch(n=10, e=40)
+    e, f = forward_energy_forces(params, batch, cfg)
+    pos = np.asarray(batch["positions"])
+    eps = 1e-3
+    for (i, d) in [(0, 0), (3, 1), (7, 2)]:
+        p_plus = pos.copy(); p_plus[i, d] += eps
+        p_minus = pos.copy(); p_minus[i, d] -= eps
+        e_p = float(jnp.sum(forward_energy(
+            params, dict(batch, positions=jnp.asarray(p_plus)), cfg)))
+        e_m = float(jnp.sum(forward_energy(
+            params, dict(batch, positions=jnp.asarray(p_minus)), cfg)))
+        fd = -(e_p - e_m) / (2 * eps)
+        np.testing.assert_allclose(np.asarray(f)[i, d], fd, rtol=2e-2, atol=2e-3)
+
+
+def test_padding_invariance(cfg, params):
+    """Masked-out edges/nodes must not change the energies."""
+    batch = _mk_batch(n=24, e=96)
+    e0 = np.asarray(forward_energy(params, batch, cfg))
+    # add 8 garbage edges + 4 garbage nodes, masked out
+    ei = np.asarray(batch["edge_index"])
+    ei2 = np.concatenate([ei, np.random.default_rng(1).integers(
+        0, 24, (2, 8)).astype(np.int32)], axis=1)
+    em2 = np.concatenate([np.asarray(batch["edge_mask"]), np.zeros(8, bool)])
+    pos2 = np.concatenate([np.asarray(batch["positions"]),
+                           np.full((4, 3), 77.0, np.float32)])
+    nm2 = np.concatenate([np.asarray(batch["node_mask"]), np.zeros(4, bool)])
+    gi2 = np.concatenate([np.asarray(batch["graph_ids"]),
+                          np.zeros(4, np.int32)])
+    sp2 = np.concatenate([np.asarray(batch["species"]), np.zeros(4, np.int32)])
+    batch2 = dict(batch, edge_index=jnp.asarray(ei2), edge_mask=jnp.asarray(em2),
+                  positions=jnp.asarray(pos2), node_mask=jnp.asarray(nm2),
+                  graph_ids=jnp.asarray(gi2), species=jnp.asarray(sp2))
+    e1 = np.asarray(forward_energy(params, batch2, cfg))
+    np.testing.assert_allclose(e1, e0, rtol=1e-5, atol=1e-5)
+
+
+def test_continuous_feature_embedding():
+    cfg = NequIPConfig(n_layers=1, d_hidden=8, l_max=1, n_rbf=4, d_feat=12)
+    params = init_params(jax.random.key(0), cfg)
+    batch = _mk_batch(d_feat=12)
+    e = forward_energy(params, batch, cfg)
+    assert np.isfinite(np.asarray(e)).all()
+
+
+def test_training_reduces_loss(cfg):
+    params = init_params(jax.random.key(1), cfg)
+    batch = _mk_batch(n=16, e=64)
+
+    @jax.jit
+    def step(p):
+        (l, m), g = jax.value_and_grad(
+            lambda pp: nequip_loss(pp, batch, cfg), has_aux=True)(p)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(g)))
+        scale = jnp.minimum(1.0, 1.0 / (gnorm + 1e-9)) * 3e-3
+        p = jax.tree.map(lambda a, b: a - scale * b, p, g)
+        return p, l
+
+    losses = []
+    for _ in range(25):
+        params, l = step(params)
+        losses.append(float(l))
+    assert losses[-1] < losses[0], losses
+    assert np.isfinite(losses).all()
+
+
+def test_fanout_sampler_contract():
+    g = random_graph(500, avg_degree=8, seed=0)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(500, size=32, replace=False)
+    sub = sample_fanout_subgraph(
+        g, seeds, fanout=(15, 10), rng=rng, max_nodes=2048, max_edges=8192)
+    n_valid = sub["node_mask"].sum()
+    e_valid = sub["edge_mask"].sum()
+    assert n_valid >= 32 and e_valid > 0
+    # all valid edges reference valid local nodes
+    ei = sub["edge_index"][:, sub["edge_mask"]]
+    assert ei.max() < n_valid
+    # local->global map consistent with positions
+    l2g = sub["local_to_global"][:n_valid]
+    np.testing.assert_allclose(sub["positions"][:n_valid], g.positions[l2g])
+    # seed nodes are the first local ids
+    np.testing.assert_array_equal(l2g[:32], seeds)

@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import lc_rwmd_one_sided, lc_rwmd_symmetric
+from repro.data.docs import DocSet, make_docset
+
+
+def _mk(seed, n=6, h=8, v=64, m=12):
+    r = np.random.default_rng(seed)
+    ids = r.integers(0, v, (n, h)).astype(np.int32)
+    w = r.uniform(0.05, 1, (n, h)).astype(np.float32)
+    for i in range(n):  # ragged padding
+        w[i, r.integers(1, h + 1):] = 0
+    ds = make_docset(np.where(w > 0, ids, -1), w)
+    emb = r.normal(size=(v, m)).astype(np.float32)
+    return ds, emb
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_word_order_permutation_invariance(seed):
+    """Shuffling the ELL slot order of a histogram changes nothing."""
+    ds, emb = _mk(seed)
+    r = np.random.default_rng(seed + 1)
+    ids = np.asarray(ds.ids).copy()
+    w = np.asarray(ds.weights).copy()
+    perm_ids, perm_w = ids.copy(), w.copy()
+    for i in range(ids.shape[0]):
+        p = r.permutation(ids.shape[1])
+        perm_ids[i], perm_w[i] = ids[i, p], w[i, p]
+    ds2 = DocSet(ids=jnp.asarray(perm_ids), weights=jnp.asarray(perm_w))
+    d1 = np.asarray(lc_rwmd_symmetric(ds, ds[:2], jnp.asarray(emb)))
+    d2 = np.asarray(lc_rwmd_symmetric(ds2, ds2[:2], jnp.asarray(emb)))
+    np.testing.assert_allclose(d1, d2, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 10.0))
+def test_distance_scales_with_embedding(seed, scale):
+    """RWMD is a weighted sum of Euclidean distances -> homogeneous deg 1."""
+    ds, emb = _mk(seed)
+    d1 = np.asarray(lc_rwmd_one_sided(ds, ds[:2], jnp.asarray(emb)))
+    d2 = np.asarray(lc_rwmd_one_sided(ds, ds[:2], jnp.asarray(emb * scale)))
+    # atol: fp32 gram-expansion noise floor on near-zero (self) distances
+    # scales with the embedding magnitude.
+    np.testing.assert_allclose(d2, scale * d1, rtol=5e-3, atol=2e-2 * scale)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_translation_invariance(seed):
+    """Shifting ALL embeddings by a constant vector changes nothing."""
+    ds, emb = _mk(seed)
+    shift = np.random.default_rng(seed + 2).normal(size=emb.shape[1]) * 3
+    d1 = np.asarray(lc_rwmd_one_sided(ds, ds[:2], jnp.asarray(emb)))
+    d2 = np.asarray(lc_rwmd_one_sided(
+        ds, ds[:2], jnp.asarray(emb + shift[None, :].astype(np.float32))))
+    # shift raises |e|^2 -> larger cancellation noise on near-zero distances
+    np.testing.assert_allclose(d1, d2, rtol=1e-2, atol=5e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_split_weight_invariance(seed):
+    """Splitting one word's weight across two ELL slots is a no-op."""
+    ds, emb = _mk(seed, h=8)
+    ids = np.asarray(ds.ids).copy()
+    w = np.asarray(ds.weights).copy()
+    # find a doc with a free slot, split its heaviest word
+    for i in range(ids.shape[0]):
+        free = np.where(w[i] == 0)[0]
+        if len(free) == 0:
+            continue
+        j = int(np.argmax(w[i]))
+        f = free[0]
+        ids[i, f] = ids[i, j]
+        w[i, f] = w[i, j] / 2
+        w[i, j] = w[i, j] / 2
+    ds2 = DocSet(ids=jnp.asarray(ids), weights=jnp.asarray(w))
+    d1 = np.asarray(lc_rwmd_one_sided(ds, ds[:2], jnp.asarray(emb)))
+    d2 = np.asarray(lc_rwmd_one_sided(ds2, ds2[:2], jnp.asarray(emb)))
+    np.testing.assert_allclose(d1, d2, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_symmetric_bound_dominates_one_sided(seed):
+    """max(D1, D2^T) >= D1 pointwise (tighter lower bound, Sec. IV)."""
+    ds, emb = _mk(seed)
+    queries = ds[:3]
+    d1 = np.asarray(lc_rwmd_one_sided(ds, queries, jnp.asarray(emb)))
+    dsym = np.asarray(lc_rwmd_symmetric(ds, queries, jnp.asarray(emb)))
+    assert (dsym >= d1 - 1e-5).all()

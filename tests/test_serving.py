@@ -1,0 +1,73 @@
+"""Query server integration: batching, recall, WMD re-rank, launcher CLIs."""
+
+import pathlib
+import subprocess
+import sys
+import os
+
+import numpy as np
+import pytest
+
+from repro.data.synth import CorpusSpec, make_corpus
+from repro.launch.mesh import make_host_mesh
+from repro.serving.query_server import QueryServer, ServerConfig
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(CorpusSpec(
+        n_docs=256, vocab_size=1024, emb_dim=32, h_max=12, mean_h=8.0,
+        n_classes=4, seed=11))
+
+
+def _stream_from(corpus, n, rng):
+    ids = np.asarray(corpus.docs.ids)
+    w = np.asarray(corpus.docs.weights)
+    picks = rng.integers(0, corpus.docs.n_docs, n)
+    return [(ids[i], w[i]) for i in picks], picks
+
+
+def test_server_self_recall(corpus):
+    server = QueryServer(corpus.docs, corpus.emb, make_host_mesh(),
+                         ServerConfig(k=5, max_batch=8, h_max=12))
+    rng = np.random.default_rng(0)
+    stream, picks = _stream_from(corpus, 24, rng)
+    answers = list(server.serve_stream(stream))
+    assert len(answers) == 24
+    hits = [picks[i] in set(a[0].tolist()) for i, a in enumerate(answers)]
+    assert np.mean(hits) == 1.0   # exact self-match must always be in top-k
+    assert server.stats["queries"] == 24
+    assert server.stats["batches"] >= 3  # max_batch=8 forced several batches
+
+
+def test_server_wmd_rerank(corpus):
+    server = QueryServer(
+        corpus.docs, corpus.emb, make_host_mesh(),
+        ServerConfig(k=4, max_batch=8, h_max=12, rerank_wmd=True,
+                     wmd_kw=dict(eps=0.05, eps_scaling=2, max_iters=60)))
+    rng = np.random.default_rng(1)
+    stream, picks = _stream_from(corpus, 8, rng)
+    answers = list(server.serve_stream(stream))
+    assert len(answers) == 8
+    assert server.stats["wmd_reranks"] == 8
+    hits = [picks[i] in set(a[0].tolist()) for i, a in enumerate(answers)]
+    assert np.mean(hits) >= 0.9
+
+
+@pytest.mark.slow
+def test_launchers_cli():
+    env = {**os.environ, "PYTHONPATH": str(REPO / "src")}
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "llama3.2-1b",
+         "--steps", "4", "--batch", "2", "--seq", "16"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "[train] done" in r.stdout
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--n-docs", "256",
+         "--n-queries", "8", "--batch", "8"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "self-recall" in r.stdout

@@ -1,0 +1,69 @@
+"""Text ingestion path: tokenizer, hashing/vocab vectorizers, end-to-end
+similarity on real sentences."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.vectorizer import (
+    HashingVectorizer,
+    VocabVectorizer,
+    tokenize,
+)
+
+DOCS = [
+    "Obama speaks to the media in Illinois",
+    "The President greets the press in Chicago",
+    "Oranges and apples are delicious fruits",
+    "Fresh fruit juice with apples and oranges",
+]
+
+
+def test_tokenize_drops_stopwords():
+    toks = tokenize("The president speaks TO the press!")
+    assert "the" not in toks and "to" not in toks
+    assert "president" in toks and "speaks" in toks
+
+
+def test_hashing_vectorizer_deterministic_and_bounded():
+    v = HashingVectorizer(n_features=4096, h_max=8)
+    a1 = v.doc_to_histogram(DOCS[0])
+    a2 = v.doc_to_histogram(DOCS[0])
+    np.testing.assert_array_equal(a1[0], a2[0])
+    assert (a1[0][a1[1] > 0] < 4096).all()
+    ds = v.corpus_to_docset(DOCS)
+    assert ds.n_docs == 4
+    np.testing.assert_allclose(np.asarray(ds.weights).sum(1), 1.0, rtol=1e-5)
+
+
+def test_vocab_vectorizer_oov_dropped():
+    v = VocabVectorizer(h_max=8).fit(DOCS[:2])
+    ds = v.transform(["completely unseen vocabulary zzzz", DOCS[0]])
+    assert float(ds.weights[0].sum()) == 0.0   # all OOV
+    assert float(ds.weights[1].sum()) > 0.0
+
+
+def test_end_to_end_semantic_similarity():
+    """Word-level semantic structure: with embeddings where related words are
+    close, the politics docs must be mutually nearer than the fruit docs."""
+    from repro.core import lc_rwmd_symmetric
+
+    v = VocabVectorizer(h_max=8).fit(DOCS)
+    ds = v.transform(DOCS)
+    rng = np.random.default_rng(0)
+    emb = rng.normal(0, 1, (v.vocab_size, 16)).astype(np.float32)
+
+    def put_close(words, center):
+        for w in words:
+            if w in v.vocab:
+                emb[v.vocab[w]] = center + rng.normal(0, 0.05, 16)
+
+    c_politics = rng.normal(0, 3, 16)
+    c_fruit = rng.normal(0, 3, 16)
+    put_close(["obama", "president", "speaks", "greets", "media", "press",
+               "illinois", "chicago"], c_politics)
+    put_close(["oranges", "apples", "fruits", "fruit", "juice", "delicious",
+               "fresh"], c_fruit)
+
+    d = np.asarray(lc_rwmd_symmetric(ds, ds, jnp.asarray(emb)))
+    assert d[0, 1] < d[0, 2] and d[0, 1] < d[0, 3]   # obama ~ president doc
+    assert d[2, 3] < d[2, 0] and d[2, 3] < d[2, 1]   # fruits ~ fruits
