@@ -9,18 +9,59 @@ independent.  Real-TPU timing belongs to the roofline analysis (§Roofline).
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import BenchResult, time_fn
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 
 def _vmem_bytes_phase1(block_v=512, block_h=128, m=384, b_out=1):
     # emb tile + t tile + valid + out accumulator + (bv, bh) distance tile
     return 4 * (block_v * m + block_h * m + block_h
                 + block_v * b_out + block_v * block_h)
+
+
+def _vmem_bytes_fused(block_v=256, block_n=8, h=32, h1=32, m=384, b=8,
+                      vocab_chunk=2048):
+    # emb tile + t + valid + ids/w tiles + out tile + z cache (the chunk)
+    # + the (block_n, h1, block_v) one-hot expansion temp
+    b_pad = 128
+    return 4 * (block_v * m + b * h * m + b * h + 2 * block_n * h1
+                + block_n * b_pad + vocab_chunk * b_pad
+                + block_n * h1 * block_v)
+
+
+def _intermediate_shapes(fn, *args) -> set[tuple[int, ...]]:
+    """All f32 intermediate shapes in fn's jaxpr, recursing into sub-jaxprs
+    (jit/scan bodies) — a structural HBM-footprint probe."""
+    import jax.core as jcore
+
+    shapes: set[tuple[int, ...]] = set()
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            for ov in eqn.outvars:
+                aval = getattr(ov, "aval", None)
+                if getattr(aval, "dtype", None) == jnp.float32:
+                    shapes.add(tuple(aval.shape))
+            for val in eqn.params.values():
+                if isinstance(val, jcore.ClosedJaxpr):
+                    walk(val.jaxpr)
+                elif isinstance(val, jcore.Jaxpr):
+                    walk(val)
+                elif isinstance(val, (list, tuple)):
+                    for x in val:
+                        if isinstance(x, jcore.ClosedJaxpr):
+                            walk(x.jaxpr)
+                        elif isinstance(x, jcore.Jaxpr):
+                            walk(x)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return shapes
 
 
 def run() -> list[BenchResult]:
@@ -47,13 +88,83 @@ def run() -> list[BenchResult]:
     t_seg = time_fn(jax.jit(ref.segment_spmm_ref, static_argnums=4),
                     srcg, dstg, featg, radg, n_nodes)
 
+    # ---- seed two-phase vs fused streaming (pure-jnp paths, XLA:CPU) ------
+    # The acceptance contract for the fused engine: same result, peak
+    # intermediate (vocab_chunk, B) instead of (v, B), and no slower than
+    # the seed two-phase path at the serve shape v=8192, n=4096, B=8.
+    vocab_chunk = 2048
+    r_ids, r_w = ids, w
+
+    def two_phase(emb, q_ids, q_w, r_ids, r_w):
+        zz = ref.lc_rwmd_phase1_ref(emb, q_ids, q_w)   # full Z (v, B) in HBM
+        return ref.spmm_ell_ref(r_ids, r_w, zz)
+
+    from repro.kernels.ops import lc_rwmd_fused
+
+    fused = functools.partial(
+        lc_rwmd_fused, vocab_chunk=vocab_chunk, fuse="jnp")
+    t_two_phase = time_fn(jax.jit(two_phase), emb, q_ids, q_w, r_ids, r_w,
+                          iters=9)
+    t_fused = time_fn(fused, emb, q_ids, q_w, r_ids, r_w, iters=9)
+
+    # Footprint assertion, checked STRUCTURALLY against the traced program:
+    # the two-phase path must contain a full (v, B) Z intermediate (positive
+    # control) and the fused streaming path must not — its Z tiles are
+    # bounded at (vocab_chunk, B) inside the scan body.
+    z_bytes_two_phase = 4 * v * b
+    z_bytes_fused = 4 * vocab_chunk * b
+    shapes_two_phase = _intermediate_shapes(
+        two_phase, emb, q_ids, q_w, r_ids, r_w)
+    shapes_fused = _intermediate_shapes(fused, emb, q_ids, q_w, r_ids, r_w)
+    assert (v, b) in shapes_two_phase, "positive control: seed path has Z (v,B)"
+    assert (v, b) not in shapes_fused, (
+        "fused streaming materialized a full Z (v, B) intermediate")
+    assert (vocab_chunk, b) in shapes_fused, (
+        "fused streaming should produce (vocab_chunk, B) Z tiles")
+
+    # Blocked vs naive SpMM: grid-step accounting (hardware-independent; the
+    # acceptance floor is block_n >= 8) and interpret-mode step timing at a
+    # small shape (the python-loop emulation makes the per-step cost visible;
+    # absolute times are NOT TPU times).
+    block_n = 8
+    steps_naive = n * h
+    steps_blocked = (n // block_n) * h
+    ns, hs, vs, bs = 64, 8, 256, 8
+    ids_s = jnp.asarray(rng.integers(0, vs, (ns, hs)).astype(np.int32))
+    w_s = jnp.asarray(rng.uniform(0, 1, (ns, hs)).astype(np.float32))
+    z_s = jnp.asarray(rng.normal(size=(vs, bs)).astype(np.float32))
+    t_naive_i = time_fn(
+        functools.partial(ops.spmm_ell, mode="naive", interpret=True),
+        ids_s, w_s, z_s, warmup=1, iters=3)
+    t_blocked_i = time_fn(
+        functools.partial(ops.spmm_ell, mode="blocked", interpret=True),
+        ids_s, w_s, z_s, warmup=1, iters=3)
+
     vmem = _vmem_bytes_phase1()
+    vmem_fused = _vmem_bytes_fused(vocab_chunk=vocab_chunk)
     return [
         BenchResult("kernel_phase1_jnp_ref_v8192_b8_h32", t_ref, derived={
             "flops": 2 * v * b * h * m,
             "note": "XLA:CPU reference; Pallas kernel targets TPU"}),
         BenchResult("kernel_spmm_ell_jnp_ref_n4096", t_spmm, derived={
             "nnz": n * h}),
+        BenchResult("kernel_two_phase_jnp_v8192_n4096_b8", t_two_phase, derived={
+            "z_hbm_bytes": z_bytes_two_phase,
+            "note": "seed pipeline: full Z (v, B) materialized between phases"}),
+        BenchResult("kernel_fused_stream_jnp_v8192_n4096_b8", t_fused, derived={
+            "z_peak_bytes": z_bytes_fused,
+            "vocab_chunk": vocab_chunk,
+            "z_reduction_x": z_bytes_two_phase / z_bytes_fused,
+            "no_slower_than_two_phase": bool(t_fused <= 1.10 * t_two_phase),
+            "vs_two_phase": t_fused / t_two_phase}),
+        BenchResult("kernel_spmm_blocked_vs_naive_interp", t_blocked_i, derived={
+            "t_naive_us": t_naive_i,
+            "grid_steps_naive_n4096": steps_naive,
+            "grid_steps_blocked_n4096": steps_blocked,
+            "block_n": block_n,
+            "step_reduction_x": steps_naive / steps_blocked,
+            "note": "interpret-mode python-loop emulation at n=64; the grid "
+                    "accounting is for the serve shape n=4096,h=32"}),
         BenchResult("kernel_segment_spmm_jnp_ref_e32768", t_seg, derived={
             "edges": n_edges,
             "note": "jnp oracle; fused Pallas kernel removes the ExD "
@@ -62,4 +173,8 @@ def run() -> list[BenchResult]:
             "bytes": vmem, "limit": 16 * 2**20,
             "fits_vmem": bool(vmem < 16 * 2**20),
             "blockspec": "bv=512,bh=128,m=384"}),
+        BenchResult("kernel_fused_vmem_footprint", 0.0, derived={
+            "bytes": vmem_fused, "limit": 16 * 2**20,
+            "fits_vmem": bool(vmem_fused < 16 * 2**20),
+            "blockspec": f"bv=256,bn=8,chunk={vocab_chunk},m=384"}),
     ]

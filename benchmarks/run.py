@@ -1,22 +1,45 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV per result.  Run:
-    PYTHONPATH=src python -m benchmarks.run [--only fig12]
+Prints ``name,us_per_call,derived`` CSV per result and persists each
+module's results as ``BENCH_<module>.json`` (``kernels_bench`` →
+``BENCH_kernels.json``) so the perf trajectory accumulates across PRs.  Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig12] [--out-dir .]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 import traceback
+
+
+def _json_name(mod_name: str) -> str:
+    stem = mod_name[: -len("_bench")] if mod_name.endswith("_bench") else mod_name
+    return f"BENCH_{stem}.json"
+
+
+def _persist(out_dir: pathlib.Path, mod_name: str, results) -> None:
+    payload = [
+        {"name": r.name, "us_per_call": r.us_per_call,
+         "derived": {k: (v if isinstance(v, (int, float, str, bool)) else str(v))
+                     for k, v in r.derived.items()}}
+        for r in results
+    ]
+    (out_dir / _json_name(mod_name)).write_text(json.dumps(payload, indent=2))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on module names")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for the BENCH_*.json result files")
     args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
 
     from benchmarks import (
         fig10_11_overlap,
@@ -44,8 +67,10 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            for r in mod.run():
+            results = list(mod.run())
+            for r in results:
                 print(r.csv(), flush=True)
+            _persist(out_dir, name, results)
         except Exception:
             failed.append(name)
             traceback.print_exc()

@@ -2,9 +2,12 @@
 
 from repro.core.distances import dists, sq_dists
 from repro.core.lc_rwmd import (
+    LCRWMDEngine,
     lc_rwmd_one_sided,
+    lc_rwmd_streaming,
     lc_rwmd_symmetric,
     phase1_z,
+    phase1_z_from_t,
     phase2_spmm,
     restrict_vocab,
 )
@@ -16,7 +19,8 @@ from repro.core.wmd import emd_exact_lp, sinkhorn_log, wmd_one_vs_many, wmd_pair
 
 __all__ = [
     "dists", "sq_dists",
-    "lc_rwmd_one_sided", "lc_rwmd_symmetric", "phase1_z", "phase2_spmm",
+    "LCRWMDEngine", "lc_rwmd_one_sided", "lc_rwmd_streaming",
+    "lc_rwmd_symmetric", "phase1_z", "phase1_z_from_t", "phase2_spmm",
     "restrict_vocab",
     "PrunedWMDResult", "knn_classify", "pruned_wmd_topk",
     "rwmd_many_vs_many", "rwmd_one_vs_many", "rwmd_pair",

@@ -55,10 +55,26 @@ def phase1_z(
 
     Returns (v, B) f32.
     """
-    v = emb.shape[0]
-    b, h = q_ids.shape
     t = emb[q_ids.reshape(-1)]  # (B*h, m)
     valid = (q_w > 0).reshape(-1)  # (B*h,)
+    return phase1_z_from_t(
+        emb, t, valid, q_ids.shape[0],
+        bf16_matmul=bf16_matmul, vocab_chunk=vocab_chunk,
+    )
+
+
+def phase1_z_from_t(
+    emb: Array,
+    t: Array,       # (B*h, m) pre-gathered query word embeddings
+    valid: Array,   # (B*h,) bool
+    b: int,
+    *,
+    bf16_matmul: bool = False,
+    vocab_chunk: int | None = None,
+) -> Array:
+    """phase1_z with the query-embedding gather hoisted out (engine shares it)."""
+    v = emb.shape[0]
+    h = t.shape[0] // b
 
     def chunk_z(e_chunk):
         c = sq_dists(e_chunk, t, bf16_matmul=bf16_matmul)  # (cv, B*h)
@@ -67,12 +83,15 @@ def phase1_z(
 
     if vocab_chunk is None or vocab_chunk >= v:
         return chunk_z(emb)
-    if v % vocab_chunk != 0:
-        raise ValueError(f"v={v} not divisible by vocab_chunk={vocab_chunk}")
+    # Non-divisible chunk sizes are handled by zero-padding the vocab axis;
+    # the padded rows produce garbage Z rows that are sliced off below.
+    pad = (-v) % vocab_chunk
+    emb_p = jnp.pad(emb, ((0, pad), (0, 0))) if pad else emb
     _, z = jax.lax.scan(
-        lambda _, e: (None, chunk_z(e)), None, emb.reshape(-1, vocab_chunk, emb.shape[1])
+        lambda _, e: (None, chunk_z(e)), None,
+        emb_p.reshape(-1, vocab_chunk, emb_p.shape[1]),
     )
-    return z.reshape(v, b)
+    return z.reshape(-1, b)[:v]
 
 
 # ---------------------------------------------------------------------------
@@ -109,7 +128,8 @@ def lc_rwmd_one_sided(
         from repro.kernels import ops as kops
 
         z = kops.lc_rwmd_phase1(
-            emb, queries.ids, queries.weights, interpret=interpret
+            emb, queries.ids, queries.weights,
+            bf16_matmul=bf16_matmul, interpret=interpret,
         )
         return kops.spmm_ell(resident.ids, resident.weights, z, interpret=interpret)
     z = phase1_z(
@@ -117,6 +137,38 @@ def lc_rwmd_one_sided(
         bf16_matmul=bf16_matmul, vocab_chunk=vocab_chunk,
     )
     return phase2_spmm(resident, z)
+
+
+def lc_rwmd_streaming(
+    resident: DocSet,
+    queries: DocSet,
+    emb: Array,
+    *,
+    vocab_chunk: int = 512,
+    fuse: str = "jnp",
+    bf16_matmul: bool = False,
+    block_n: int = 8,
+    block_v: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """One-sided LC-RWMD with the fused phase-1→phase-2 streaming engine.
+
+    Semantically identical to :func:`lc_rwmd_one_sided`, but Z is never
+    materialized at full (v, B): the vocabulary is scanned in ``vocab_chunk``
+    rows, each chunk's Z tile produced and immediately consumed into the
+    running D accumulator (peak intermediate = (vocab_chunk, B)).
+
+    ``fuse`` selects the backend: "jnp" (pure-jnp streaming scan, the CPU
+    reference), "scan" (phase-1 kernel + blocked SpMM kernel per chunk), or
+    "kernel" (single fused pallas_call per chunk; Z lives only in VMEM).
+    """
+    from repro.kernels import ops as kops
+
+    return kops.lc_rwmd_fused(
+        emb, queries.ids, queries.weights, resident.ids, resident.weights,
+        vocab_chunk=vocab_chunk, fuse=fuse, block_n=block_n, block_v=block_v,
+        bf16_matmul=bf16_matmul, interpret=interpret,
+    )
 
 
 def lc_rwmd_symmetric(
@@ -137,6 +189,156 @@ def lc_rwmd_symmetric(
     d1 = lc_rwmd_one_sided(set1, set2, emb, **kw)  # (n1, n2)
     d2 = lc_rwmd_one_sided(set2, set1, emb, **kw)  # (n2, n1)
     return jnp.maximum(d1, d2.T)
+
+
+class LCRWMDEngine:
+    """Precompiled serve-time LC-RWMD against a fixed resident corpus.
+
+    Built ONCE from a resident :class:`DocSet` + embedding table, the engine
+    hoists everything that does not depend on the query batch out of the
+    serve path:
+
+      * the paper's ``v_e`` vocabulary restriction (phase 1 / phase 2 only
+        ever touch resident-used vocab rows — queries still gather from the
+        FULL table, so out-of-resident-vocab query words stay exact, which
+        plain :func:`restrict_vocab` usage cannot guarantee);
+      * the resident-side word-embedding gather ``emb[resident.ids]`` that
+        the symmetric bound's swapped direction needs (the seed path
+        re-gathered it per call);
+      * float32 casts, alignment padding, and the jit compilation of the
+        ``one_sided`` / ``symmetric`` / ``topk`` entry points (query buffers
+        optionally donated on accelerator backends via ``donate_queries``).
+
+    The symmetric path also shares ONE query-embedding gather between both
+    directions and restricts the swapped direction's vocab axis to the
+    batch's own query words — O(B·h·n·h̄·m) instead of the seed's full
+    O(v·n·h̄·m) second phase-1 pass, exactly equal in value.
+
+    ``vocab_chunk`` bounds the phase-1 intermediate at (vocab_chunk, B)
+    (streaming mode); ``use_kernel`` routes through the Pallas kernels.
+    """
+
+    def __init__(
+        self,
+        resident: DocSet,
+        emb: Array,
+        *,
+        restrict: bool = True,
+        bf16_matmul: bool = False,
+        vocab_chunk: int | None = None,
+        use_kernel: bool = False,
+        interpret: bool = False,
+        jit_methods: bool = True,
+        donate_queries: bool = False,
+    ):
+        self.resident = resident
+        self.emb_full = jnp.asarray(emb, dtype=jnp.float32)
+        self.bf16_matmul = bf16_matmul
+        self.vocab_chunk = vocab_chunk
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+
+        if restrict:
+            sub, emb_r, old_to_new = restrict_vocab(resident, self.emb_full)
+        else:
+            sub, emb_r = resident, self.emb_full
+            old_to_new = jnp.arange(self.emb_full.shape[0], dtype=jnp.int32)
+        self.resident_restricted = sub
+        self.emb_restricted = emb_r
+        self.old_to_new = old_to_new
+
+        # Pre-gathered side-2 targets: the resident docs' word embeddings.
+        n, h1 = resident.ids.shape
+        self._t_r = self.emb_full[resident.ids.reshape(-1)]  # (n*h1, m)
+        self._valid_r = (resident.weights > 0).reshape(-1)   # (n*h1,)
+
+        if jit_methods:
+            # ``donate_queries`` lets XLA reuse the per-call query buffers on
+            # accelerator backends.  Opt-in ONLY: the caller must not touch
+            # the DocSet again after the call (pruned_wmd_topk's refine stage
+            # re-reads it, so the pipeline path keeps this off).
+            donate = (
+                (0, 1)
+                if donate_queries and jax.default_backend() != "cpu"
+                else ()
+            )
+            self._one_sided = jax.jit(self._one_sided_impl, donate_argnums=donate)
+            self._symmetric = jax.jit(self._symmetric_impl, donate_argnums=donate)
+            self._topk = jax.jit(
+                self._topk_impl, static_argnums=(0,),
+                donate_argnums=(1, 2) if donate else (),
+            )
+        else:
+            self._one_sided = self._one_sided_impl
+            self._symmetric = self._symmetric_impl
+            self._topk = self._topk_impl
+
+    # -- internals --------------------------------------------------------
+    def gather_queries(self, q_ids: Array) -> Array:
+        """(B, h, m) query word embeddings from the FULL table."""
+        b, h = q_ids.shape
+        return self.emb_full[q_ids.reshape(-1)].reshape(b, h, -1)
+
+    def _d1_from_t(self, t_q: Array, valid_q: Array, b: int) -> Array:
+        """Resident→query direction from pre-gathered (B*h, m) targets."""
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            h = t_q.shape[0] // b
+            z1 = kops.lc_rwmd_phase1_pregathered(
+                self.emb_restricted, t_q.reshape(b, h, -1),
+                valid_q.reshape(b, h).astype(jnp.float32),
+                bf16_matmul=self.bf16_matmul, interpret=self.interpret,
+            )
+            return kops.spmm_ell(
+                self.resident_restricted.ids, self.resident_restricted.weights,
+                z1, interpret=self.interpret,
+            )
+        z1 = phase1_z_from_t(
+            self.emb_restricted, t_q, valid_q, b,
+            bf16_matmul=self.bf16_matmul, vocab_chunk=self.vocab_chunk,
+        )
+        return phase2_spmm(self.resident_restricted, z1)
+
+    def _one_sided_impl(self, q_ids: Array, q_w: Array) -> Array:
+        b = q_ids.shape[0]
+        t_q = self.emb_full[q_ids.reshape(-1)]
+        return self._d1_from_t(t_q, (q_w > 0).reshape(-1), b)
+
+    def _symmetric_impl(self, q_ids: Array, q_w: Array) -> Array:
+        b, h2 = q_ids.shape
+        n, h1 = self.resident.ids.shape
+        # ONE query gather feeds both directions.
+        t_q = self.emb_full[q_ids.reshape(-1)]           # (B*h2, m)
+        valid_q = (q_w > 0).reshape(-1)
+        d1 = self._d1_from_t(t_q, valid_q, b)            # (n, B)
+
+        # Swapped direction with the vocab axis restricted to the batch's own
+        # query words: Z2 rows are only ever read at q_ids, so computing just
+        # those rows against the pre-gathered resident targets is exact.
+        sq = sq_dists(t_q, self._t_r, bf16_matmul=self.bf16_matmul)
+        sq = jnp.where(self._valid_r[None, :], sq, _INF)
+        z2 = safe_sqrt(jnp.min(sq.reshape(b * h2, n, h1), axis=2))
+        d2 = jnp.einsum("bh,bhn->bn", q_w, z2.reshape(b, h2, n))
+        return jnp.maximum(d1, d2.T)
+
+    def _topk_impl(self, k: int, q_ids: Array, q_w: Array):
+        from repro.core import topk as topk_lib
+
+        return topk_lib.topk_smallest_cols(self._symmetric_impl(q_ids, q_w), k)
+
+    # -- public entry points ----------------------------------------------
+    def one_sided(self, queries: DocSet) -> Array:
+        """D1 (n, B): cost of moving each resident doc into each query."""
+        return self._one_sided(queries.ids, queries.weights)
+
+    def symmetric(self, queries: DocSet) -> Array:
+        """Tight symmetric bound max(D1, D2ᵀ), shape (n, B)."""
+        return self._symmetric(queries.ids, queries.weights)
+
+    def topk(self, queries: DocSet, k: int):
+        """Per-query top-k smallest symmetric LC-RWMD: TopK (B, k)."""
+        return self._topk(k, queries.ids, queries.weights)
 
 
 def restrict_vocab(resident: DocSet, emb: Array) -> tuple[DocSet, Array, Array]:

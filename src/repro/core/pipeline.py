@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import topk as topk_lib
-from repro.core.lc_rwmd import lc_rwmd_one_sided, lc_rwmd_symmetric
+from repro.core.lc_rwmd import LCRWMDEngine, lc_rwmd_one_sided, lc_rwmd_symmetric
 from repro.core.wmd import wmd_pair
 from repro.data.docs import DocSet
 
@@ -49,8 +49,15 @@ def pruned_wmd_topk(
     k: int,
     refine_budget: int | None = None,
     sinkhorn_kw: dict | None = None,
+    engine: LCRWMDEngine | None = None,
 ) -> PrunedWMDResult:
-    """Top-k WMD per query via the RWMD pruning cascade. jit-compatible."""
+    """Top-k WMD per query via the RWMD pruning cascade. jit-compatible.
+
+    ``engine``: a prebuilt :class:`LCRWMDEngine` over the SAME resident set
+    and embeddings — stage 1 then reuses its restricted vocabulary and
+    pre-gathered resident tensors instead of re-deriving them per call
+    (the serve path in serving/query_server.py passes its engine here).
+    """
     sinkhorn_kw = sinkhorn_kw or {}
     n = resident.n_docs
     b = queries.n_docs
@@ -58,7 +65,10 @@ def pruned_wmd_topk(
     budget = min(budget, n)
 
     # Stage 1: LC-RWMD lower bounds for every (resident, query) pair.
-    d_rwmd = lc_rwmd_symmetric(resident, queries, emb)  # (n, B)
+    if engine is not None:
+        d_rwmd = engine.symmetric(queries)  # (n, B)
+    else:
+        d_rwmd = lc_rwmd_symmetric(resident, queries, emb)  # (n, B)
     rwmd_topk = topk_lib.topk_smallest_cols(d_rwmd, k)  # (B, k)
 
     # Stage 2+4 fused under a fixed budget: WMD on the `budget` best docs.

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused LC-RWMD phase-1 → phase-2 over one vocab chunk.
+
+The seed pipeline materializes the full Phase-1 output ``Z (v, B)`` in HBM
+between the two phases — O(v·B) write + O(n·h·B) gather re-read traffic that
+the paper's bandwidth argument says we should never pay.  This kernel folds
+the ELL accumulation INTO the phase-1 ``pallas_call``: each vocab subtile's
+Z rows are produced in a VMEM scratch cache and consumed by the one-hot MXU
+SpMM in the same grid sweep, so Z never exists in HBM at all.  The streaming
+driver (ops.lc_rwmd_fused) scans the vocabulary in ``vocab_chunk``-sized
+chunks and accumulates the running ``D (n, B)``; peak intermediate is the
+(vocab_chunk, B) VMEM cache (see EXPERIMENTS.md §Perf for the traffic model
+and VMEM budget).
+
+Grid: ``(n // block_n, cv // block_v)`` — doc tiles outer, vocab subtiles
+inner, so the (block_n, B) output block accumulates across consecutive
+subtile steps (the Pallas-safe revisit pattern).  The Z cache is computed
+once, during the first doc tile's sweep (``i == 0``), and re-read from VMEM
+by every later doc tile.
+
+Blocks (all VMEM):
+  emb    (block_v, m)   index (i, j) -> (j, 0)    vocab subtile
+  t      (B, h, m)      index (i, j) -> 0         query word embeddings
+  valid  (B, h)         index (i, j) -> 0         f32 0/1 query mask
+  ids    (block_n, h1)  index (i, j) -> (i, 0)    CHUNK-RELATIVE ELL ids
+  w      (block_n, h1)  index (i, j) -> (i, 0)    weights, 0 outside chunk
+  out D  (block_n, B)   index (i, j) -> (i, 0)    revisited over j
+  scratch z_cache (cv, B) — persists across the whole grid.
+
+Alignment contract (enforced by ops.lc_rwmd_fused): m and B padded to lane
+width where required, cv % block_v == 0, n % block_n == 0.  ``ids`` must be
+pre-shifted into [0, cv) with out-of-chunk slots clipped and their weights
+zeroed — the chunk offset never enters the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_INF = 3.4e38  # large finite sentinel (Python float: kernels cannot capture consts)
+
+
+def _fused_kernel(
+    emb_ref, t_ref, valid_ref, ids_ref, w_ref, out_ref, z_cache,
+    *, block_v: int, bf16_matmul: bool,
+):
+    i = pl.program_id(0)  # doc tile
+    j = pl.program_id(1)  # vocab subtile
+    n_b, h = valid_ref.shape
+
+    @pl.when(i == 0)
+    def _compute_z_subtile():
+        e = emb_ref[...]                           # (bv, m)
+        t = t_ref[...].reshape(n_b * h, -1)        # (B·h, m)
+        valid = valid_ref[...].reshape(-1)         # (B·h,)
+        e2 = jnp.sum(e * e, axis=-1, keepdims=True)
+        t2 = jnp.sum(t * t, axis=-1, keepdims=True).T
+        if bf16_matmul:
+            et = jax.lax.dot_general(
+                e.astype(jnp.bfloat16), t.astype(jnp.bfloat16),
+                (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+            )
+        else:
+            et = jax.lax.dot_general(
+                e, t, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        sq = jnp.maximum(e2 + t2 - 2.0 * et, 0.0)  # (bv, B·h)
+        sq = jnp.where(valid[None, :] > 0, sq, _INF)
+        zmin = jnp.min(sq.reshape(block_v, n_b, h), axis=2)
+        z = jnp.sqrt(jnp.maximum(zmin, 0.0))       # (bv, B)
+        pad_b = z_cache.shape[1] - n_b
+        z = jnp.concatenate(
+            [z, jnp.zeros((block_v, pad_b), jnp.float32)], axis=1)
+        z_cache[pl.ds(j * block_v, block_v), :] = z
+
+    # One-hot ELL accumulation against the (just-)cached Z subtile (MXU).
+    ids = ids_ref[...]                             # (bn, h1) in [0, cv)
+    w = w_ref[...]
+    bn, h1 = ids.shape
+    cols = j * block_v + jax.lax.broadcasted_iota(jnp.int32, (bn, h1, block_v), 2)
+    a = jnp.sum((ids[:, :, None] == cols).astype(jnp.float32) * w[:, :, None],
+                axis=1)                            # (bn, bv)
+    z_sub = z_cache[pl.ds(j * block_v, block_v), :]
+    contrib = jax.lax.dot_general(
+        a, z_sub, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = contrib
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += contrib
+
+
+def fused_lc_rwmd_chunk_pallas(
+    emb_chunk: jax.Array,   # (cv, m) f32 vocab-chunk embedding rows
+    t: jax.Array,           # (B, h, m) f32 query word embeddings
+    valid: jax.Array,       # (B, h) f32 0/1
+    ids_rel: jax.Array,     # (n, h1) int32, chunk-relative, clipped to [0, cv)
+    w_masked: jax.Array,    # (n, h1) f32, 0 at padding AND out-of-chunk slots
+    *,
+    block_v: int = 256,
+    block_n: int = 8,
+    bf16_matmul: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Partial D (n, B_pad) contribution of one vocab chunk, fully fused.
+
+    Returns the chunk's Σ_p w[i,p]·Z_chunk[ids[i,p], j] with Z_chunk living
+    only in VMEM.  Callers accumulate chunk contributions and slice the lane
+    padding off the B axis.
+    """
+    cv, m = emb_chunk.shape
+    n_b, h, _ = t.shape
+    n, h1 = ids_rel.shape
+    if cv % block_v != 0 or n % block_n != 0:
+        raise ValueError(
+            f"cv={cv} / n={n} not multiples of block_v={block_v} / block_n={block_n}")
+    b_pad = max(128, n_b)  # lane-width accumulator/cache
+    grid = (n // block_n, cv // block_v)
+
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, block_v=block_v, bf16_matmul=bf16_matmul),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((n_b, h, m), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((n_b, h), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_n, h1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, h1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, b_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((cv, b_pad), jnp.float32)],
+        interpret=interpret,
+    )(emb_chunk, t, valid, ids_rel, w_masked)

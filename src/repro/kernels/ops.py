@@ -15,12 +15,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_stream as _fs
 from repro.kernels import lc_rwmd_phase1 as _p1
 from repro.kernels import rwmd_pairwise as _rw
 from repro.kernels import segment_spmm as _seg
 from repro.kernels import spmm_ell as _sp
 
 Array = jax.Array
+
+_INF = 3.4e38
 
 
 def _on_cpu() -> bool:
@@ -35,6 +38,27 @@ def _pad_to(x: Array, mult: int, axis: int, value=0) -> Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, constant_values=value)
+
+
+def _phase1_padded(
+    emb_f: Array,    # (v_pad, m_pad) f32, already block/lane aligned
+    t: Array,        # (B, h, m_pad) f32 pre-gathered query word embeddings
+    valid: Array,    # (B, h) f32 0/1
+    v_out: int,
+    *,
+    block_v: int,
+    block_h: int,
+    bf16_matmul: bool,
+    interpret: bool,
+) -> Array:
+    t = _pad_to(t, block_h, axis=1)
+    valid = _pad_to(valid, block_h, axis=1)
+    z_sq = _p1.lc_rwmd_phase1_pallas(
+        emb_f, t, valid,
+        block_v=block_v, block_h=min(block_h, t.shape[1]),
+        bf16_matmul=bf16_matmul, interpret=interpret,
+    )
+    return jnp.sqrt(jnp.maximum(z_sq[:v_out], 0.0))
 
 
 @functools.partial(
@@ -58,33 +82,170 @@ def lc_rwmd_phase1(
 
     emb_f = _pad_to(_pad_to(emb.astype(jnp.float32), 128, axis=1), block_v, axis=0)
     t = emb_f[q_ids.reshape(-1)].reshape(b, h, emb_f.shape[1])
-    t = _pad_to(t, block_h, axis=1)
-    valid = _pad_to((q_w > 0).astype(jnp.float32), block_h, axis=1)
-
-    z_sq = _p1.lc_rwmd_phase1_pallas(
-        emb_f, t, valid,
-        block_v=block_v, block_h=min(block_h, t.shape[1]),
+    valid = (q_w > 0).astype(jnp.float32)
+    return _phase1_padded(
+        emb_f, t, valid, v, block_v=block_v, block_h=block_h,
         bf16_matmul=bf16_matmul, interpret=interpret,
     )
-    z = jnp.sqrt(jnp.maximum(z_sq[:v], 0.0))
-    return z
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(
+    jax.jit, static_argnames=("block_v", "block_h", "bf16_matmul", "interpret")
+)
+def lc_rwmd_phase1_pregathered(
+    emb: Array,      # (v, m) float — the vocab axis of Z
+    t: Array,        # (B, h, m) float — PRE-GATHERED query word embeddings
+    valid: Array,    # (B, h) float 0/1
+    *,
+    block_v: int = 512,
+    block_h: int = 128,
+    bf16_matmul: bool = False,
+    interpret: bool | None = None,
+) -> Array:
+    """Phase 1 with the query gather hoisted out (LCRWMDEngine shares it)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    v = emb.shape[0]
+    emb_f = _pad_to(_pad_to(emb.astype(jnp.float32), 128, axis=1), block_v, axis=0)
+    t = _pad_to(t.astype(jnp.float32), emb_f.shape[1], axis=2)
+    return _phase1_padded(
+        emb_f, t, valid.astype(jnp.float32), v, block_v=block_v,
+        block_h=block_h, bf16_matmul=bf16_matmul, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_v", "mode", "interpret")
+)
 def spmm_ell(
     ids: Array,   # (n, h) int32
     w: Array,     # (n, h) float
     z: Array,     # (v, B) float
     *,
+    block_n: int = 8,
+    block_v: int = 256,
+    mode: str = "blocked",
     interpret: bool | None = None,
 ) -> Array:
-    """D (n, B) f32 = ELL-sparse(ids, w) @ z."""
+    """D (n, B) f32 = ELL-sparse(ids, w) @ z.
+
+    ``mode``: "blocked" (grid (n/block_n, h), block_n gathered-row DMAs per
+    step), "dense" (one-hot MXU formulation for small vocab), or "naive"
+    (the seed one-row-per-step grid, kept as the recorded baseline).
+    """
     if interpret is None:
         interpret = _on_cpu()
     n, h = ids.shape
     z_p = _pad_to(z.astype(jnp.float32), 128, axis=1)
-    out = _sp.spmm_ell_pallas(ids, w.astype(jnp.float32), z_p, interpret=interpret)
-    return out[:, : z.shape[1]]
+    w_f = w.astype(jnp.float32)
+    if mode == "naive":
+        out = _sp.spmm_ell_naive_pallas(ids, w_f, z_p, interpret=interpret)
+        return out[:n, : z.shape[1]]
+    # Pad the doc axis to the tile size; padding docs carry weight 0.
+    ids_p = _pad_to(ids, block_n, axis=0)
+    w_p = _pad_to(w_f, block_n, axis=0)
+    if mode == "blocked":
+        out = _sp.spmm_ell_pallas(
+            ids_p, w_p, z_p, block_n=block_n, interpret=interpret)
+    elif mode == "dense":
+        z_p = _pad_to(z_p, block_v, axis=0)
+        out = _sp.spmm_ell_dense_pallas(
+            ids_p, w_p, z_p, block_n=block_n, block_v=block_v,
+            interpret=interpret)
+    else:
+        raise ValueError(f"unknown spmm mode {mode!r}")
+    return out[:n, : z.shape[1]]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("vocab_chunk", "fuse", "block_n", "block_v", "block_h",
+                     "bf16_matmul", "interpret"),
+)
+def lc_rwmd_fused(
+    emb: Array,      # (v, m) float
+    q_ids: Array,    # (B, h) int32
+    q_w: Array,      # (B, h) float (0 = padding)
+    r_ids: Array,    # (n, h1) int32 resident ELL ids
+    r_w: Array,      # (n, h1) float resident weights (0 = padding)
+    *,
+    vocab_chunk: int = 512,
+    fuse: str = "scan",
+    block_n: int = 8,
+    block_v: int = 256,
+    block_h: int = 128,
+    bf16_matmul: bool = False,
+    interpret: bool | None = None,
+) -> Array:
+    """Streaming phase-1→phase-2: D (n, B) f32 without a full Z (v, B).
+
+    Scans the vocabulary in ``vocab_chunk``-sized chunks; each chunk's Z tile
+    is produced, immediately consumed into the running D accumulator, and
+    discarded, so the peak intermediate is (vocab_chunk, B) instead of the
+    seed pipeline's (v, B).
+
+    ``fuse``:
+      "kernel" — one fused pallas_call per chunk (fused_stream.py): Z lives
+                 only in a VMEM scratch cache, never in HBM.
+      "scan"   — double-buffered composition of the phase-1 kernel and the
+                 blocked SpMM kernel per chunk (Z bounded at (chunk, B) HBM).
+      "jnp"    — pure-jnp streaming oracle (XLA:CPU reference + tests).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    v, m = emb.shape
+    b, h = q_ids.shape
+    n, h1 = r_ids.shape
+
+    # Chunk size aligned to the vocab subtile; vocab padded to chunk multiple.
+    bv = min(block_v, vocab_chunk)
+    vc = -(-vocab_chunk // bv) * bv
+    emb_f = _pad_to(_pad_to(emb.astype(jnp.float32), 128, axis=1), vc, axis=0)
+    n_chunks = emb_f.shape[0] // vc
+    t = emb_f[q_ids.reshape(-1)].reshape(b, h, emb_f.shape[1])
+    valid = (q_w > 0).astype(jnp.float32)
+
+    r_ids_p = _pad_to(r_ids, block_n, axis=0)
+    r_w_p = _pad_to(r_w.astype(jnp.float32), block_n, axis=0)
+
+    emb_chunks = emb_f.reshape(n_chunks, vc, emb_f.shape[1])
+    offsets = jnp.arange(n_chunks, dtype=jnp.int32) * vc
+
+    def chunk_step(d_acc, xs):
+        e_c, lo = xs
+        rel = r_ids_p - lo
+        inb = (rel >= 0) & (rel < vc)
+        rel_c = jnp.clip(rel, 0, vc - 1).astype(jnp.int32)
+        w_m = r_w_p * inb.astype(jnp.float32)
+        if fuse == "kernel":
+            d_c = _fs.fused_lc_rwmd_chunk_pallas(
+                e_c, t, valid, rel_c, w_m,
+                block_v=bv, block_n=block_n, bf16_matmul=bf16_matmul,
+                interpret=interpret,
+            )[:, :b]
+        elif fuse == "scan":
+            z = _phase1_padded(
+                e_c, t, valid, vc, block_v=bv, block_h=block_h,
+                bf16_matmul=bf16_matmul, interpret=interpret,
+            )
+            z_p = _pad_to(z, 128, axis=1)
+            d_c = _sp.spmm_ell_pallas(
+                rel_c, w_m, z_p, block_n=block_n, interpret=interpret,
+            )[:, :b]
+        elif fuse == "jnp":
+            from repro.core.distances import sq_dists
+
+            sq = sq_dists(e_c, t.reshape(b * h, -1), bf16_matmul=bf16_matmul)
+            sq = jnp.where(valid.reshape(-1)[None, :] > 0, sq, _INF)
+            z = jnp.sqrt(jnp.maximum(jnp.min(sq.reshape(vc, b, h), axis=2), 0.0))
+            d_c = jnp.einsum("nh,nhb->nb", w_m, z[rel_c])
+        else:
+            raise ValueError(f"unknown fuse mode {fuse!r}")
+        return d_acc + d_c, None
+
+    d0 = jnp.zeros((r_ids_p.shape[0], b), jnp.float32)
+    d, _ = jax.lax.scan(chunk_step, d0, (emb_chunks, offsets), unroll=2)
+    return d[:n]
 
 
 @functools.partial(

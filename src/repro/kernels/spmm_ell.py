@@ -1,28 +1,36 @@
-"""Pallas TPU kernel: LC-RWMD Phase 2 — ELL-format SpMM via scalar prefetch.
+"""Pallas TPU kernels: LC-RWMD Phase 2 — ELL-format SpMM via scalar prefetch.
 
 Computes ``D[i, j] = Σ_p w[i, p] · Z[ids[i, p], j]`` (sparse resident matrix
 times the dense Phase-1 output).  The paper uses CUSPARSE CSR SpMM; TPUs
 have no sparse unit, so we use the canonical Pallas *scalar-prefetch*
 embedding-gather pattern: the ELL column-id array rides in SMEM and steers
-the BlockSpec index_map, so each grid step DMAs exactly the Z row it needs
+the BlockSpec index_maps, so each grid step DMAs exactly the Z rows it needs
 into VMEM — random-access gather expressed as block choreography.
 
-Grid: ``(n // block_n, h)`` — outer over doc tiles, inner over ELL slots;
-the output block for doc tile i is revisited across all h slots and
-accumulated in VMEM (written back once at the end by Pallas).
+Three formulations (see EXPERIMENTS.md §Perf for the HBM-traffic model):
 
-Blocks:
-  z row tile (block_n rows gathered ONE slot at a time): (1, B)
-    index (i, p, ids) -> row ids[...]  — one gathered Z row per (doc, slot)
-  would give grid (n, h); instead we gather a (1, B) row per *sub-step* by
-  flattening (doc-in-tile) into the grid:  grid = (n, h), block_n folded in.
+``spmm_ell_pallas`` (blocked gather, the default):
+  Grid ``(n // block_n, h)`` — outer over doc *tiles*, inner over ELL slots.
+  Each step gathers ``block_n`` Z rows at once: the Z operand is passed
+  ``block_n`` times, each copy with its own ids-steered index_map, so the
+  pipeline issues ``block_n`` (1, B) row DMAs per step instead of one.
+  This cuts grid steps from the seed's ``n·h`` to ``(n/block_n)·h`` and
+  lets the DMA engine overlap the row fetches of a whole doc tile.
 
-For simplicity and correctness-first, this kernel uses grid (n, h) with one
-doc per outer step; the hillclimbed variant (see EXPERIMENTS.md §Perf) uses
-the dense one-hot matmul formulation instead, which is MXU-bound.
+``spmm_ell_dense_pallas`` (one-hot MXU formulation):
+  Grid ``(n // block_n, v // block_v)``.  Per step, the (block_n, h) id tile
+  is expanded into a one-hot accumulator A[i, c] = Σ_p w[i,p]·[ids[i,p]=c]
+  over the current vocab subtile, and ``A @ Z_tile`` runs on the MXU.  Dense
+  compares cost n·h·v VPU ops total, so this only wins for small vocab
+  chunks — exactly the fused-streaming regime (fused_stream.py reuses it).
+
+``spmm_ell_naive_pallas`` (the seed kernel, kept as the recorded baseline):
+  Grid ``(n, h)``, one doc × one ELL slot per step, one (1, B) row DMA each.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -30,14 +38,128 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _spmm_kernel(ids_ref, w_ref, z_ref, out_ref):
-    # ids_ref: SMEM (n, h) int32 (scalar-prefetch operand)
-    # w_ref:   VMEM (1, h) f32 — weights of the current doc
-    # z_ref:   VMEM (1, B) f32 — the gathered Z row for (doc i, slot p)
-    # out_ref: VMEM (1, B) f32 — accumulator for doc i (revisited over p)
-    del ids_ref  # consumed by the index_map, not the body
+# ---------------------------------------------------------------------------
+# Blocked gather formulation (default)
+# ---------------------------------------------------------------------------
+def _spmm_blocked_kernel(ids_ref, w_ref, *refs, block_n: int):
+    # ids_ref: SMEM (n, h) int32 (scalar-prefetch operand; consumed by the
+    #          index_maps, not the body)
+    # w_ref:   VMEM (block_n, h) f32 — weights of the current doc tile
+    # refs:    block_n gathered Z rows (1, B) f32, then out (block_n, B) f32
+    del ids_ref
+    z_refs, out_ref = refs[:-1], refs[-1]
     p = pl.program_id(1)
-    w = w_ref[0, p]  # scalar weight of slot p
+
+    @pl.when(p == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    for j in range(block_n):
+        out_ref[j, :] += w_ref[j, p] * z_refs[j][0, :]
+
+
+def spmm_ell_pallas(
+    ids: jax.Array,   # (n, h) int32 ELL column ids (0 at padding)
+    w: jax.Array,     # (n, h) f32 weights (0 at padding)
+    z: jax.Array,     # (v, B) f32 dense Phase-1 output
+    *,
+    block_n: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked ELL SpMM: grid (n // block_n, h), block_n row DMAs per step.
+
+    Requires ``n % block_n == 0`` (ops.spmm_ell pads); padding docs carry
+    weight 0 everywhere, so their gathered rows contribute nothing.
+    """
+    n, h = ids.shape
+    v, b = z.shape
+    if n % block_n != 0:
+        raise ValueError(f"n={n} not a multiple of block_n={block_n}")
+
+    def _row_map(i, p, ids, j):
+        return (ids[i * block_n + j, p], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // block_n, h),
+        in_specs=[pl.BlockSpec((block_n, h), lambda i, p, ids: (i, 0))]  # w
+        + [pl.BlockSpec((1, b), functools.partial(_row_map, j=j))        # z rows
+           for j in range(block_n)],
+        out_specs=pl.BlockSpec((block_n, b), lambda i, p, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_spmm_blocked_kernel, block_n=block_n),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
+        interpret=interpret,
+    )(ids, w, *([z] * block_n))
+
+
+# ---------------------------------------------------------------------------
+# Dense one-hot MXU formulation (small vocab chunks / fused streaming)
+# ---------------------------------------------------------------------------
+def _spmm_dense_kernel(ids_ref, w_ref, z_ref, out_ref, *, block_v: int):
+    # ids_ref: VMEM (block_n, h) int32; w_ref: VMEM (block_n, h) f32
+    # z_ref:   VMEM (block_v, B) f32 — current vocab subtile of Z
+    # out_ref: VMEM (block_n, B) f32 — accumulated across vocab subtiles
+    j = pl.program_id(1)
+    ids = ids_ref[...]
+    w = w_ref[...]
+    bn, h = ids.shape
+    cols = j * block_v + jax.lax.broadcasted_iota(jnp.int32, (bn, h, block_v), 2)
+    a = jnp.sum((ids[:, :, None] == cols).astype(jnp.float32) * w[:, :, None],
+                axis=1)                                   # (block_n, block_v)
+    contrib = jax.lax.dot_general(
+        a, z_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = contrib
+
+    @pl.when(j > 0)
+    def _acc():
+        out_ref[...] += contrib
+
+
+def spmm_ell_dense_pallas(
+    ids: jax.Array,   # (n, h) int32
+    w: jax.Array,     # (n, h) f32
+    z: jax.Array,     # (v, B) f32
+    *,
+    block_n: int = 8,
+    block_v: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """One-hot MXU SpMM: grid (n // block_n, v // block_v)."""
+    n, h = ids.shape
+    v, b = z.shape
+    if n % block_n != 0 or v % block_v != 0:
+        raise ValueError(
+            f"n={n} / v={v} not multiples of block_n={block_n} / block_v={block_v}")
+    grid = (n // block_n, v // block_v)
+    return pl.pallas_call(
+        functools.partial(_spmm_dense_kernel, block_v=block_v),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_v, b), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, b), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
+        interpret=interpret,
+    )(ids, w, z)
+
+
+# ---------------------------------------------------------------------------
+# Seed one-row-at-a-time kernel (recorded baseline for kernels_bench)
+# ---------------------------------------------------------------------------
+def _spmm_naive_kernel(ids_ref, w_ref, z_ref, out_ref):
+    del ids_ref
+    p = pl.program_id(1)
+    w = w_ref[0, p]
 
     @pl.when(p == 0)
     def _init():
@@ -48,27 +170,23 @@ def _spmm_kernel(ids_ref, w_ref, z_ref, out_ref):
         out_ref[...] += w * z_ref[...]
 
 
-def spmm_ell_pallas(
-    ids: jax.Array,   # (n, h) int32 ELL column ids (0 at padding)
-    w: jax.Array,     # (n, h) f32 weights (0 at padding)
-    z: jax.Array,     # (v, B) f32 dense Phase-1 output
-    *,
-    interpret: bool = False,
+def spmm_ell_naive_pallas(
+    ids: jax.Array, w: jax.Array, z: jax.Array, *, interpret: bool = False
 ) -> jax.Array:
+    """The seed (n, h) grid: one doc × one ELL slot × one (1, B) DMA per step."""
     n, h = ids.shape
     v, b = z.shape
-
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n, h),
         in_specs=[
-            pl.BlockSpec((1, h), lambda i, p, ids: (i, 0)),        # w
-            pl.BlockSpec((1, b), lambda i, p, ids: (ids[i, p], 0)),  # z row
+            pl.BlockSpec((1, h), lambda i, p, ids: (i, 0)),
+            pl.BlockSpec((1, b), lambda i, p, ids: (ids[i, p], 0)),
         ],
         out_specs=pl.BlockSpec((1, b), lambda i, p, ids: (i, 0)),
     )
     return pl.pallas_call(
-        _spmm_kernel,
+        _spmm_naive_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, b), jnp.float32),
         interpret=interpret,

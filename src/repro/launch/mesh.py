@@ -23,8 +23,9 @@ MODEL_AXIS = "model"
 
 
 def _mk(shape, axes):
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    from repro.compat import make_mesh
+
+    return make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

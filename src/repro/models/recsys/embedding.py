@@ -88,11 +88,12 @@ def build_sharded_bag_lookup(mesh: jax.sharding.Mesh, *, n_fields: int):
         v_local = table_local.shape[0]
         return sharded_lookup_local(table_local, rows, v_local)
 
-    shmapped = jax.shard_map(
+    from repro.compat import shard_map as compat_shard_map
+
+    shmapped = compat_shard_map(
         kernel, mesh=mesh,
         in_specs=(P(MODEL_AXIS, None), bspec),
         out_specs=P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
                     None, None),
-        check_vma=False,
     )
     return jax.jit(shmapped)

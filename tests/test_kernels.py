@@ -35,8 +35,9 @@ def test_phase1_kernel_matches_ref(v, m, b, h):
     q_ids, q_w = _mk_queries(rng, b, h, v)
     want = ref.lc_rwmd_phase1_ref(emb, q_ids, q_w)
     got = ops.lc_rwmd_phase1(emb, q_ids, q_w, block_v=128, interpret=True)
-    # atol floor: sqrt(eps)*|e| gram-expansion noise on near-zero distances.
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-2)
+    # atol floor: sqrt(eps·|e|²) gram-expansion noise on near-zero distances
+    # (self-match words); for m=300, |e|² ~ m gives ~2e-2 worst case.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=2.5e-2)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -78,6 +79,53 @@ def test_spmm_ell_kernel_matches_ref(n, h, v, b):
     want = ref.spmm_ell_ref(ids, w, z)
     got = ops.spmm_ell(ids, w, z, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,h,v,b,block_n", [
+    (16, 8, 512, 4, 8),     # divisible
+    (13, 8, 256, 3, 8),     # n padded up to the doc tile
+    (32, 4, 128, 5, 16),    # wider tile
+    (7, 16, 512, 2, 8),     # n < block_n
+])
+def test_spmm_blocked_matches_ref(n, h, v, b, block_n):
+    rng = np.random.default_rng(hash((n, h, v, b, block_n)) % 2**31)
+    ids = jnp.asarray(rng.integers(0, v, size=(n, h)).astype(np.int32))
+    w = rng.uniform(0, 1, size=(n, h)).astype(np.float32)
+    w[rng.random(size=w.shape) < 0.3] = 0.0
+    w = jnp.asarray(w)
+    z = jnp.asarray(rng.normal(size=(v, b)).astype(np.float32))
+    want = ref.spmm_ell_ref(ids, w, z)
+    got = ops.spmm_ell(ids, w, z, block_n=block_n, mode="blocked", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,h,v,b,block_v", [
+    (16, 8, 256, 4, 64),
+    (13, 8, 200, 3, 64),    # n AND v padded
+    (8, 4, 128, 9, 128),
+])
+def test_spmm_dense_matches_ref(n, h, v, b, block_v):
+    rng = np.random.default_rng(hash((n, h, v, b, block_v)) % 2**31)
+    ids = jnp.asarray(rng.integers(0, v, size=(n, h)).astype(np.int32))
+    w = rng.uniform(0, 1, size=(n, h)).astype(np.float32)
+    w[rng.random(size=w.shape) < 0.3] = 0.0
+    w = jnp.asarray(w)
+    z = jnp.asarray(rng.normal(size=(v, b)).astype(np.float32))
+    want = ref.spmm_ell_ref(ids, w, z)
+    got = ops.spmm_ell(ids, w, z, block_v=block_v, mode="dense", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_spmm_blocked_equals_naive():
+    """The blocked grid must reproduce the seed one-row-per-step grid exactly."""
+    rng = np.random.default_rng(99)
+    ids = jnp.asarray(rng.integers(0, 128, size=(24, 8)).astype(np.int32))
+    w = jnp.asarray(rng.uniform(0, 1, size=(24, 8)).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=(128, 6)).astype(np.float32))
+    naive = ops.spmm_ell(ids, w, z, mode="naive", interpret=True)
+    blocked = ops.spmm_ell(ids, w, z, mode="blocked", interpret=True)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(naive),
+                               rtol=1e-6, atol=1e-6)
 
 
 @pytest.mark.parametrize("n,h1,h2,m,b", [

@@ -2,8 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import lc_rwmd_one_sided, lc_rwmd_symmetric
 from repro.data.docs import DocSet, make_docset
