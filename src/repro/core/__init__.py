@@ -15,7 +15,15 @@ from repro.core.pipeline import PrunedWMDResult, knn_classify, pruned_wmd_topk
 from repro.core.rwmd import rwmd_many_vs_many, rwmd_one_vs_many, rwmd_pair
 from repro.core.topk import TopK, distributed_topk, merge_topk, topk_smallest
 from repro.core.wcd import centroids, wcd_many_vs_many, wcd_one_vs_many
-from repro.core.wmd import emd_exact_lp, sinkhorn_log, wmd_one_vs_many, wmd_pair
+from repro.core.wmd import (
+    emd_exact_lp,
+    sinkhorn_log,
+    sinkhorn_log_batched,
+    wmd_batched,
+    wmd_batched_from_t,
+    wmd_one_vs_many,
+    wmd_pair,
+)
 
 __all__ = [
     "dists", "sq_dists",
@@ -26,5 +34,6 @@ __all__ = [
     "rwmd_many_vs_many", "rwmd_one_vs_many", "rwmd_pair",
     "TopK", "distributed_topk", "merge_topk", "topk_smallest",
     "centroids", "wcd_many_vs_many", "wcd_one_vs_many",
-    "emd_exact_lp", "sinkhorn_log", "wmd_one_vs_many", "wmd_pair",
+    "emd_exact_lp", "sinkhorn_log", "sinkhorn_log_batched",
+    "wmd_batched", "wmd_batched_from_t", "wmd_one_vs_many", "wmd_pair",
 ]

@@ -268,10 +268,12 @@ class LCRWMDEngine:
                 self._topk_impl, static_argnums=(0,),
                 donate_argnums=(1, 2) if donate else (),
             )
+            self._rerank = jax.jit(self._rerank_impl, static_argnums=(0, 1))
         else:
             self._one_sided = self._one_sided_impl
             self._symmetric = self._symmetric_impl
             self._topk = self._topk_impl
+            self._rerank = self._rerank_impl
 
     # -- internals --------------------------------------------------------
     def gather_queries(self, q_ids: Array) -> Array:
@@ -327,6 +329,26 @@ class LCRWMDEngine:
 
         return topk_lib.topk_smallest_cols(self._symmetric_impl(q_ids, q_w), k)
 
+    def _rerank_impl(
+        self, k: int, sink_items: tuple, q_ids: Array, q_w: Array,
+        cand_idx: Array,
+    ):
+        from repro.core import topk as topk_lib
+        from repro.core.wmd import wmd_candidate_values
+
+        n, h1 = self.resident.ids.shape
+        # The candidates' word embeddings come straight from the engine's
+        # PRE-GATHERED resident targets (built once at engine construction),
+        # not from a per-call emb[ids] gather.
+        flat = cand_idx.reshape(-1)
+        vals = wmd_candidate_values(
+            self._t_r.reshape(n, h1, -1)[flat], self.resident.weights[flat],
+            self.gather_queries(q_ids), q_w,
+            use_kernel=self.use_kernel, bf16_matmul=self.bf16_matmul,
+            interpret=self.interpret or None, **dict(sink_items),
+        )
+        return topk_lib.topk_from_candidates(vals, cand_idx, k)
+
     # -- public entry points ----------------------------------------------
     def one_sided(self, queries: DocSet) -> Array:
         """D1 (n, B): cost of moving each resident doc into each query."""
@@ -339,6 +361,22 @@ class LCRWMDEngine:
     def topk(self, queries: DocSet, k: int):
         """Per-query top-k smallest symmetric LC-RWMD: TopK (B, k)."""
         return self._topk(k, queries.ids, queries.weights)
+
+    def rerank_topk(
+        self, queries: DocSet, cand_indices: Array, k: int,
+        *, sinkhorn_kw: dict | None = None,
+    ):
+        """Batched Sinkhorn-WMD re-rank of per-query candidate doc ids.
+
+        ``cand_indices`` (B, budget) int32 resident doc ids (e.g. an RWMD
+        top-``budget``); all B·budget pairs are solved in ONE batched
+        log-domain Sinkhorn call fed by the engine's pre-gathered resident
+        embeddings, then the k smallest WMD per query are returned as a
+        :class:`~repro.core.topk.TopK` with global doc ids.
+        """
+        items = tuple(sorted((sinkhorn_kw or {}).items()))
+        return self._rerank(k, items, queries.ids, queries.weights,
+                            cand_indices)
 
 
 def restrict_vocab(resident: DocSet, emb: Array) -> tuple[DocSet, Array, Array]:

@@ -26,8 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import topk as topk_lib
-from repro.core.lc_rwmd import LCRWMDEngine, lc_rwmd_one_sided, lc_rwmd_symmetric
-from repro.core.wmd import wmd_pair
+from repro.core.lc_rwmd import LCRWMDEngine, lc_rwmd_symmetric
+from repro.core.wmd import wmd_candidate_values
 from repro.data.docs import DocSet
 
 Array = jax.Array
@@ -50,6 +50,8 @@ def pruned_wmd_topk(
     refine_budget: int | None = None,
     sinkhorn_kw: dict | None = None,
     engine: LCRWMDEngine | None = None,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
 ) -> PrunedWMDResult:
     """Top-k WMD per query via the RWMD pruning cascade. jit-compatible.
 
@@ -57,50 +59,63 @@ def pruned_wmd_topk(
     and embeddings — stage 1 then reuses its restricted vocabulary and
     pre-gathered resident tensors instead of re-deriving them per call
     (the serve path in serving/query_server.py passes its engine here).
+
+    The refine stage runs ALL ``(B, budget)`` candidate pairs as ONE batched
+    log-domain Sinkhorn solve (:func:`repro.core.wmd.sinkhorn_log_batched`)
+    instead of the historical per-candidate ``jax.lax.map`` — per-pair
+    convergence masks keep exact pairwise semantics while the whole stage is
+    GEMM-shaped.  ``use_kernel`` routes it through the fused Pallas kernel
+    (cost tiles built in VMEM, see kernels/sinkhorn_wmd.py); defaults to the
+    engine's ``use_kernel`` flag when an engine is given.
     """
     sinkhorn_kw = sinkhorn_kw or {}
     n = resident.n_docs
-    b = queries.n_docs
     budget = refine_budget or min(4 * k, n)
-    budget = min(budget, n)
+    budget = min(max(budget, k), n)  # bootstrap needs k candidates
+    if use_kernel is None:
+        use_kernel = engine is not None and engine.use_kernel
 
     # Stage 1: LC-RWMD lower bounds for every (resident, query) pair.
     if engine is not None:
         d_rwmd = engine.symmetric(queries)  # (n, B)
     else:
         d_rwmd = lc_rwmd_symmetric(resident, queries, emb)  # (n, B)
-    rwmd_topk = topk_lib.topk_smallest_cols(d_rwmd, k)  # (B, k)
 
-    # Stage 2+4 fused under a fixed budget: WMD on the `budget` best docs.
+    # Stage 2+4 fused under a fixed budget: WMD on the `budget` best docs,
+    # all (B, budget) pairs in one batched solve.  One top-k pass over the
+    # (n, B) matrix serves both outputs: lax.top_k sorts ascending, so the
+    # RWMD-only top-k is the first k columns of the candidate set.
     cand = topk_lib.topk_smallest_cols(d_rwmd, budget)  # (B, budget)
+    rwmd_topk = topk_lib.TopK(cand.dists[:, :k], cand.indices[:, :k])
+    flat = cand.indices.reshape(-1)                     # (B*budget,)
+    wmd_vals = wmd_candidate_values(
+        emb[resident.ids[flat]], resident.weights[flat],
+        emb[queries.ids], queries.weights,
+        use_kernel=use_kernel,
+        bf16_matmul=engine.bf16_matmul if engine is not None else False,
+        interpret=interpret or None,
+        **sinkhorn_kw,
+    )  # (B, budget)
 
-    def refine_query(q_ids, q_w, cand_idx, cand_rwmd):
-        def one(i):
-            return wmd_pair(
-                resident.ids[i], resident.weights[i], q_ids, q_w, emb,
-                **sinkhorn_kw,
-            )
-
-        wmd_vals = jax.lax.map(one, cand_idx)  # (budget,)
-        # Cut-off L = k-th smallest WMD among the first k candidates (the
-        # paper's bootstrap); docs with RWMD >= L are provably outside top-k.
-        boot = jax.lax.top_k(-wmd_vals[:k], k)[0]
-        cutoff = -boot[-1]
-        needed = cand_rwmd < cutoff  # docs whose bound does NOT prune them
-        n_refined = jnp.sum(needed) + k
-        # Exactness: every non-candidate doc had RWMD >= max candidate RWMD;
-        # if the largest *candidate* RWMD >= cutoff, nothing outside the
-        # budget can beat the cutoff either -> provably exact.
-        exact = cand_rwmd[-1] >= cutoff
-        final = topk_lib.topk_smallest(wmd_vals, k)
-        return topk_lib.TopK(final.dists, cand_idx[final.indices]), (
-            n_refined, exact, cutoff)
-
-    (final, (n_refined, exact, cutoff)) = jax.vmap(refine_query)(
-        queries.ids, queries.weights, cand.indices, cand.dists
-    )
+    # Cut-off L = k-th smallest WMD among the first k candidates (the
+    # paper's bootstrap); docs with RWMD >= L are provably outside top-k.
+    cutoff = jnp.max(wmd_vals[:, :k], axis=1)           # (B,)
+    needed = cand.dists < cutoff[:, None]  # docs whose bound does NOT prune
+    # WMD spend: the k bootstrap docs are always evaluated; beyond them only
+    # the unpruned candidates cost a solve (the bootstrap docs must not be
+    # double-counted even when they also satisfy ``needed``).
+    n_refined = k + jnp.sum(needed[:, k:], axis=1)
+    # Exactness: every non-candidate doc had RWMD >= max candidate RWMD;
+    # if the largest *candidate* RWMD >= cutoff, nothing outside the
+    # budget can beat the cutoff either -> provably exact.  When the budget
+    # covers the whole resident set there ARE no non-candidate docs, so the
+    # result is unconditionally exact regardless of the cutoff test.
+    exact = cand.dists[:, -1] >= cutoff
+    if budget == n:
+        exact = jnp.ones_like(exact)
+    topk = topk_lib.topk_from_candidates(wmd_vals, cand.indices, k)
     return PrunedWMDResult(
-        topk=final, rwmd_topk=rwmd_topk, n_refined=n_refined,
+        topk=topk, rwmd_topk=rwmd_topk, n_refined=n_refined,
         pruned_exact=exact, cutoff=cutoff,
     )
 

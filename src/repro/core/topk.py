@@ -33,6 +33,19 @@ def topk_smallest_cols(d: Array, k: int) -> TopK:
     return topk_smallest(d.T, k)  # (B, k)
 
 
+def topk_from_candidates(vals: Array, cand_indices: Array, k: int) -> TopK:
+    """Top-k of per-candidate values, mapped back to global doc ids.
+
+    vals (B, budget) distances for the candidates named by ``cand_indices``
+    (B, budget); returns a TopK of (B, min(k, budget)) with global ids.
+    """
+    final = topk_smallest(vals, min(k, vals.shape[-1]))
+    return TopK(
+        final.dists,
+        jnp.take_along_axis(cand_indices, final.indices, axis=-1),
+    )
+
+
 def merge_topk(parts: Sequence[TopK], k: int) -> TopK:
     """Merge several TopK candidate sets (same leading dims) into one."""
     d = jnp.concatenate([p.dists for p in parts], axis=-1)

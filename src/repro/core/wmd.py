@@ -113,6 +113,246 @@ def sinkhorn_log(
     return SinkhornResult(cost=cost_val, n_iters=iters, marginal_err=errs[-1])
 
 
+def sinkhorn_log_batched(
+    a: Array,
+    b: Array,
+    cost: Array,
+    *,
+    eps: float = 0.01,
+    eps_scaling: int = 4,
+    eps_start: float = 1.0,
+    max_iters: int = 500,
+    tol: float = 1e-5,
+    absorb_every: int = 4,
+) -> SinkhornResult:
+    """Batched stabilized Sinkhorn with ε-scaling over a leading pairs axis.
+
+    a:(P,h1), b:(P,h2), cost:(P,h1,h2).  All P problems share ONE
+    ``while_loop`` per ε level with **per-pair convergence masks**: a pair
+    whose row-marginal violation drops below ``tol`` freezes its scalings
+    (and its iteration counter) while the still-live pairs keep iterating, so
+    the result matches P independent :func:`sinkhorn_log` solves but a
+    single slow pair no longer serializes the rest.
+
+    Unlike the scalar reference, the hot loop runs in the **stabilized
+    exp domain** (Sinkhorn-Knopp with log-domain absorption, the parallel
+    formulation of Tithi & Petrini 2020/2021): each iteration is two batched
+    kernel matvecs ``K v`` / ``Kᵀ u`` plus elementwise divisions — zero
+    transcendentals — and every ``absorb_every`` iterations the scalings
+    ``u, v`` are absorbed into the log-domain potentials ``f, g`` and the
+    kernel matrix is refreshed, which reproduces the log-domain iterates
+    exactly (same update map, same per-iteration marginal-error stopping
+    rule) while keeping f32 magnitudes bounded.
+
+    Returns a :class:`SinkhornResult` of per-pair (P,) arrays.
+    """
+    p, h1 = a.shape
+    h2 = b.shape[1]
+    valid_a = a > 0
+    valid_b = b > 0
+    big = jnp.where(
+        valid_a[:, :, None] & valid_b[:, None, :], cost, jnp.inf
+    )  # (P, h1, h2)  — masked slots get K = exp(-inf) = 0 exactly
+
+    if eps_scaling <= 1:
+        eps_levels = jnp.array([eps], dtype=jnp.float32)
+    else:
+        eps_levels = jnp.geomspace(eps_start, eps, eps_scaling).astype(jnp.float32)
+
+    def run_level(carry, level_eps):
+        f, g, it_total = carry
+
+        def refresh(f, g):
+            """Row-max-stabilized kernel: K'[i,:] = exp(lk[i,:] - m[i]).
+
+            Every live row's max entry is exactly 1, so ``K' v`` never
+            underflows to a zero row (the log-domain LSE trick applied once
+            per refresh instead of once per iteration).  The stored row
+            scaling is ``w = u * exp(m)``: the u-update ``w' = a / (K' v)``
+            and v-update ``t = K'ᵀ w'`` are then algebraically identical to
+            the unscaled iteration, and ``w ⊙ (K' v)`` IS the true row
+            marginal.
+            """
+            lk = (f[:, :, None] + g[:, None, :] - big) / level_eps
+            m = jnp.max(lk, axis=2)
+            m = jnp.where(m > -1e35, m, 0.0)  # fully-masked rows
+            return jnp.exp(lk - m[:, :, None]), m
+
+        kmat0, m0 = refresh(f, g)
+        w0 = jnp.ones((p, h1), jnp.float32)
+        v0 = jnp.ones((p, h2), jnp.float32)
+        s0 = jnp.sum(kmat0, axis=2)  # K' v with v = 1
+
+        def cond(state):
+            it, err = state[-2], state[-1]
+            return jnp.logical_and(it < max_iters, jnp.any(err > tol))
+
+        def body(state):
+            w, v, s, kmat, m, f, g, it_pair, it, err = state
+            live = err > tol  # (P,) pairs still iterating at this level
+            # One Sinkhorn-Knopp sweep: u-update, v-update, and the row
+            # marginal of the NEW iterate — whose matvec is also next
+            # iteration's ``s``, so the error check costs nothing extra.
+            w_new = jnp.where(valid_a, a / jnp.maximum(s, 1e-30), 0.0)
+            t = jnp.einsum("pij,pi->pj", kmat, w_new)
+            v_new = jnp.where(valid_b, b / jnp.maximum(t, 1e-30), 0.0)
+            # The min/max clamps keep a cold-start transient (columns of K'
+            # fully underflown before the first absorption re-centers the
+            # potentials) finite instead of spawning 0·inf NaNs; clamped
+            # iterates are repaired by the next log-domain refresh.
+            s_new = jnp.minimum(
+                jnp.einsum("pij,pj->pi", kmat, v_new), 3e37)
+            err_new = jnp.sum(
+                jnp.abs(jnp.minimum(w_new * s_new, 3e37) - a), axis=1)
+            # Converged pairs freeze: scalings, error and per-pair iteration
+            # counts stop exactly where the pairwise solver would stop them.
+            w = jnp.where(live[:, None], w_new, w)
+            v = jnp.where(live[:, None], v_new, v)
+            s = jnp.where(live[:, None], s_new, s)
+            err = jnp.where(live, err_new, err)
+            it_pair = it_pair + live.astype(jnp.int32)
+            it = it + 1
+
+            def absorb(args):
+                w, v, s, kmat, m, f, g = args
+                # Fold the live pairs' scalings into the potentials and
+                # refresh K'; frozen pairs keep w, v, m (their K'/m recompute
+                # is idempotent: f, g unchanged since they froze).
+                f2 = jnp.where(
+                    live[:, None] & valid_a,
+                    f + level_eps * (jnp.log(jnp.maximum(w, 1e-30)) - m), f)
+                g2 = jnp.where(
+                    live[:, None] & valid_b,
+                    g + level_eps * jnp.log(jnp.maximum(v, 1e-30)), g)
+                k2, m2 = refresh(f2, g2)
+                # True u resets to 1, stored as w = exp(m): the end-of-level
+                # fold-in (log w - m) then contributes exactly zero.  |m| is
+                # clamped so w stays finite through cold-start overshoots
+                # (the next sweep recomputes w from scratch anyway).
+                w2 = jnp.where(
+                    live[:, None], jnp.exp(jnp.clip(m2, -80.0, 80.0)), w)
+                v2 = jnp.where(live[:, None], 1.0, v)
+                m2 = jnp.where(live[:, None], m2, m)
+                s2 = jnp.einsum("pij,pj->pi", k2, v2)
+                s2 = jnp.where(live[:, None], s2, s)
+                return w2, v2, s2, k2, m2, f2, g2
+
+            w, v, s, kmat, m, f, g = jax.lax.cond(
+                it % absorb_every == 0, absorb, lambda x: x,
+                (w, v, s, kmat, m, f, g))
+            return w, v, s, kmat, m, f, g, it_pair, it, err
+
+        w, v, _, _, m, f, g, it_pair, _, err = jax.lax.while_loop(
+            cond, body,
+            (w0, v0, s0, kmat0, m0, f, g, jnp.zeros((p,), jnp.int32),
+             jnp.int32(0), jnp.full((p,), jnp.inf, jnp.float32)),
+        )
+        # End-of-level absorption carries pure log-domain potentials forward.
+        f = jnp.where(
+            valid_a,
+            f + level_eps * (jnp.log(jnp.maximum(w, 1e-30)) - m), _NEG_INF)
+        g = jnp.where(
+            valid_b, g + level_eps * jnp.log(jnp.maximum(v, 1e-30)), _NEG_INF)
+        return (f, g, it_total + it_pair), err
+
+    f0 = jnp.zeros((p, h1), jnp.float32)
+    g0 = jnp.zeros((p, h2), jnp.float32)
+    (f, g, iters), errs = jax.lax.scan(
+        run_level, (f0, g0, jnp.zeros((p,), jnp.int32)), eps_levels
+    )
+
+    log_p = (f[:, :, None] + g[:, None, :] - big) / eps_levels[-1]
+    # Row-max stabilization: the per-row shift cancels in the row rescale
+    # below, but keeps exp() finite when an unconverged pair's potentials
+    # overshoot (exp(log_p) alone can overflow to inf -> inf/inf NaNs).
+    mrow = jnp.max(log_p, axis=2, keepdims=True)
+    mrow = jnp.where(mrow > -1e35, mrow, 0.0)
+    plan = jnp.exp(log_p - mrow)
+    row = jnp.sum(plan, axis=2)
+    # Rescale rows to satisfy the row marginal exactly (rounding step of
+    # Altschuler et al. 2017) so the reported cost is a valid feasible value.
+    plan = plan * jnp.where(valid_a, a / jnp.maximum(row, 1e-30), 0.0)[:, :, None]
+    cost_val = jnp.sum(
+        jnp.where(jnp.isfinite(big), plan * big, 0.0), axis=(1, 2)
+    )
+    return SinkhornResult(cost=cost_val, n_iters=iters, marginal_err=errs[-1])
+
+
+def wmd_batched_from_t(
+    t1: Array, w1: Array, t2: Array, w2: Array, **sink_kw
+) -> Array:
+    """Batched WMD from pre-gathered word embeddings.
+
+    t1:(P,h1,m), w1:(P,h1), t2:(P,h2,m), w2:(P,h2) — builds the (P,h1,h2)
+    cost stack and solves all pairs in one batched Sinkhorn.  Returns (P,).
+    """
+    c = jax.vmap(dists)(t1, t2)
+    return sinkhorn_log_batched(w1, w2, c, **sink_kw).cost
+
+
+def wmd_batched(
+    ids1: Array, w1: Array, ids2: Array, w2: Array, emb: Array, **sink_kw
+) -> Array:
+    """Batched WMD over P histogram pairs; ids*:(P,h), w*:(P,h). Returns (P,)."""
+    return wmd_batched_from_t(emb[ids1], w1, emb[ids2], w2, **sink_kw)
+
+
+# Solver kwargs understood by the fused Pallas kernel; the jnp-only extras
+# are dropped when routing to it, and anything else is rejected up front so
+# a typo'd option cannot silently change behavior on one backend only.
+_KERNEL_SINK_KEYS = frozenset(
+    {"eps", "eps_scaling", "eps_start", "max_iters", "tol"})
+_JNP_ONLY_SINK_KEYS = frozenset({"absorb_every"})
+
+
+def wmd_batched_dispatch(
+    t1: Array, w1: Array, t2: Array, w2: Array,
+    *,
+    use_kernel: bool = False,
+    bf16_matmul: bool = False,
+    interpret: bool | None = None,
+    **sink_kw,
+) -> Array:
+    """Backend dispatch for batched WMD from pre-gathered embeddings.
+
+    The single place that maps a user ``sinkhorn_kw`` dict onto either the
+    jnp batched solver or the fused Pallas kernel (whose signature accepts
+    only :data:`_KERNEL_SINK_KEYS`); every rerank/refine path routes through
+    here so the two backends cannot drift.
+    """
+    unknown = set(sink_kw) - _KERNEL_SINK_KEYS - _JNP_ONLY_SINK_KEYS
+    if unknown:
+        raise TypeError(f"unknown sinkhorn kwargs: {sorted(unknown)}")
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        kw = {k: v for k, v in sink_kw.items() if k in _KERNEL_SINK_KEYS}
+        return kops.sinkhorn_wmd(
+            t1, w1, t2, w2, bf16_matmul=bf16_matmul, interpret=interpret,
+            **kw)
+    return wmd_batched_from_t(t1, w1, t2, w2, **sink_kw)
+
+
+def wmd_candidate_values(
+    t1_flat: Array, w1_flat: Array, t_q: Array, q_w: Array, **dispatch_kw
+) -> Array:
+    """(B, budget) WMD values for B-major flattened candidate pairs.
+
+    t1_flat/w1_flat: (B·budget, h1[, m]) candidate word embeddings+weights
+    in query-major order (row ``q*budget + c`` is query q's c-th candidate);
+    t_q/q_w: (B, h2, m)/(B, h2) query tensors, expanded here.  Shared by
+    every refine/rerank site so the pair expansion cannot drift.
+    """
+    b = t_q.shape[0]
+    budget = t1_flat.shape[0] // b
+    vals = wmd_batched_dispatch(
+        t1_flat, w1_flat,
+        jnp.repeat(t_q, budget, axis=0), jnp.repeat(q_w, budget, axis=0),
+        **dispatch_kw,
+    )
+    return vals.reshape(b, budget)
+
+
 def wmd_pair(
     ids1: Array, w1: Array, ids2: Array, w2: Array, emb: Array, **sink_kw
 ) -> Array:

@@ -91,6 +91,9 @@ def build_serve_step(
     bf16_matmul: bool = True,
     phase1_full_mesh: bool = True,
     engine=None,
+    rerank_wmd: bool = False,
+    rerank_budget: int | None = None,
+    wmd_kw: dict | None = None,
 ):
     """Returns jit'd ``serve(resident, queries, emb) -> ServeResult``.
 
@@ -115,18 +118,35 @@ def build_serve_step(
     candidates (k per query, not n), then the max-bound re-ranks them.  This
     recovers the paper's tighter max(D1, D2ᵀ) bound at serving time without
     the full second LC pass (which only pays off in all-pairs mode).
+
+    ``rerank_wmd=True`` finishes the pruning cascade in the serve step: the
+    LC-RWMD (optionally refined) top-``rerank_budget`` (default 2k) become
+    candidates for ONE batched Sinkhorn-WMD call (``wmd_kw`` forwarded), and
+    the final top-k is by WMD.  With an engine this routes through
+    :meth:`LCRWMDEngine.rerank_topk` (pre-gathered resident embeddings feed
+    the fused kernel directly); without one, through the jnp batched solver.
     """
     batch_axes = _batch_axes(mesh)
     n_batch_shards = 1
     for a in batch_axes:
         n_batch_shards *= mesh.shape[a]
     n_model = mesh.shape[MODEL_AXIS]
+    # With reranking on, the mesh top-k stage widens to the candidate budget
+    # and the batched WMD stage narrows back down to k.  The budget can
+    # never exceed the resident corpus (pipeline clamps its analogue the
+    # same way); the engine path clamps here, the engine-less path clamps
+    # at trace time when the resident shapes are known.
+    kc = (rerank_budget or 2 * k) if rerank_wmd else k
+    kc = max(kc, k)  # the rerank stage must keep at least k candidates
+    if engine is not None:
+        kc = min(kc, engine.resident.n_docs)
 
     if engine is not None:
         return _build_engine_serve_step(
-            mesh, engine, k=k, refine=refine, bf16_matmul=bf16_matmul,
+            mesh, engine, k=k, kc=kc, refine=refine, bf16_matmul=bf16_matmul,
             phase1_full_mesh=phase1_full_mesh, batch_axes=batch_axes,
             n_batch_shards=n_batch_shards, n_model=n_model,
+            rerank_wmd=rerank_wmd, wmd_kw=wmd_kw,
         )
 
     def kernel(r_ids, r_w, q_ids, q_w, emb_local):
@@ -168,8 +188,9 @@ def build_serve_step(
             offset = offset * mesh.shape[a] + jax.lax.axis_index(a)
         offset = offset * n_local
 
-        tk = distributed_topk(d_local, k, axis_names=batch_axes,
-                              shard_offset=offset)
+        tk = distributed_topk(
+            d_local, min(kc, n_local * n_batch_shards),
+            axis_names=batch_axes, shard_offset=offset)
         return (tk.dists, tk.indices), d_local
 
     rspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
@@ -194,14 +215,16 @@ def build_serve_step(
         tk = TopK(tk_d, tk_i)
         if refine:
             tk = _symmetric_refine(resident, queries, emb, tk)
+        if rerank_wmd:
+            tk = _wmd_rerank(resident, queries, emb, tk, k, wmd_kw)
         return ServeResult(topk=tk, d_local=d_local)
 
     return serve
 
 
 def _build_engine_serve_step(
-    mesh, engine, *, k, refine, bf16_matmul, phase1_full_mesh,
-    batch_axes, n_batch_shards, n_model,
+    mesh, engine, *, k, kc, refine, bf16_matmul, phase1_full_mesh,
+    batch_axes, n_batch_shards, n_model, rerank_wmd=False, wmd_kw=None,
 ):
     """Engine-backed serve step: resident state prepped + placed at build.
 
@@ -255,7 +278,7 @@ def _build_engine_serve_step(
         row = offset + jnp.arange(n_local, dtype=jnp.int32)
         d_local = jnp.where((row < n_real)[:, None], d_local, _INF)
 
-        tk = distributed_topk(d_local, k, axis_names=batch_axes,
+        tk = distributed_topk(d_local, kc, axis_names=batch_axes,
                               shard_offset=offset)
         return (tk.dists, tk.indices), d_local
 
@@ -278,6 +301,12 @@ def _build_engine_serve_step(
         if refine:
             tk = _symmetric_refine(
                 engine.resident, queries, engine.emb_full, tk)
+        if rerank_wmd:
+            # Finish the cascade: ONE fused batched Sinkhorn-WMD call over
+            # the (B, kc) candidates, fed by the engine's pre-gathered
+            # resident embeddings.
+            tk = engine.rerank_topk(queries, tk.indices, k,
+                                    sinkhorn_kw=wmd_kw)
         return ServeResult(topk=tk, d_local=d_local[:n_real])
 
     return serve
@@ -302,6 +331,23 @@ def _symmetric_refine(
         return TopK(d[order], cand_idx[order])
 
     return jax.vmap(per_query)(queries.ids, queries.weights, tk.indices, tk.dists)
+
+
+def _wmd_rerank(
+    resident: DocSet, queries: DocSet, emb: Array, tk: TopK, k: int,
+    wmd_kw: dict | None,
+) -> TopK:
+    """Re-rank (B, budget) candidates by batched Sinkhorn-WMD; keep top-k."""
+    from repro.core.topk import topk_from_candidates
+    from repro.core.wmd import wmd_candidate_values
+
+    flat = tk.indices.reshape(-1)
+    vals = wmd_candidate_values(
+        emb[resident.ids[flat]], resident.weights[flat],
+        emb[queries.ids], queries.weights,
+        **(wmd_kw or {}),
+    )
+    return topk_from_candidates(vals, tk.indices, k)
 
 
 def build_allpairs_d1(

@@ -19,6 +19,7 @@ from repro.kernels import fused_stream as _fs
 from repro.kernels import lc_rwmd_phase1 as _p1
 from repro.kernels import rwmd_pairwise as _rw
 from repro.kernels import segment_spmm as _seg
+from repro.kernels import sinkhorn_wmd as _sk
 from repro.kernels import spmm_ell as _sp
 
 Array = jax.Array
@@ -286,6 +287,59 @@ def rwmd_pairwise(
         block_n=block_n, bf16_matmul=bf16_matmul, interpret=interpret,
     )
     return out[:n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("eps", "eps_scaling", "eps_start", "max_iters", "tol",
+                     "block_p", "bf16_matmul", "interpret"),
+)
+def sinkhorn_wmd(
+    t1: Array,    # (P, h1, m) candidate word embeddings (pre-gathered)
+    w1: Array,    # (P, h1) weights (0 = padding)
+    t2: Array,    # (P, h2, m) query word embeddings
+    w2: Array,    # (P, h2)
+    *,
+    eps: float = 0.01,
+    eps_scaling: int = 4,
+    eps_start: float = 1.0,
+    max_iters: int = 500,
+    tol: float = 1e-5,
+    block_p: int = 8,
+    bf16_matmul: bool = False,
+    interpret: bool | None = None,
+) -> Array:
+    """Fused batched Sinkhorn-WMD costs (P,) f32 — cost tiles built in VMEM.
+
+    The (P, h1, h2) cost stack is never materialized in HBM: each pair
+    block's tiles are produced from the gathered embeddings on the fly and
+    consumed by the in-kernel ε-scaled scaling loop (per-pair convergence
+    masks within the block).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    p, h1, _ = t1.shape
+    h2 = t2.shape[1]
+    # Lane-align the embedding and word axes; padding words carry weight 0
+    # (masked in log domain inside the kernel).  Padding PAIRS (P axis) are
+    # all-zero-weight problems that converge on their first iteration.
+    t1 = _pad_to(t1.astype(jnp.float32), 128, axis=2)
+    t2 = _pad_to(t2.astype(jnp.float32), 128, axis=2)
+    t1 = _pad_to(t1, 128, axis=1)
+    t2 = _pad_to(t2, 128, axis=1)
+    w1 = _pad_to(w1.astype(jnp.float32), 128, axis=1)
+    w2 = _pad_to(w2.astype(jnp.float32), 128, axis=1)
+    t1 = _pad_to(t1, block_p, axis=0)
+    t2 = _pad_to(t2, block_p, axis=0)
+    w1 = _pad_to(w1, block_p, axis=0)
+    w2 = _pad_to(w2, block_p, axis=0)
+    out = _sk.sinkhorn_wmd_pallas(
+        t1, w1, t2, w2,
+        eps=eps, eps_scaling=eps_scaling, eps_start=eps_start,
+        max_iters=max_iters, tol=tol, block_p=block_p,
+        bf16_matmul=bf16_matmul, interpret=interpret,
+    )
+    return out[:p]
 
 
 @functools.partial(

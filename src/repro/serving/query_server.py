@@ -18,15 +18,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import topk_smallest
 from repro.core.lc_rwmd import LCRWMDEngine
-from repro.core.pipeline import pruned_wmd_topk
 from repro.data.docs import DocSet, make_docset
 from repro.distributed.lcrwmd_dist import build_serve_step
 
@@ -52,11 +50,14 @@ class QueryServer:
         self.cfg = cfg
         # All resident-side prep (vocab restriction, padding, placement on
         # the mesh, resident-embedding gathers) happens ONCE here; per-flush
-        # work is only the transient query batch.
+        # work is only the transient query batch.  The WMD re-rank (when
+        # enabled) runs INSIDE the serve step as one fused batched Sinkhorn
+        # call over the LC-RWMD top-2k candidates — no second full pass.
         self.engine = LCRWMDEngine(resident, self.emb)
         self._serve = build_serve_step(
             mesh, k=cfg.k, refine=cfg.refine_symmetric, bf16_matmul=False,
-            engine=self.engine)
+            engine=self.engine, rerank_wmd=cfg.rerank_wmd,
+            rerank_budget=2 * cfg.k, wmd_kw=cfg.wmd_kw)
         self._pending: list[tuple[np.ndarray, np.ndarray]] = []
         self.stats = {"queries": 0, "batches": 0, "wmd_reranks": 0}
 
@@ -65,15 +66,13 @@ class QueryServer:
         """Queue one query histogram (padded to h_max by the caller/vectorizer)."""
         self._pending.append((ids, weights))
 
-    def flush(self):
-        """Serve everything pending; returns list of (doc_ids, distances)."""
-        if not self._pending:
-            return []
-        qs, self._pending = self._pending, []
+    def _flush_chunk(self, qs: list[tuple[np.ndarray, np.ndarray]]):
+        """Serve one ≤max_batch chunk at the FIXED (max_batch, h) shape."""
         h = self.cfg.h_max
-        # Pad the batch to max_batch so the engine serve step compiles once;
-        # padding queries carry weight 0 everywhere and are sliced off below.
-        b = max(len(qs), self.cfg.max_batch)
+        # Pad the batch to exactly max_batch so the engine serve step
+        # compiles once; padding queries carry weight 0 everywhere and are
+        # sliced off below.
+        b = self.cfg.max_batch
         ids = np.zeros((b, h), np.int32)
         w = np.zeros((b, h), np.float32)
         for i, (qi, qw) in enumerate(qs):
@@ -84,32 +83,46 @@ class QueryServer:
         res = self._serve(queries)
         self.stats["queries"] += len(qs)
         self.stats["batches"] += 1
+        if self.cfg.rerank_wmd:
+            self.stats["wmd_reranks"] += len(qs)
 
-        out = []
         tk_i = np.asarray(res.topk.indices)
         tk_d = np.asarray(res.topk.dists)
-        if self.cfg.rerank_wmd:
-            real = make_docset(
-                np.where(w[: len(qs)] > 0, ids[: len(qs)], -1), w[: len(qs)])
-            rr = pruned_wmd_topk(
-                self.resident, real, self.emb, k=self.cfg.k,
-                refine_budget=2 * self.cfg.k, sinkhorn_kw=self.cfg.wmd_kw,
-                engine=self.engine)
-            tk_i = np.asarray(rr.topk.indices)
-            tk_d = np.asarray(rr.topk.dists)
-            self.stats["wmd_reranks"] += len(qs)
-        for j in range(len(qs)):
-            out.append((tk_i[j], tk_d[j]))
+        return [(tk_i[j], tk_d[j]) for j in range(len(qs))]
+
+    def flush(self):
+        """Serve everything pending; returns list of (doc_ids, distances).
+
+        Pending queries are chunked into fixed ``max_batch``-sized serve
+        calls, so an overflow (> max_batch pending) never compiles a new
+        batch shape.
+        """
+        qs, self._pending = self._pending, []
+        out = []
+        for lo in range(0, len(qs), self.cfg.max_batch):
+            out.extend(self._flush_chunk(qs[lo : lo + self.cfg.max_batch]))
         return out
 
     def serve_stream(self, stream: Sequence[tuple[np.ndarray, np.ndarray]]):
-        """Batched streaming: yields answers in arrival order."""
-        t0 = time.perf_counter()
+        """Batched streaming: yields answers in arrival order.
+
+        The staleness clock starts when the FIRST query of a batch arrives
+        (not at the previous flush), so a steady trickle fills batches
+        instead of flushing them nearly empty.
+        """
+        # Arrival time of the oldest pending query; queries already pending
+        # when the stream starts inherit the stream start as their clock.
+        t0 = time.perf_counter() if self._pending else None
         for q in stream:
+            if not self._pending:
+                t0 = time.perf_counter()
             self.submit(*q)
             full = len(self._pending) >= self.cfg.max_batch
-            stale = (time.perf_counter() - t0) > self.cfg.max_wait_s
+            stale = (
+                t0 is not None
+                and (time.perf_counter() - t0) > self.cfg.max_wait_s
+            )
             if full or stale:
                 yield from self.flush()
-                t0 = time.perf_counter()
+                t0 = None
         yield from self.flush()

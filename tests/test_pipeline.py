@@ -66,6 +66,29 @@ def test_pruned_wmd_budget_accounting(small_corpus):
     assert (n_ref >= 4).all() and (n_ref <= 32 + 4).all()
 
 
+def test_pruned_wmd_n_refined_not_double_counted(small_corpus):
+    """The k bootstrap docs must not be counted again when their RWMD also
+    falls below the cutoff: n_refined can never exceed the budget."""
+    ds = small_corpus.docs
+    emb = jnp.asarray(small_corpus.emb)
+    budget = 12
+    res = pruned_wmd_topk(ds[:40], ds[50:54], emb, k=4, refine_budget=budget,
+                          sinkhorn_kw=dict(eps=0.05, eps_scaling=2, max_iters=100))
+    n_ref = np.asarray(res.n_refined)
+    assert (n_ref >= 4).all() and (n_ref <= budget).all(), n_ref
+
+
+def test_pruned_wmd_budget_equals_n_is_exact(small_corpus):
+    """budget == n leaves no non-candidate docs, so the result is
+    unconditionally exact — pruned_exact must report True."""
+    ds = small_corpus.docs
+    emb = jnp.asarray(small_corpus.emb)
+    n = 24
+    res = pruned_wmd_topk(ds[:n], ds[30:34], emb, k=4, refine_budget=n,
+                          sinkhorn_kw=dict(eps=0.05, eps_scaling=2, max_iters=100))
+    assert bool(np.asarray(res.pruned_exact).all())
+
+
 def test_knn_classify_majority(small_corpus):
     from repro.core.topk import TopK
     labels = jnp.asarray(np.array([0, 0, 1, 1, 2], dtype=np.int32))
