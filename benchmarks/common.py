@@ -1,4 +1,5 @@
-"""Shared benchmark utilities: timing, result records, corpus caching."""
+"""Shared benchmark utilities: timing, result records, corpus caching,
+and the structural HBM-footprint probe used by the tiling assertions."""
 
 from __future__ import annotations
 
@@ -7,6 +8,7 @@ import time
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 
 @dataclasses.dataclass
@@ -31,6 +33,37 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2] * 1e6
+
+
+def intermediate_shapes(fn, *args) -> set[tuple[int, ...]]:
+    """All f32 intermediate shapes in fn's jaxpr, recursing into sub-jaxprs
+    (jit/scan bodies) — a structural HBM-footprint probe.  Shared by the
+    kernel and workloads benches (and their tests): tiling contracts are
+    asserted against the traced program, not against runtime telemetry."""
+    import jax.core as jcore
+
+    shapes: set[tuple[int, ...]] = set()
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            for ov in eqn.outvars:
+                aval = getattr(ov, "aval", None)
+                if getattr(aval, "dtype", None) == jnp.float32:
+                    shapes.add(tuple(aval.shape))
+            for val in eqn.params.values():
+                if isinstance(val, jcore.ClosedJaxpr):
+                    walk(val.jaxpr)
+                elif isinstance(val, jcore.Jaxpr):
+                    walk(val)
+                elif isinstance(val, (list, tuple)):
+                    for x in val:
+                        if isinstance(x, jcore.ClosedJaxpr):
+                            walk(x.jaxpr)
+                        elif isinstance(x, jcore.Jaxpr):
+                            walk(x)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return shapes
 
 
 _CORPora: dict = {}

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BenchResult, time_fn
+from benchmarks.common import BenchResult, intermediate_shapes, time_fn
 from repro.kernels import ops, ref
 
 
@@ -33,35 +33,6 @@ def _vmem_bytes_fused(block_v=256, block_n=8, h=32, h1=32, m=384, b=8,
     return 4 * (block_v * m + b * h * m + b * h + 2 * block_n * h1
                 + block_n * b_pad + vocab_chunk * b_pad
                 + block_n * h1 * block_v)
-
-
-def _intermediate_shapes(fn, *args) -> set[tuple[int, ...]]:
-    """All f32 intermediate shapes in fn's jaxpr, recursing into sub-jaxprs
-    (jit/scan bodies) — a structural HBM-footprint probe."""
-    import jax.core as jcore
-
-    shapes: set[tuple[int, ...]] = set()
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            for ov in eqn.outvars:
-                aval = getattr(ov, "aval", None)
-                if getattr(aval, "dtype", None) == jnp.float32:
-                    shapes.add(tuple(aval.shape))
-            for val in eqn.params.values():
-                if isinstance(val, jcore.ClosedJaxpr):
-                    walk(val.jaxpr)
-                elif isinstance(val, jcore.Jaxpr):
-                    walk(val)
-                elif isinstance(val, (list, tuple)):
-                    for x in val:
-                        if isinstance(x, jcore.ClosedJaxpr):
-                            walk(x.jaxpr)
-                        elif isinstance(x, jcore.Jaxpr):
-                            walk(x)
-
-    walk(jax.make_jaxpr(fn)(*args).jaxpr)
-    return shapes
 
 
 def run() -> list[BenchResult]:
@@ -113,9 +84,9 @@ def run() -> list[BenchResult]:
     # bounded at (vocab_chunk, B) inside the scan body.
     z_bytes_two_phase = 4 * v * b
     z_bytes_fused = 4 * vocab_chunk * b
-    shapes_two_phase = _intermediate_shapes(
+    shapes_two_phase = intermediate_shapes(
         two_phase, emb, q_ids, q_w, r_ids, r_w)
-    shapes_fused = _intermediate_shapes(fused, emb, q_ids, q_w, r_ids, r_w)
+    shapes_fused = intermediate_shapes(fused, emb, q_ids, q_w, r_ids, r_w)
     assert (v, b) in shapes_two_phase, "positive control: seed path has Z (v,B)"
     assert (v, b) not in shapes_fused, (
         "fused streaming materialized a full Z (v, B) intermediate")

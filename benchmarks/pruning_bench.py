@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import BenchResult, cached_corpus, time_fn
-from repro.core import lc_rwmd_symmetric, pruned_wmd_topk
+from repro.core import AdaptiveRefineBudget, lc_rwmd_symmetric, pruned_wmd_topk
 from repro.core import topk as topk_lib
 from repro.core.wmd import wmd_batched, wmd_pair
 
@@ -65,6 +65,37 @@ def _refine_stage_bench() -> BenchResult:
         })
 
 
+def _adaptive_budget_bench() -> BenchResult:
+    """Budget trajectory of the adaptive helper on a fresh corpus: start at
+    the old static 4·k default and grow until the cascade is provably exact
+    (ROADMAP item: pruned_exact-driven sizing replaces the static guess)."""
+    k = 8
+    c = cached_corpus(n_docs=256, vocab_size=2048, emb_dim=48, h_max=16,
+                      mean_h=10.0, n_classes=4, seed=7)
+    emb = jnp.asarray(c.emb)
+    queries = c.docs[10:18]
+    sink = dict(eps=0.02, eps_scaling=3, max_iters=200)
+    ab = AdaptiveRefineBudget(k=k, n_resident=c.docs.n_docs)
+    trajectory = []  # budgets actually evaluated, in order
+    rounds = 0
+    for rounds in range(1, 9):
+        used = ab.budget
+        trajectory.append(used)
+        res = pruned_wmd_topk(c.docs, queries, emb, k=k,
+                              refine_budget=used, sinkhorn_kw=sink)
+        exact = np.asarray(res.pruned_exact)
+        # Stop on exactness, saturation, or steady state (failure rate
+        # within target -> update() makes no progress).
+        if exact.all() or ab.saturated or ab.update(exact) == used:
+            break
+    return BenchResult("pruning_adaptive_budget", 0.0, derived={
+        "k": k, "start_budget": trajectory[0], "final_budget": trajectory[-1],
+        "rounds": rounds, "trajectory": "->".join(map(str, trajectory)),
+        "exact_at_final": bool(exact.all()),
+        "static_default_was": 4 * k,
+    })
+
+
 def run() -> list[BenchResult]:
     c = cached_corpus(n_docs=256, vocab_size=2048, emb_dim=48, h_max=16,
                       mean_h=10.0, n_classes=4, seed=7)
@@ -83,4 +114,5 @@ def run() -> list[BenchResult]:
             "paper_claim": "smaller k -> more pruning",
         }))
     out.append(_refine_stage_bench())
+    out.append(_adaptive_budget_bench())
     return out

@@ -49,6 +49,7 @@ def main() -> None:
         pruning_bench,
         scaling_analysis,
         table3_complexity,
+        workloads_bench,
     )
 
     modules = {
@@ -59,6 +60,7 @@ def main() -> None:
         "pruning_bench": pruning_bench,
         "kernels_bench": kernels_bench,
         "scaling_analysis": scaling_analysis,
+        "workloads_bench": workloads_bench,
     }
     print("name,us_per_call,derived")
     failed = []

@@ -11,10 +11,25 @@ from repro.core.lc_rwmd import (
     phase2_spmm,
     restrict_vocab,
 )
-from repro.core.pipeline import PrunedWMDResult, knn_classify, pruned_wmd_topk
-from repro.core.rwmd import rwmd_many_vs_many, rwmd_one_vs_many, rwmd_pair
+from repro.core.pipeline import (
+    AdaptiveRefineBudget,
+    PrunedWMDResult,
+    knn_classify,
+    pruned_wmd_topk,
+)
+from repro.core.rwmd import (
+    rwmd_many_vs_many,
+    rwmd_one_vs_many,
+    rwmd_pair,
+    rwmd_pairs_from_t,
+)
 from repro.core.topk import TopK, distributed_topk, merge_topk, topk_smallest
-from repro.core.wcd import centroids, wcd_many_vs_many, wcd_one_vs_many
+from repro.core.wcd import (
+    centroids,
+    centroids_from_t,
+    wcd_many_vs_many,
+    wcd_one_vs_many,
+)
 from repro.core.wmd import (
     emd_exact_lp,
     sinkhorn_log,
@@ -30,10 +45,11 @@ __all__ = [
     "LCRWMDEngine", "lc_rwmd_one_sided", "lc_rwmd_streaming",
     "lc_rwmd_symmetric", "phase1_z", "phase1_z_from_t", "phase2_spmm",
     "restrict_vocab",
-    "PrunedWMDResult", "knn_classify", "pruned_wmd_topk",
-    "rwmd_many_vs_many", "rwmd_one_vs_many", "rwmd_pair",
+    "AdaptiveRefineBudget", "PrunedWMDResult", "knn_classify",
+    "pruned_wmd_topk",
+    "rwmd_many_vs_many", "rwmd_one_vs_many", "rwmd_pair", "rwmd_pairs_from_t",
     "TopK", "distributed_topk", "merge_topk", "topk_smallest",
-    "centroids", "wcd_many_vs_many", "wcd_one_vs_many",
+    "centroids", "centroids_from_t", "wcd_many_vs_many", "wcd_one_vs_many",
     "emd_exact_lp", "sinkhorn_log", "sinkhorn_log_batched",
     "wmd_batched", "wmd_batched_from_t", "wmd_one_vs_many", "wmd_pair",
 ]

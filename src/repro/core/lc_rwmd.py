@@ -269,11 +269,17 @@ class LCRWMDEngine:
                 donate_argnums=(1, 2) if donate else (),
             )
             self._rerank = jax.jit(self._rerank_impl, static_argnums=(0, 1))
+            self._symmetric_resident = jax.jit(self._symmetric_resident_impl)
+            self._phase1_resident = jax.jit(self._phase1_resident_impl)
+            self._one_sided_rows = jax.jit(self._one_sided_rows_impl)
         else:
             self._one_sided = self._one_sided_impl
             self._symmetric = self._symmetric_impl
             self._topk = self._topk_impl
             self._rerank = self._rerank_impl
+            self._symmetric_resident = self._symmetric_resident_impl
+            self._phase1_resident = self._phase1_resident_impl
+            self._one_sided_rows = self._one_sided_rows_impl
 
     # -- internals --------------------------------------------------------
     def gather_queries(self, q_ids: Array) -> Array:
@@ -307,11 +313,10 @@ class LCRWMDEngine:
         t_q = self.emb_full[q_ids.reshape(-1)]
         return self._d1_from_t(t_q, (q_w > 0).reshape(-1), b)
 
-    def _symmetric_impl(self, q_ids: Array, q_w: Array) -> Array:
-        b, h2 = q_ids.shape
+    def _symmetric_from_t(self, t_q: Array, q_w: Array, b: int) -> Array:
+        """Symmetric bound from pre-gathered (B*h2, m) query targets."""
+        h2 = q_w.shape[1]
         n, h1 = self.resident.ids.shape
-        # ONE query gather feeds both directions.
-        t_q = self.emb_full[q_ids.reshape(-1)]           # (B*h2, m)
         valid_q = (q_w > 0).reshape(-1)
         d1 = self._d1_from_t(t_q, valid_q, b)            # (n, B)
 
@@ -323,6 +328,45 @@ class LCRWMDEngine:
         z2 = safe_sqrt(jnp.min(sq.reshape(b * h2, n, h1), axis=2))
         d2 = jnp.einsum("bh,bhn->bn", q_w, z2.reshape(b, h2, n))
         return jnp.maximum(d1, d2.T)
+
+    def _symmetric_impl(self, q_ids: Array, q_w: Array) -> Array:
+        b = q_ids.shape[0]
+        # ONE query gather feeds both directions.
+        t_q = self.emb_full[q_ids.reshape(-1)]           # (B*h2, m)
+        return self._symmetric_from_t(t_q, q_w, b)
+
+    def _resident_query_tensors(self, idx: Array):
+        """Query-side tensors for resident docs ``idx`` (B,), sliced from the
+        PRE-GATHERED resident targets — no embedding-table gather at all."""
+        n, h1 = self.resident.ids.shape
+        b = idx.shape[0]
+        safe = jnp.clip(idx, 0, n - 1)  # padded tile slots gather row n-1 ...
+        t_q = self._t_r.reshape(n, h1, -1)[safe].reshape(b * h1, -1)
+        # ... but carry zero weights, so they behave as empty histograms.
+        q_w = jnp.where((idx >= 0)[:, None] & (idx < n)[:, None],
+                        self.resident.weights[safe], 0.0)
+        return t_q, q_w, b
+
+    def _symmetric_resident_impl(self, idx: Array) -> Array:
+        return self._symmetric_from_t(*self._resident_query_tensors(idx))
+
+    def _phase1_resident_impl(self, idx: Array) -> Array:
+        t_q, q_w, b = self._resident_query_tensors(idx)
+        return phase1_z_from_t(
+            self.emb_restricted, t_q, (q_w > 0).reshape(-1), b,
+            bf16_matmul=self.bf16_matmul, vocab_chunk=self.vocab_chunk,
+        )
+
+    def _one_sided_rows_impl(self, row_idx: Array, z: Array) -> Array:
+        n = self.resident.n_docs
+        safe = jnp.clip(row_idx, 0, n - 1)
+        sub = DocSet(
+            ids=self.resident_restricted.ids[safe],
+            weights=jnp.where(
+                (row_idx >= 0)[:, None] & (row_idx < n)[:, None],
+                self.resident_restricted.weights[safe], 0.0),
+        )
+        return phase2_spmm(sub, z)
 
     def _topk_impl(self, k: int, q_ids: Array, q_w: Array):
         from repro.core import topk as topk_lib
@@ -361,6 +405,51 @@ class LCRWMDEngine:
     def topk(self, queries: DocSet, k: int):
         """Per-query top-k smallest symmetric LC-RWMD: TopK (B, k)."""
         return self._topk(k, queries.ids, queries.weights)
+
+    # -- corpus-analytics (query-tile) entry points ------------------------
+    #
+    # The corpus workloads in repro.workloads stream tiles of the RESIDENT
+    # corpus itself through the engine as the query side.  These entry points
+    # accept (pre-padded, ELL) resident-doc tiles by INDEX and feed them from
+    # the engine's pre-gathered resident tensors, so a tile costs zero
+    # embedding-table gathers.  Out-of-range indices (tile padding) act as
+    # empty histograms: their distance columns come out +inf (symmetric) or
+    # garbage-but-masked (one-sided rows); schedulers mask by global index.
+    def resident_tile(self, idx: Array) -> DocSet:
+        """The (pre-padded) resident docs named by ``idx`` as a query DocSet."""
+        n = self.resident.n_docs
+        safe = jnp.clip(jnp.asarray(idx, jnp.int32), 0, n - 1)
+        inb = (jnp.asarray(idx) >= 0) & (jnp.asarray(idx) < n)
+        return DocSet(
+            ids=self.resident.ids[safe],
+            weights=jnp.where(inb[:, None], self.resident.weights[safe], 0.0),
+        )
+
+    def symmetric_resident(self, idx: Array) -> Array:
+        """Tight symmetric bound (n, B) whose queries are resident docs ``idx``.
+
+        Both directions run from the engine's pre-gathered resident targets
+        (no per-call ``emb[ids]`` gather), and phase 1 sees only the
+        restricted vocabulary — exact, since resident words are by
+        construction inside ``v_e``.
+        """
+        return self._symmetric_resident(jnp.asarray(idx, jnp.int32))
+
+    def phase1_resident(self, idx: Array) -> Array:
+        """Phase-1 Z (v_e, B) for resident-doc queries ``idx`` — the tile
+        primitive of the all-pairs scheduler (computed ONCE per corpus tile,
+        then consumed by many cheap :meth:`one_sided_rows` phase-2 calls)."""
+        return self._phase1_resident(jnp.asarray(idx, jnp.int32))
+
+    def one_sided_rows(self, row_idx: Array, z: Array) -> Array:
+        """Phase-2 ELL SpMM restricted to resident rows ``row_idx``: (R, B).
+
+        ``z`` is a :meth:`phase1_resident` tile; the result is the one-sided
+        LC-RWMD block D1[row_idx, tile] — O(R·h) per query column instead of
+        O(n·h), which is what makes the pair-tiled all-pairs scan linear in
+        the number of visited blocks.
+        """
+        return self._one_sided_rows(jnp.asarray(row_idx, jnp.int32), z)
 
     def rerank_topk(
         self, queries: DocSet, cand_indices: Array, k: int,

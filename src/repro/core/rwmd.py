@@ -43,6 +43,29 @@ def rwmd_pair(
     return jnp.maximum(d12, d21)
 
 
+def rwmd_pairs_from_t(
+    t1: Array, w1: Array, t2: Array, w2: Array,
+    *, bf16_matmul: bool = False,
+) -> Array:
+    """Symmetric RWMD for P independent histogram pairs from PRE-GATHERED
+    embeddings: t1 (P, h1, m), w1 (P, h1), t2 (P, h2, m), w2 (P, h2) → (P,).
+
+    The candidate-pair analogue of :func:`rwmd_pair` — used by pruning-style
+    stages (e.g. the k-medoids WCD prefilter) that evaluate the relaxed bound
+    on a SUBSET of pairs instead of a full set-vs-set matrix, where the
+    O(P·h²·m) pairwise cost beats the O(B·h·n·h̄·m) swapped-direction term of
+    a full LC block.
+    """
+    c = jax.vmap(lambda a, b: dists(a, b, bf16_matmul=bf16_matmul))(t1, t2)
+    m1 = w1 > 0  # (P, h1)
+    m2 = w2 > 0  # (P, h2)
+    c_row = jnp.where(m2[:, None, :], c, _INF)
+    c_col = jnp.where(m1[:, :, None], c, _INF)
+    d12 = jnp.sum(w1 * jnp.where(m1, jnp.min(c_row, axis=2), 0.0), axis=1)
+    d21 = jnp.sum(w2 * jnp.where(m2, jnp.min(c_col, axis=1), 0.0), axis=1)
+    return jnp.maximum(d12, d21)
+
+
 def rwmd_one_vs_many(
     resident: DocSet, q_ids: Array, q_w: Array, emb: Array,
     *, bf16_matmul: bool = False,

@@ -20,8 +20,17 @@ Array = jax.Array
 
 def centroids(ds: DocSet, emb: Array) -> Array:
     """(n, m) f32 weighted-average embeddings (weights are L1-normalized)."""
-    t = emb[ds.ids]  # (n, h, m)
-    return jnp.einsum("nh,nhm->nm", ds.weights, t)
+    return centroids_from_t(ds.weights, emb[ds.ids])
+
+
+def centroids_from_t(weights: Array, t: Array) -> Array:
+    """Centroids from PRE-GATHERED word embeddings t (n, h, m), w (n, h).
+
+    The engine-friendly variant: callers holding ``LCRWMDEngine._t_r`` (the
+    pre-gathered resident targets) skip the ``emb[ids]`` gather entirely
+    (used by the k-medoids WCD prefilter in repro.workloads.clustering).
+    """
+    return jnp.einsum("nh,nhm->nm", weights, t)
 
 
 def wcd_many_vs_many(set1: DocSet, set2: DocSet, emb: Array) -> Array:

@@ -88,6 +88,61 @@ def make_corpus(spec: CorpusSpec) -> Corpus:
     return Corpus(docs=docs, labels=labels, emb=emb, spec=spec)
 
 
+def make_bimodal_corpus(spec: CorpusSpec) -> Corpus:
+    """Centroid-degenerate corpus: WCD-blind, RWMD-separable classes.
+
+    Each class ``c`` owns TWO word clusters placed antipodally at ``±u_c``
+    (``u_c`` a random direction scaled by ``emb_topic_scale``), and every
+    document draws its words in balanced halves from both clusters — so all
+    document CENTROIDS collapse to ≈0 regardless of class (WCD sees only
+    jitter), while word-level min-matching still separates classes (same- vs
+    cross-class word distances differ by the inter-direction gap).  This is
+    the regime where the paper's RWMD hierarchy (Fig. 11: WCD ≪ RWMD ≈ WMD
+    quality) shows up in CLUSTERING metrics rather than just kNN precision:
+    used by the workloads bench to quantify the k-medoids-vs-WCD gap.
+    """
+    rng = np.random.default_rng(spec.seed)
+    v, d, n = spec.vocab_size, spec.emb_dim, spec.n_docs
+
+    dirs = rng.normal(size=(spec.n_classes, d))
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    dirs *= spec.emb_topic_scale
+
+    # Vocab: class-major slices, each split into a +cluster and a −cluster.
+    word_class = np.arange(v) % spec.n_classes
+    word_sign = np.where((np.arange(v) // spec.n_classes) % 2 == 0, 1.0, -1.0)
+    emb = (word_sign[:, None] * dirs[word_class]
+           + rng.normal(0.0, spec.emb_word_scale, size=(v, d)))
+    emb = emb.astype(np.float32)
+
+    labels = rng.integers(0, spec.n_classes, size=n).astype(np.int32)
+    ids = np.zeros((n, spec.h_max), dtype=np.int32)
+    weights = np.zeros((n, spec.h_max), dtype=np.float32)
+    lengths = np.clip(rng.poisson(spec.mean_h, size=n), 4, spec.h_max)
+    class_words = [np.nonzero(word_class == c)[0] for c in range(spec.n_classes)]
+    for i in range(n):
+        cw = class_words[labels[i]]
+        pos = cw[word_sign[cw] > 0]
+        neg = cw[word_sign[cw] < 0]
+        h = lengths[i]
+        n_noise = int(round(h * spec.topic_noise))
+        # Clamp to the cluster populations: tiny vocab/class splits must not
+        # over-draw a without-replacement sample.
+        half = max(1, min((h - n_noise) // 2, len(pos), len(neg)))
+        chosen = np.concatenate([
+            rng.choice(pos, size=half, replace=False),
+            rng.choice(neg, size=half, replace=False),
+            rng.integers(0, v, size=n_noise),
+        ])
+        words, counts = np.unique(chosen, return_counts=True)
+        order = np.argsort(-counts)[: spec.h_max]
+        words, counts = words[order], counts[order]
+        ids[i, : len(words)] = words
+        weights[i, : len(words)] = counts
+    docs = make_docset(np.where(weights > 0, ids, -1), weights)
+    return Corpus(docs=docs, labels=labels, emb=emb, spec=spec)
+
+
 def table_iv_spec(which: str, scale: float = 1.0) -> CorpusSpec:
     """Paper Table IV statistics, shrunk by ``scale`` for CPU tractability.
 

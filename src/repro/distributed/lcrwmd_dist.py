@@ -94,6 +94,7 @@ def build_serve_step(
     rerank_wmd: bool = False,
     rerank_budget: int | None = None,
     wmd_kw: dict | None = None,
+    self_exclude: bool = False,
 ):
     """Returns jit'd ``serve(resident, queries, emb) -> ServeResult``.
 
@@ -125,6 +126,14 @@ def build_serve_step(
     the final top-k is by WMD.  With an engine this routes through
     :meth:`LCRWMDEngine.rerank_topk` (pre-gathered resident embeddings feed
     the fused kernel directly); without one, through the jnp batched solver.
+
+    ``self_exclude=True`` (engine path only) is the corpus-analytics mode:
+    the returned callable becomes ``serve(queries, query_ids)`` where
+    ``query_ids`` (B,) are the queries' GLOBAL resident-doc ids, and each
+    query's own resident row is masked to +inf INSIDE the mesh kernel before
+    top-k — tiles of the corpus can stream through the serve step as query
+    batches without self-matches eating a candidate slot (see
+    :func:`repro.workloads.corpus_distance.corpus_self_topk_distributed`).
     """
     batch_axes = _batch_axes(mesh)
     n_batch_shards = 1
@@ -146,8 +155,10 @@ def build_serve_step(
             mesh, engine, k=k, kc=kc, refine=refine, bf16_matmul=bf16_matmul,
             phase1_full_mesh=phase1_full_mesh, batch_axes=batch_axes,
             n_batch_shards=n_batch_shards, n_model=n_model,
-            rerank_wmd=rerank_wmd, wmd_kw=wmd_kw,
+            rerank_wmd=rerank_wmd, wmd_kw=wmd_kw, self_exclude=self_exclude,
         )
+    if self_exclude:
+        raise ValueError("self_exclude requires an engine-backed serve step")
 
     def kernel(r_ids, r_w, q_ids, q_w, emb_local):
         v_local = emb_local.shape[0]
@@ -225,6 +236,7 @@ def build_serve_step(
 def _build_engine_serve_step(
     mesh, engine, *, k, kc, refine, bf16_matmul, phase1_full_mesh,
     batch_axes, n_batch_shards, n_model, rerank_wmd=False, wmd_kw=None,
+    self_exclude=False,
 ):
     """Engine-backed serve step: resident state prepped + placed at build.
 
@@ -256,7 +268,7 @@ def _build_engine_serve_step(
     r_w = jax.device_put(r_w, NamedSharding(mesh, rspec))
     emb_r = jax.device_put(emb_r, NamedSharding(mesh, espec))
 
-    def kernel(rids, rw, t_q, q_valid, emb_local):
+    def kernel(rids, rw, t_q, q_valid, q_gid, emb_local):
         v_local = emb_local.shape[0]
         n_local = rids.shape[0]
         z_local = _z_from_t(emb_local, t_q, q_valid, bf16_matmul=bf16_matmul)
@@ -277,6 +289,11 @@ def _build_engine_serve_step(
         # Padded resident rows (doc-axis alignment) must never enter top-k.
         row = offset + jnp.arange(n_local, dtype=jnp.int32)
         d_local = jnp.where((row < n_real)[:, None], d_local, _INF)
+        if self_exclude:
+            # Corpus mode: each query IS a resident doc; its own row must
+            # not consume a candidate slot.  Masked locally (only the shard
+            # owning the row sees a match), before the top-k collective.
+            d_local = jnp.where(row[:, None] == q_gid[None, :], _INF, d_local)
 
         tk = distributed_topk(d_local, kc, axis_names=batch_axes,
                               shard_offset=offset)
@@ -285,19 +302,24 @@ def _build_engine_serve_step(
     shmapped = compat_shard_map(
         kernel,
         mesh=mesh,
-        in_specs=(rspec, rspec, P(None, None, None), P(None, None), espec),
+        in_specs=(rspec, rspec, P(None, None, None), P(None, None), P(None),
+                  espec),
         out_specs=((P(None, None), P(None, None)), rspec),
     )
 
     @jax.jit
-    def step(rids, rw, t_q, q_valid, emb_s):
-        (tk_d, tk_i), d_local = shmapped(rids, rw, t_q, q_valid, emb_s)
+    def step(rids, rw, t_q, q_valid, q_gid, emb_s):
+        (tk_d, tk_i), d_local = shmapped(rids, rw, t_q, q_valid, q_gid, emb_s)
         return TopK(tk_d, tk_i), d_local
 
-    def serve(queries: DocSet) -> ServeResult:
+    def serve(queries: DocSet, query_ids=None) -> ServeResult:
+        if self_exclude and query_ids is None:
+            raise ValueError("self_exclude serve step needs query_ids (B,)")
         t_q = engine.gather_queries(queries.ids)
         q_valid = (queries.weights > 0).astype(jnp.float32)
-        tk, d_local = step(r_ids, r_w, t_q, q_valid, emb_r)
+        q_gid = (jnp.asarray(query_ids, jnp.int32) if self_exclude
+                 else jnp.full((queries.n_docs,), -1, jnp.int32))
+        tk, d_local = step(r_ids, r_w, t_q, q_valid, q_gid, emb_r)
         if refine:
             tk = _symmetric_refine(
                 engine.resident, queries, engine.emb_full, tk)

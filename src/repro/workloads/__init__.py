@@ -1,0 +1,48 @@
+"""Corpus-analytics workloads on top of the LC-RWMD serve engine.
+
+The paper motivates LC-RWMD with three workloads — querying, clustering,
+and classifying large document sets.  ``repro.core`` + ``repro.serving``
+cover querying; this package covers the corpus-vs-corpus rest:
+
+  * :mod:`corpus_distance` — tiled all-pairs scheduling (self and
+    cross-set) with running top-k merges; the (n, n) matrix never
+    materializes.
+  * :mod:`clustering` — greedy k-centers seeding + k-medoids refinement
+    with a WCD prefilter and optional Sinkhorn-WMD rerank.
+  * :mod:`neighbors` — threshold / k-NN near-duplicate graphs and
+    duplicate-group extraction from the same tile stream.
+"""
+
+from repro.workloads.clustering import (
+    ClusterResult,
+    adjusted_rand_index,
+    kcenters,
+    kmedoids,
+    kmedoids_wcd_baseline,
+    purity,
+)
+from repro.workloads.corpus_distance import (
+    CorpusTopKResult,
+    SelfPairScheduler,
+    TileBlock,
+    corpus_self_topk,
+    corpus_self_topk_distributed,
+    corpus_vs_corpus_topk,
+)
+from repro.workloads.neighbors import (
+    NeighborGraph,
+    connected_components,
+    duplicate_groups,
+    knn_graph,
+    near_duplicate_graph,
+)
+
+__all__ = [
+    "ClusterResult", "adjusted_rand_index", "kcenters", "kmedoids",
+    "kmedoids_wcd_baseline", "purity",
+    "CorpusTopKResult", "SelfPairScheduler", "TileBlock",
+    "corpus_self_topk", "corpus_self_topk_distributed",
+    "corpus_vs_corpus_topk",
+    "NeighborGraph", "connected_components", "duplicate_groups",
+    "knn_graph", "near_duplicate_graph",
+]

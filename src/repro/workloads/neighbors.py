@@ -1,0 +1,147 @@
+"""Near-duplicate graphs from the tiled all-pairs stream.
+
+Consumes the :class:`~repro.workloads.corpus_distance.SelfPairScheduler`
+block stream: every symmetric (tile, tile) block is thresholded on the
+host and its surviving edges appended to a CSR-style adjacency — the
+data-dependent edge count lives entirely host-side, so the device program
+keeps the scheduler's fixed tile shapes.
+
+Graphs are undirected and stored with BOTH orientations (CSR rows are
+complete neighbor lists).  ``threshold`` is in symmetric LC-RWMD units —
+a LOWER bound on WMD, so a near-duplicate edge here is a superset of the
+true WMD near-duplicates at the same threshold (no false dismissals).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lc_rwmd import LCRWMDEngine
+from repro.workloads.corpus_distance import SelfPairScheduler, corpus_self_topk
+
+
+class NeighborGraph(NamedTuple):
+    """CSR adjacency over corpus docs (undirected, both orientations)."""
+    indptr: np.ndarray    # (n+1,) int64 row pointers
+    indices: np.ndarray   # (nnz,) int32 neighbor doc ids
+    data: np.ndarray      # (nnz,) f32 symmetric LC-RWMD distances
+    n_docs: int
+
+    @property
+    def n_edges(self) -> int:
+        """Undirected edge count (each stored twice in CSR)."""
+        return len(self.indices) // 2
+
+    def degree(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+
+def _edges_to_csr(rows, cols, vals, n: int) -> NeighborGraph:
+    rows = np.concatenate(rows) if rows else np.empty(0, np.int64)
+    cols = np.concatenate(cols) if cols else np.empty(0, np.int64)
+    vals = np.concatenate(vals) if vals else np.empty(0, np.float32)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(np.bincount(rows, minlength=n), out=indptr[1:])
+    return NeighborGraph(indptr=indptr, indices=cols.astype(np.int32),
+                         data=vals.astype(np.float32), n_docs=n)
+
+
+def near_duplicate_graph(
+    engine: LCRWMDEngine, threshold: float, *, tile: int = 64
+) -> NeighborGraph:
+    """All doc pairs with symmetric LC-RWMD ≤ ``threshold``, as CSR.
+
+    One pass over the s ≤ t tile pairs; mirrored blocks contribute both
+    orientations from the same device block (the s == t diagonal block
+    already holds both and its self-distance diagonal is pre-masked +inf,
+    so identical docs link at distance 0 without self-loops).
+    """
+    n = engine.resident.n_docs
+    sched = SelfPairScheduler(engine, tile=tile)
+    rows, cols, vals = [], [], []
+    for blk in sched.blocks():
+        b = np.asarray(blk.block)
+        r, c = np.nonzero(b <= threshold)  # +inf masks never pass
+        if not len(r):
+            continue
+        gi = np.asarray(blk.row_idx)[r].astype(np.int64)
+        gj = np.asarray(blk.col_idx)[c].astype(np.int64)
+        d = b[r, c]
+        rows.append(gi)
+        cols.append(gj)
+        vals.append(d)
+        if blk.mirrored:  # s < t: the (t, s) block is never visited
+            rows.append(gj)
+            cols.append(gi)
+            vals.append(d)
+    return _edges_to_csr(rows, cols, vals, n)
+
+
+def knn_graph(
+    engine: LCRWMDEngine, k: int, *, tile: int = 64, mutual: bool = False
+) -> NeighborGraph:
+    """k-nearest-neighbor graph from the tiled top-k pass, symmetrized.
+
+    ``mutual=False`` keeps an edge if EITHER endpoint ranks the other in its
+    top-k (union symmetrization); ``mutual=True`` requires BOTH (the
+    classic near-duplicate criterion — robust to hubness).
+    """
+    tk = corpus_self_topk(engine, k, tile=tile)
+    idx = np.asarray(tk.indices)
+    d = np.asarray(tk.dists)
+    n = engine.resident.n_docs
+    src = np.repeat(np.arange(n, dtype=np.int64), k)
+    dst = idx.reshape(-1).astype(np.int64)
+    w = d.reshape(-1).astype(np.float32)
+    if mutual:
+        directed = set(zip(src.tolist(), dst.tolist()))
+        keep = np.fromiter(
+            ((j, i) in directed for i, j in zip(src, dst)),
+            dtype=bool, count=len(src))
+        src, dst, w = src[keep], dst[keep], w[keep]
+    # Union-symmetrize the surviving arcs, dropping duplicates.
+    pair = {}
+    for i, j, v in zip(src.tolist(), dst.tolist(), w.tolist()):
+        pair[(i, j)] = v
+        pair[(j, i)] = v
+    if not pair:
+        return _edges_to_csr([], [], [], n)
+    rows = np.fromiter((p[0] for p in pair), np.int64, len(pair))
+    cols = np.fromiter((p[1] for p in pair), np.int64, len(pair))
+    vals = np.fromiter(pair.values(), np.float32, len(pair))
+    return _edges_to_csr([rows], [cols], [vals], n)
+
+
+def connected_components(graph: NeighborGraph) -> np.ndarray:
+    """(n,) int32 component label per doc — near-duplicate groups."""
+    n = graph.n_docs
+    parent = np.arange(n)
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for i in range(n):
+        for j in graph.indices[graph.indptr[i]:graph.indptr[i + 1]]:
+            ri, rj = find(i), find(int(j))
+            if ri != rj:
+                parent[max(ri, rj)] = min(ri, rj)
+    roots = np.fromiter((find(i) for i in range(n)), np.int64, n)
+    _, labels = np.unique(roots, return_inverse=True)
+    return labels.astype(np.int32)
+
+
+def duplicate_groups(graph: NeighborGraph) -> list[np.ndarray]:
+    """Connected components with ≥ 2 docs, largest first."""
+    labels = connected_components(graph)
+    groups = [np.nonzero(labels == c)[0]
+              for c in np.unique(labels)]
+    groups = [g for g in groups if len(g) >= 2]
+    return sorted(groups, key=len, reverse=True)

@@ -5,7 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import merge_topk, pruned_wmd_topk, topk_smallest, knn_classify
+from repro.core import (
+    AdaptiveRefineBudget,
+    knn_classify,
+    merge_topk,
+    pruned_wmd_topk,
+    topk_smallest,
+)
 from repro.core.wmd import wmd_pair
 from repro.data.docs import DocSet
 
@@ -96,6 +102,80 @@ def test_knn_classify_majority(small_corpus):
               indices=jnp.asarray(np.array([[0, 1, 2], [2, 3, 4]], dtype=np.int32)))
     got = np.asarray(knn_classify(tk, labels, 3))
     np.testing.assert_array_equal(got, [0, 1])
+
+
+def test_knn_classify_distance_weighted_tiebreak():
+    """Regression: a 2-2 count tie used to resolve to the lowest class id
+    regardless of distance; the distance-weighted vote must pick the class
+    whose neighbors are NEARER — here class 1 (d=0.1, 0.2) over class 0
+    (d=1.0, 2.0) — while the uniform vote keeps the legacy argmax rule."""
+    from repro.core.topk import TopK
+
+    labels = jnp.asarray(np.array([0, 0, 1, 1], dtype=np.int32))
+    tk = TopK(
+        dists=jnp.asarray(np.array([[1.0, 2.0, 0.1, 0.2]], dtype=np.float32)),
+        indices=jnp.asarray(np.array([[0, 1, 2, 3]], dtype=np.int32)),
+    )
+    assert int(knn_classify(tk, labels, 2)[0]) == 0  # legacy: lowest class id
+    assert int(knn_classify(tk, labels, 2, weights="uniform")[0]) == 0
+    assert int(knn_classify(tk, labels, 2, weights="distance")[0]) == 1
+    with pytest.raises(ValueError):
+        knn_classify(tk, labels, 2, weights="softmax")
+
+
+def test_knn_classify_distance_weights_preserve_clear_majority():
+    """Distance weighting must not flip a clear 3-1 majority."""
+    from repro.core.topk import TopK
+
+    labels = jnp.asarray(np.array([0, 0, 0, 1], dtype=np.int32))
+    tk = TopK(
+        dists=jnp.asarray(np.array([[1.0, 1.1, 1.2, 0.9]], dtype=np.float32)),
+        indices=jnp.asarray(np.array([[0, 1, 2, 3]], dtype=np.int32)),
+    )
+    assert int(knn_classify(tk, labels, 2, weights="distance")[0]) == 0
+
+
+def test_adaptive_refine_budget_growth_policy():
+    ab = AdaptiveRefineBudget(k=8, n_resident=1000)
+    assert ab.budget == 32  # the historical 4·k default is the starting point
+    # All-exact batches leave the budget alone.
+    assert ab.update(np.ones(16, dtype=bool)) == 32
+    # Failure rate above target -> geometric growth.
+    assert ab.update(np.array([True] * 8 + [False] * 8)) == 64
+    assert ab.update(np.zeros(4, dtype=bool)) == 128
+    # Failure rate at/below target -> no growth.
+    ab2 = AdaptiveRefineBudget(k=8, n_resident=1000,
+                               target_failure_rate=0.5)
+    assert ab2.update(np.array([True, True, True, False])) == 32
+
+
+def test_adaptive_refine_budget_clamps():
+    ab = AdaptiveRefineBudget(k=8, n_resident=100, init=80)
+    assert ab.update(np.zeros(4, dtype=bool)) == 100  # capped at n
+    assert ab.saturated
+    assert ab.update(np.zeros(4, dtype=bool)) == 100  # stays capped
+    # init below k is floored at k (the cascade bootstrap needs k docs).
+    assert AdaptiveRefineBudget(k=8, n_resident=100, init=2).budget == 8
+    with pytest.raises(ValueError):
+        AdaptiveRefineBudget(k=8, n_resident=100, growth=1.0)
+
+
+def test_adaptive_refine_budget_converges_on_corpus(small_corpus):
+    """End-to-end: starting undersized, the helper reaches a budget whose
+    cascade is exact on a real batch within a few rounds."""
+    ds = small_corpus.docs
+    emb = jnp.asarray(small_corpus.emb)
+    resident, queries = ds[:64], ds[70:76]
+    sink = dict(eps=0.05, eps_scaling=2, max_iters=100)
+    ab = AdaptiveRefineBudget(k=4, n_resident=64, init=4)
+    for _ in range(8):
+        res = pruned_wmd_topk(resident, queries, emb, k=4,
+                              refine_budget=ab.budget, sinkhorn_kw=sink)
+        exact = np.asarray(res.pruned_exact)
+        if exact.all():
+            break
+        ab.update(exact)
+    assert exact.all(), ab.budget
 
 
 def test_knn_precision_on_synthetic_corpus(small_corpus):
