@@ -96,6 +96,44 @@ def _adaptive_budget_bench() -> BenchResult:
     })
 
 
+def _adaptive_budget_decay_bench() -> BenchResult:
+    """Decay direction of the adaptive budget (ROADMAP item 8), driven by
+    REAL cascade runs: start from a deliberately OVERSIZED budget (a burst
+    survivor, no failure history), decay probes downward after
+    ``decay_after`` consecutive all-exact batches, the first inexact probe
+    re-grows AND floors future decay (``failed_budget``) — so the
+    trajectory converges instead of oscillating: each level is probed at
+    most once."""
+    k, decay_after = 8, 2
+    c = cached_corpus(n_docs=256, vocab_size=2048, emb_dim=48, h_max=16,
+                      mean_h=10.0, n_classes=4, seed=7)
+    emb = jnp.asarray(c.emb)
+    queries = c.docs[10:18]
+    sink = dict(eps=0.02, eps_scaling=3, max_iters=200)
+    ab = AdaptiveRefineBudget(k=k, n_resident=c.docs.n_docs,
+                              init=c.docs.n_docs, decay_after=decay_after)
+    trajectory, decays, regrows = [], 0, 0
+    for _ in range(12):
+        used = ab.budget
+        trajectory.append(used)
+        res = pruned_wmd_topk(c.docs, queries, emb, k=k, refine_budget=used,
+                              sinkhorn_kw=sink)
+        ab.update(np.asarray(res.pruned_exact))
+        if ab.budget < used:
+            decays += 1
+        elif ab.budget > used:
+            regrows += 1
+    tail = trajectory[-(decay_after + 2):]
+    return BenchResult("pruning_adaptive_budget_decay", 0.0, derived={
+        "k": k, "decay_after": decay_after, "start_oversized": trajectory[0],
+        "trajectory": "->".join(map(str, trajectory)),
+        "n_decays": decays, "n_regrows": regrows,
+        "decay_floor_learned": ab.failed_budget,
+        "converged": bool(len(set(tail)) == 1),
+        "final_budget": trajectory[-1],
+    })
+
+
 def run() -> list[BenchResult]:
     c = cached_corpus(n_docs=256, vocab_size=2048, emb_dim=48, h_max=16,
                       mean_h=10.0, n_classes=4, seed=7)
@@ -115,4 +153,5 @@ def run() -> list[BenchResult]:
         }))
     out.append(_refine_stage_bench())
     out.append(_adaptive_budget_bench())
+    out.append(_adaptive_budget_decay_bench())
     return out

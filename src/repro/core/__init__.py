@@ -23,7 +23,16 @@ from repro.core.rwmd import (
     rwmd_pair,
     rwmd_pairs_from_t,
 )
-from repro.core.topk import TopK, distributed_topk, merge_topk, topk_smallest
+from repro.core.topk import (
+    StreamingTopK,
+    TopK,
+    crossshard_topk,
+    distributed_topk,
+    lex_smallest,
+    merge_topk,
+    topk_smallest,
+    topk_smallest_cols,
+)
 from repro.core.wcd import (
     centroids,
     centroids_from_t,
@@ -48,7 +57,8 @@ __all__ = [
     "AdaptiveRefineBudget", "PrunedWMDResult", "knn_classify",
     "pruned_wmd_topk",
     "rwmd_many_vs_many", "rwmd_one_vs_many", "rwmd_pair", "rwmd_pairs_from_t",
-    "TopK", "distributed_topk", "merge_topk", "topk_smallest",
+    "StreamingTopK", "TopK", "crossshard_topk", "distributed_topk",
+    "lex_smallest", "merge_topk", "topk_smallest", "topk_smallest_cols",
     "centroids", "centroids_from_t", "wcd_many_vs_many", "wcd_one_vs_many",
     "emd_exact_lp", "sinkhorn_log", "sinkhorn_log_batched",
     "wmd_batched", "wmd_batched_from_t", "wmd_one_vs_many", "wmd_pair",

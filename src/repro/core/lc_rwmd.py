@@ -209,6 +209,15 @@ class LCRWMDEngine:
         ``one_sided`` / ``symmetric`` / ``topk`` entry points (query buffers
         optionally donated on accelerator backends via ``donate_queries``).
 
+    Serve-time top-k is STREAMING (:meth:`topk_streaming` /
+    :meth:`symmetric_topk_streaming`, and :meth:`topk` which routes through
+    them): phase-2 row blocks fold straight into a
+    :class:`~repro.core.topk.StreamingTopK` carry, so the (n, B) distance
+    matrix never reaches HBM when only the top-k is consumed — peak per-query
+    state is O(k) plus one ``row_block``-row slab.  Results equal the
+    materialized ``lax.top_k`` exactly, ties included (shared lexicographic
+    (distance, doc id) order).
+
     The symmetric path also shares ONE query-embedding gather between both
     directions and restricts the swapped direction's vocab axis to the
     batch's own query words — O(B·h·n·h̄·m) instead of the seed's full
@@ -230,6 +239,7 @@ class LCRWMDEngine:
         interpret: bool = False,
         jit_methods: bool = True,
         donate_queries: bool = False,
+        row_block: int = 128,
     ):
         self.resident = resident
         self.emb_full = jnp.asarray(emb, dtype=jnp.float32)
@@ -237,6 +247,7 @@ class LCRWMDEngine:
         self.vocab_chunk = vocab_chunk
         self.use_kernel = use_kernel
         self.interpret = interpret
+        self.row_block = max(1, min(row_block, resident.n_docs))
 
         if restrict:
             sub, emb_r, old_to_new = restrict_vocab(resident, self.emb_full)
@@ -264,9 +275,9 @@ class LCRWMDEngine:
             )
             self._one_sided = jax.jit(self._one_sided_impl, donate_argnums=donate)
             self._symmetric = jax.jit(self._symmetric_impl, donate_argnums=donate)
-            self._topk = jax.jit(
-                self._topk_impl, static_argnums=(0,),
-                donate_argnums=(1, 2) if donate else (),
+            self._topk_stream = jax.jit(
+                self._topk_stream_impl, static_argnums=(0, 1),
+                donate_argnums=(2, 3) if donate else (),
             )
             self._rerank = jax.jit(self._rerank_impl, static_argnums=(0, 1))
             self._symmetric_resident = jax.jit(self._symmetric_resident_impl)
@@ -275,7 +286,7 @@ class LCRWMDEngine:
         else:
             self._one_sided = self._one_sided_impl
             self._symmetric = self._symmetric_impl
-            self._topk = self._topk_impl
+            self._topk_stream = self._topk_stream_impl
             self._rerank = self._rerank_impl
             self._symmetric_resident = self._symmetric_resident_impl
             self._phase1_resident = self._phase1_resident_impl
@@ -368,10 +379,84 @@ class LCRWMDEngine:
         )
         return phase2_spmm(sub, z)
 
-    def _topk_impl(self, k: int, q_ids: Array, q_w: Array):
-        from repro.core import topk as topk_lib
+    def _pad_rows(self, x: Array, n_pad: int) -> Array:
+        pad = n_pad - x.shape[0]
+        if pad == 0:
+            return x
+        return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
 
-        return topk_lib.topk_smallest_cols(self._symmetric_impl(q_ids, q_w), k)
+    def _topk_stream_impl(self, k: int, symmetric: bool, q_ids: Array,
+                          q_w: Array):
+        """Streaming top-k: phase-2 row blocks fold into a (B, k) carry.
+
+        Phase 1 runs ONCE (kernel or jnp) at (v_e, B); resident rows are
+        then scanned in ``row_block`` slabs — the one-sided term via the
+        blocked ELL SpMM, the swapped direction (symmetric=True) via the
+        engine's pre-gathered resident targets restricted to the slab — and
+        every slab folds into a :class:`~repro.core.topk.StreamingTopK`
+        carry.  No (n, B) (nor (B, n)) intermediate exists; exactly equal to
+        ``topk_smallest_cols`` of the materialized matrix, ties included.
+        """
+        from repro.core.topk import StreamingTopK
+
+        b, h2 = q_ids.shape
+        n, h1 = self.resident.ids.shape
+        m = self.emb_full.shape[1]
+        t_q = self.emb_full[q_ids.reshape(-1)]       # (B*h2, m)
+        valid_q = (q_w > 0).reshape(-1)
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            z1 = kops.lc_rwmd_phase1_pregathered(
+                self.emb_restricted, t_q.reshape(b, h2, -1),
+                valid_q.reshape(b, h2).astype(jnp.float32),
+                bf16_matmul=self.bf16_matmul, interpret=self.interpret,
+            )
+        else:
+            z1 = phase1_z_from_t(
+                self.emb_restricted, t_q, valid_q, b,
+                bf16_matmul=self.bf16_matmul, vocab_chunk=self.vocab_chunk,
+            )
+
+        kk = min(k, n)
+        if not symmetric:
+            # The one-sided fold IS the shared phase-2 streaming reduction.
+            from repro.core.topk import TopK
+            from repro.kernels.ops import streaming_phase2_topk
+
+            d, i = streaming_phase2_topk(
+                self.resident_restricted.ids,
+                self.resident_restricted.weights, z1, kk,
+                row_block=self.row_block)
+            return TopK(d, i)
+
+        r = self.row_block
+        nb = -(-n // r)
+        n_pad = nb * r
+        ids_b = self._pad_rows(self.resident_restricted.ids, n_pad)
+        w_b = self._pad_rows(self.resident_restricted.weights, n_pad)
+        t_r_b = self._pad_rows(self._t_r.reshape(n, h1, m), n_pad)
+        v_r_b = self._pad_rows(self._valid_r.reshape(n, h1), n_pad)
+        xs = [ids_b.reshape(nb, r, h1), w_b.reshape(nb, r, h1),
+              jnp.arange(nb, dtype=jnp.int32) * r,
+              t_r_b.reshape(nb, r * h1, m), v_r_b.reshape(nb, r * h1)]
+        stk = StreamingTopK(kk)
+
+        def body(carry, xs):
+            ids_blk, w_blk, lo, tr_blk, vr_blk = xs
+            d1 = phase2_spmm(DocSet(ids=ids_blk, weights=w_blk), z1)
+            sq = sq_dists(t_q, tr_blk, bf16_matmul=self.bf16_matmul)
+            sq = jnp.where(vr_blk[None, :], sq, _INF)
+            z2 = safe_sqrt(jnp.min(sq.reshape(b * h2, r, h1), axis=2))
+            d2 = jnp.einsum("bh,bhr->br", q_w, z2.reshape(b, h2, r))
+            d_blk = jnp.maximum(d1.T, d2)                       # (B, R)
+            row = lo + jnp.arange(r, dtype=jnp.int32)
+            d_blk = jnp.where((row < n)[None, :], d_blk, _INF)
+            idx = jnp.broadcast_to(row[None, :], (b, r))
+            return stk.update(carry, d_blk, idx), None
+
+        carry, _ = jax.lax.scan(body, stk.init(b), xs)
+        return carry
 
     def _rerank_impl(
         self, k: int, sink_items: tuple, q_ids: Array, q_w: Array,
@@ -403,8 +488,26 @@ class LCRWMDEngine:
         return self._symmetric(queries.ids, queries.weights)
 
     def topk(self, queries: DocSet, k: int):
-        """Per-query top-k smallest symmetric LC-RWMD: TopK (B, k)."""
-        return self._topk(k, queries.ids, queries.weights)
+        """Per-query top-k smallest symmetric LC-RWMD: TopK (B, k).
+
+        Streaming since the top-k unification: alias of
+        :meth:`symmetric_topk_streaming` (exact results, O(k·B) peak)."""
+        return self._topk_stream(k, True, queries.ids, queries.weights)
+
+    def topk_streaming(self, queries: DocSet, k: int):
+        """Per-query top-k smallest ONE-SIDED LC-RWMD (D1), streamed.
+
+        Matches the distributed serve step's candidate semantics.  The
+        (n, B) matrix never materializes; exactly ``lax.top_k`` of
+        :meth:`one_sided`'s transpose, ties included."""
+        return self._topk_stream(k, False, queries.ids, queries.weights)
+
+    def symmetric_topk_streaming(self, queries: DocSet, k: int):
+        """Per-query top-k smallest SYMMETRIC bound max(D1, D2ᵀ), streamed.
+
+        The pruning cascade's stage-1 candidate selector: both directions
+        are evaluated per row slab and folded into the (B, k) carry."""
+        return self._topk_stream(k, True, queries.ids, queries.weights)
 
     # -- corpus-analytics (query-tile) entry points ------------------------
     #

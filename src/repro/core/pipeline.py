@@ -78,17 +78,21 @@ def pruned_wmd_topk(
     if use_kernel is None:
         use_kernel = engine is not None and engine.use_kernel
 
-    # Stage 1: LC-RWMD lower bounds for every (resident, query) pair.
+    # Stage 1: LC-RWMD lower bounds + candidate selection.  With an engine,
+    # selection happens INSIDE the streaming phase-2 pass (StreamingTopK
+    # carry) — the (n, B) RWMD matrix never reaches HBM; the engine-less
+    # fallback keeps the materialized reference path.  Both orders are
+    # identical, ties included (shared lexicographic tie-break).
     if engine is not None:
-        d_rwmd = engine.symmetric(queries)  # (n, B)
+        cand = engine.symmetric_topk_streaming(queries, budget)  # (B, budget)
     else:
         d_rwmd = lc_rwmd_symmetric(resident, queries, emb)  # (n, B)
+        cand = topk_lib.topk_smallest_cols(d_rwmd, budget)  # (B, budget)
 
     # Stage 2+4 fused under a fixed budget: WMD on the `budget` best docs,
-    # all (B, budget) pairs in one batched solve.  One top-k pass over the
-    # (n, B) matrix serves both outputs: lax.top_k sorts ascending, so the
-    # RWMD-only top-k is the first k columns of the candidate set.
-    cand = topk_lib.topk_smallest_cols(d_rwmd, budget)  # (B, budget)
+    # all (B, budget) pairs in one batched solve.  One top-k pass serves
+    # both outputs: candidates sort ascending, so the RWMD-only top-k is the
+    # first k columns of the candidate set.
     rwmd_topk = topk_lib.TopK(cand.dists[:, :k], cand.indices[:, :k])
     flat = cand.indices.reshape(-1)                     # (B*budget,)
     wmd_vals = wmd_candidate_values(
@@ -156,10 +160,21 @@ class AdaptiveRefineBudget:
     survivor.  This helper replaces the static ``4·k`` default: feed each
     batch's flags to :meth:`update`; while the failure rate exceeds
     ``target_failure_rate``, the budget multiplies by ``growth`` (clamped to
-    ``[k, n_resident]``).  Budgets only grow — the cost of an undersized
-    budget is a WRONG top-k, the cost of an oversized one is a few extra
-    GEMM-shaped Sinkhorn solves — and converge after
-    O(log_growth(n/k)) batches on a stationary corpus.
+    ``[k, n_resident]``).  Budgets converge after O(log_growth(n/k)) batches
+    on a stationary corpus.
+
+    ``decay_after`` adds the DOWN direction for drifting corpora: after that
+    many CONSECUTIVE all-exact batches the budget halves (``decay`` factor,
+    same [k, n_resident] clamp) and the streak resets, so a budget inflated
+    by a hard traffic burst drifts back once the cascade is comfortably
+    exact again.  Decay never probes below ``failed_budget`` — the largest
+    budget ever observed to fail — so on stationary traffic each level is
+    probed AT MOST once (one brief re-grow, then the budget is stable);
+    without that floor the budget would oscillate forever, periodically
+    serving a provably-inexact batch and rebuilding the serve step.  Call
+    :meth:`reset_decay_floor` after a known corpus/traffic shift to allow
+    re-probing.  ``decay_after=None`` (default) keeps the legacy grow-only
+    behavior.
     """
 
     k: int
@@ -167,14 +182,22 @@ class AdaptiveRefineBudget:
     init: int | None = None
     growth: float = 2.0
     target_failure_rate: float = 0.05
+    decay_after: int | None = None
+    decay: float = 0.5
 
     def __post_init__(self):
         if self.k < 1 or self.n_resident < 1:
             raise ValueError("k and n_resident must be positive")
         if self.growth <= 1.0:
             raise ValueError(f"growth must exceed 1, got {self.growth}")
+        if not 0.0 < self.decay < 1.0:
+            raise ValueError(f"decay must be in (0, 1), got {self.decay}")
+        if self.decay_after is not None and self.decay_after < 1:
+            raise ValueError(f"decay_after must be >= 1, got {self.decay_after}")
         start = 4 * self.k if self.init is None else self.init
         self.budget = self._clamp(start)
+        self.exact_streak = 0   # consecutive all-exact batches observed
+        self.failed_budget = 0  # largest budget observed to fail (decay floor)
 
     def _clamp(self, b: int) -> int:
         return max(self.k, min(int(b), self.n_resident))
@@ -184,9 +207,29 @@ class AdaptiveRefineBudget:
         """True once the budget covers the whole resident set (always exact)."""
         return self.budget >= self.n_resident
 
+    def reset_decay_floor(self) -> None:
+        """Forget past failures (e.g. after a corpus swap) so decay may
+        re-probe budgets that used to be insufficient."""
+        self.failed_budget = 0
+
     def update(self, pruned_exact) -> int:
         """Observe one batch's ``pruned_exact`` flags; return the new budget."""
         flags = np.asarray(pruned_exact).astype(bool).reshape(-1)
-        if flags.size and (1.0 - flags.mean()) > self.target_failure_rate:
+        if not flags.size:
+            return self.budget
+        if (1.0 - flags.mean()) > self.target_failure_rate:
+            self.failed_budget = max(self.failed_budget, self.budget)
             self.budget = self._clamp(math.ceil(self.budget * self.growth))
+            self.exact_streak = 0
+        elif flags.all():
+            self.exact_streak += 1
+            if (self.decay_after is not None
+                    and self.exact_streak >= self.decay_after
+                    and self.budget > self.k):
+                target = self._clamp(math.floor(self.budget * self.decay))
+                if target > self.failed_budget:  # never re-probe a known miss
+                    self.budget = target
+                self.exact_streak = 0
+        else:
+            self.exact_streak = 0
         return self.budget

@@ -1,10 +1,19 @@
-"""Top-k smallest-distance selection — local and distributed.
+"""Top-k smallest-distance selection — local, streaming, and distributed.
 
 The paper's output ``R`` is, per query, the k nearest resident docs.  In the
 distributed setting the resident set is sharded over ``(pod, data)``; each
 shard computes a local top-k (O(n/shards)) and the O(k)-sized candidates are
 merged with one all_gather — "the associated communication cost is typically
 marginal compared with the cost of computation" (paper Sec. V).
+
+Every selection and merge in the repo goes through this module and shares
+ONE tie-break contract: candidates are ordered by the lexicographic key
+``(distance, global doc id)`` ascending.  ``jax.lax.top_k`` already orders
+equal values by ascending index, so a :class:`StreamingTopK` reduction over
+row blocks is *exactly* equal — values AND index sets, ties included — to a
+materialized ``lax.top_k`` over the full distance matrix.  That equality is
+what lets the serve path stream phase-2 blocks straight into a (B, k) carry
+and never write the (n, B) RWMD matrix to HBM.
 """
 
 from __future__ import annotations
@@ -16,10 +25,80 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+EMPTY_IDX = -1  # index sentinel of unfilled carry slots (dist = +inf)
+
 
 class TopK(NamedTuple):
     dists: Array    # (..., k) ascending distances
     indices: Array  # (..., k) GLOBAL resident-doc indices
+
+
+def lex_smallest(dists: Array, indices: Array, k: int) -> TopK:
+    """k smallest (distance, index) pairs per row, lexicographic ascending.
+
+    The single merge primitive behind every streaming/distributed top-k
+    path: one two-key ``lax.sort`` over the trailing axis, then a slice.
+    Equal distances order by ascending index — the same tie-break
+    ``lax.top_k`` applies, so merge trees and flat selections agree exactly.
+    """
+    d, i = jax.lax.sort(
+        (dists, indices.astype(jnp.int32)), dimension=-1, num_keys=2)
+    return TopK(dists=d[..., :k], indices=i[..., :k])
+
+
+class StreamingTopK:
+    """Running top-k-smallest merge with a fixed-size (..., k) carry.
+
+    Functional (jit/scan-friendly): ``init`` builds an empty carry of +inf
+    distances and ``EMPTY_IDX`` ids, ``update`` folds a block of candidate
+    (distance, global id) pairs in, and the carry itself is always a valid,
+    ascending :class:`TopK`.  Folding the row blocks of an (n, B) distance
+    matrix through ``update_cols`` yields bit-identical results to
+    ``topk_smallest_cols`` of the materialized matrix (ties included) while
+    the peak live intermediate is one (block, B) slab plus the (B, k) carry.
+
+    Unfilled slots only surface when fewer than k finite candidates exist
+    (e.g. every row masked to +inf); callers that mask rows should keep
+    k ≤ the per-query count of unmasked rows.
+    """
+
+    def __init__(self, k: int):
+        if k < 1:
+            raise ValueError(f"k must be positive, got {k}")
+        self.k = k
+
+    def init(self, *batch_shape: int) -> TopK:
+        """Empty carry of shape (*batch_shape, k)."""
+        shape = (*batch_shape, self.k)
+        return TopK(
+            dists=jnp.full(shape, jnp.inf, jnp.float32),
+            indices=jnp.full(shape, EMPTY_IDX, jnp.int32),
+        )
+
+    def update(self, carry: TopK, dists: Array, indices: Array) -> TopK:
+        """Fold (..., c) candidate pairs into the (..., k) carry."""
+        d = jnp.concatenate(
+            [carry.dists, dists.astype(jnp.float32)], axis=-1)
+        i = jnp.concatenate(
+            [carry.indices, indices.astype(jnp.int32)], axis=-1)
+        return lex_smallest(d, i, self.k)
+
+    def update_cols(self, carry: TopK, d_block: Array, row_gids: Array) -> TopK:
+        """Fold a resident-major (R, B) phase-2 block into a (B, k) carry.
+
+        ``row_gids`` (R,) are the global resident-doc ids of the block rows;
+        each query column receives the R candidates ``(d_block[:, j], gids)``.
+        """
+        r, b = d_block.shape
+        idx = jnp.broadcast_to(row_gids[None, :].astype(jnp.int32), (b, r))
+        return self.update(carry, d_block.T, idx)
+
+    def update_rows(self, carry: TopK, block: Array, col_gids: Array) -> TopK:
+        """Fold a (R, C) block row-wise into an (R, k) carry (per-row top-k
+        over columns — the all-pairs scheduler orientation)."""
+        r, c = block.shape
+        idx = jnp.broadcast_to(col_gids[None, :].astype(jnp.int32), (r, c))
+        return self.update(carry, block, idx)
 
 
 def topk_smallest(d: Array, k: int) -> TopK:
@@ -50,8 +129,23 @@ def merge_topk(parts: Sequence[TopK], k: int) -> TopK:
     """Merge several TopK candidate sets (same leading dims) into one."""
     d = jnp.concatenate([p.dists for p in parts], axis=-1)
     i = jnp.concatenate([p.indices for p in parts], axis=-1)
-    neg, sel = jax.lax.top_k(-d, k)
-    return TopK(dists=-neg, indices=jnp.take_along_axis(i, sel, axis=-1))
+    return lex_smallest(d, i, k)
+
+
+def crossshard_topk(local: TopK, k: int, *, axis_names: Sequence[str]) -> TopK:
+    """Merge per-shard (B, k̃) TopK candidates into a replicated global TopK.
+
+    The collective half of :func:`distributed_topk`, factored out so the
+    streaming serve accumulator can feed it (B, k)-sized partials directly.
+    ``local.indices`` must already be GLOBAL doc ids.  Communication: one
+    all_gather of (B, k̃) pairs per axis.
+    """
+    d_all = local.dists
+    i_all = local.indices
+    for ax in axis_names:
+        d_all = jax.lax.all_gather(d_all, ax, axis=-1, tiled=True)
+        i_all = jax.lax.all_gather(i_all, ax, axis=-1, tiled=True)
+    return lex_smallest(d_all, i_all, k)
 
 
 def distributed_topk(
@@ -64,11 +158,4 @@ def distributed_topk(
     """
     local = topk_smallest(local_d.T, min(k, local_d.shape[0]))  # (B, k̃)
     local = TopK(local.dists, local.indices + shard_offset)
-    # Gather candidates from every shard along the resident-sharded axes.
-    d_all = local.dists
-    i_all = local.indices
-    for ax in axis_names:
-        d_all = jax.lax.all_gather(d_all, ax, axis=-1, tiled=True)
-        i_all = jax.lax.all_gather(i_all, ax, axis=-1, tiled=True)
-    neg, sel = jax.lax.top_k(-d_all, k)
-    return TopK(dists=-neg, indices=jnp.take_along_axis(i_all, sel, axis=-1))
+    return crossshard_topk(local, k, axis_names=axis_names)

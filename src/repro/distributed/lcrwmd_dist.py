@@ -29,7 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map as compat_shard_map
 from repro.core.distances import safe_sqrt, sq_dists
-from repro.core.topk import TopK, distributed_topk
+from repro.core.topk import StreamingTopK, TopK, crossshard_topk, distributed_topk
 from repro.data.docs import DocSet
 from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
 
@@ -39,7 +39,11 @@ _INF = 3.4e38
 
 class ServeResult(NamedTuple):
     topk: TopK        # (B, k) replicated: global doc ids + distances
-    d_local: Array    # (n_local, B) this shard's distances (diagnostics)
+    d_local: Array | None  # (n_local, B) shard distances (None when the
+    #                        streaming accumulator never materializes them)
+    pruned_exact: Array | None = None  # (B,) bool, rerank_wmd engine path:
+    #                        True → WMD top-k provably equals the full-corpus
+    #                        WMD top-k (candidate RWMD bound beat the cutoff)
 
 
 def _batch_axes(mesh) -> tuple[str, ...]:
@@ -95,6 +99,8 @@ def build_serve_step(
     rerank_budget: int | None = None,
     wmd_kw: dict | None = None,
     self_exclude: bool = False,
+    streaming: bool | None = None,
+    row_block: int = 128,
 ):
     """Returns jit'd ``serve(resident, queries, emb) -> ServeResult``.
 
@@ -130,10 +136,23 @@ def build_serve_step(
     ``self_exclude=True`` (engine path only) is the corpus-analytics mode:
     the returned callable becomes ``serve(queries, query_ids)`` where
     ``query_ids`` (B,) are the queries' GLOBAL resident-doc ids, and each
-    query's own resident row is masked to +inf INSIDE the mesh kernel before
-    top-k — tiles of the corpus can stream through the serve step as query
-    batches without self-matches eating a candidate slot (see
+    query's own resident row is masked to +inf inside the streaming
+    accumulator before any candidate leaves the shard — tiles of the corpus
+    can stream through the serve step as query batches without self-matches
+    eating a candidate slot (see
     :func:`repro.workloads.corpus_distance.corpus_self_topk_distributed`).
+
+    ``streaming`` (engine path; default True) fuses candidate selection into
+    the per-shard phase-2 accumulator: resident rows are scanned in
+    ``row_block`` slabs, each slab's psum'd distances fold into a
+    :class:`~repro.core.topk.StreamingTopK` carry, and the cross-shard
+    top-k collective consumes the (B, k)-sized per-shard partials — the
+    (n_shard, B) distance block is never materialized (O(n·B) → O(k·B) peak
+    serve-path memory per device) and ``ServeResult.d_local`` is None.
+    ``streaming=False`` keeps the materialized path with its ``d_local``
+    diagnostics; results are identical either way, ties included.  The
+    engine-less path is the paper-faithful materialized baseline and
+    rejects ``streaming=True``.
     """
     batch_axes = _batch_axes(mesh)
     n_batch_shards = 1
@@ -156,9 +175,13 @@ def build_serve_step(
             phase1_full_mesh=phase1_full_mesh, batch_axes=batch_axes,
             n_batch_shards=n_batch_shards, n_model=n_model,
             rerank_wmd=rerank_wmd, wmd_kw=wmd_kw, self_exclude=self_exclude,
+            streaming=streaming if streaming is not None else True,
+            row_block=row_block,
         )
     if self_exclude:
         raise ValueError("self_exclude requires an engine-backed serve step")
+    if streaming:
+        raise ValueError("streaming top-k requires an engine-backed serve step")
 
     def kernel(r_ids, r_w, q_ids, q_w, emb_local):
         v_local = emb_local.shape[0]
@@ -236,7 +259,7 @@ def build_serve_step(
 def _build_engine_serve_step(
     mesh, engine, *, k, kc, refine, bf16_matmul, phase1_full_mesh,
     batch_axes, n_batch_shards, n_model, rerank_wmd=False, wmd_kw=None,
-    self_exclude=False,
+    self_exclude=False, streaming=True, row_block=128,
 ):
     """Engine-backed serve step: resident state prepped + placed at build.
 
@@ -245,6 +268,13 @@ def _build_engine_serve_step(
     gathered from the FULL table outside the mesh kernel, so out-of-resident
     -vocab query words remain exact.  Padded resident rows are masked to
     +inf before top-k.
+
+    With ``streaming=True`` the shard kernel never forms its (n_local, B)
+    distance block: phase-2 runs in ``row_block`` slabs, each slab is
+    psum'd over the model axis, row-masked (doc padding + self-exclusion)
+    and folded into a per-query :class:`~repro.core.topk.StreamingTopK`
+    carry, and :func:`~repro.core.topk.crossshard_topk` merges the (B, k)
+    per-shard partials — the same collective, fed from O(k)-sized payloads.
     """
     from jax.sharding import NamedSharding
 
@@ -256,10 +286,14 @@ def _build_engine_serve_step(
         return jnp.pad(x, widths, constant_values=value)
 
     n_real = engine.resident.n_docs
+    # Streaming scans shard rows in row_block slabs: pad the doc axis so
+    # every shard holds a whole number of slabs (masked via row < n_real).
+    rb = max(1, min(row_block, -(-n_real // n_batch_shards)))
+    row_mult = n_batch_shards * (rb if streaming else 1)
     emb_shards = n_model * (n_batch_shards if phase1_full_mesh else 1)
     emb_r = _pad_rows(engine.emb_restricted, emb_shards)
-    r_ids = _pad_rows(engine.resident_restricted.ids, n_batch_shards)
-    r_w = _pad_rows(engine.resident_restricted.weights, n_batch_shards)
+    r_ids = _pad_rows(engine.resident_restricted.ids, row_mult)
+    r_w = _pad_rows(engine.resident_restricted.weights, row_mult)
 
     rspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
     espec = (P((MODEL_AXIS,) + batch_axes, None) if phase1_full_mesh
@@ -268,23 +302,28 @@ def _build_engine_serve_step(
     r_w = jax.device_put(r_w, NamedSharding(mesh, rspec))
     emb_r = jax.device_put(emb_r, NamedSharding(mesh, espec))
 
-    def kernel(rids, rw, t_q, q_valid, q_gid, emb_local):
+    def _z_and_span(t_q, q_valid, emb_local):
+        """Phase-1 Z for this shard's vocab span (+ the span size)."""
         v_local = emb_local.shape[0]
-        n_local = rids.shape[0]
         z_local = _z_from_t(emb_local, t_q, q_valid, bf16_matmul=bf16_matmul)
         if phase1_full_mesh:
             for a in reversed(batch_axes):
                 z_local = jax.lax.all_gather(z_local, a, axis=0, tiled=True)
-            partial = _phase2_partial(rids, rw, z_local,
-                                      v_local * n_batch_shards)
-        else:
-            partial = _phase2_partial(rids, rw, z_local, v_local)
-        d_local = jax.lax.psum(partial, MODEL_AXIS)  # (n_l, B)
+            return z_local, v_local * n_batch_shards
+        return z_local, v_local
 
+    def _shard_offset(n_local):
         offset = jnp.int32(0)
         for a in batch_axes:
             offset = offset * mesh.shape[a] + jax.lax.axis_index(a)
-        offset = offset * n_local
+        return offset * n_local
+
+    def kernel(rids, rw, t_q, q_valid, q_gid, emb_local):
+        n_local = rids.shape[0]
+        z_local, v_span = _z_and_span(t_q, q_valid, emb_local)
+        partial = _phase2_partial(rids, rw, z_local, v_span)
+        d_local = jax.lax.psum(partial, MODEL_AXIS)  # (n_l, B)
+        offset = _shard_offset(n_local)
 
         # Padded resident rows (doc-axis alignment) must never enter top-k.
         row = offset + jnp.arange(n_local, dtype=jnp.int32)
@@ -299,18 +338,56 @@ def _build_engine_serve_step(
                               shard_offset=offset)
         return (tk.dists, tk.indices), d_local
 
-    shmapped = compat_shard_map(
-        kernel,
-        mesh=mesh,
-        in_specs=(rspec, rspec, P(None, None, None), P(None, None), P(None),
-                  espec),
-        out_specs=((P(None, None), P(None, None)), rspec),
-    )
+    def kernel_streaming(rids, rw, t_q, q_valid, q_gid, emb_local):
+        n_local, h1 = rids.shape
+        b = t_q.shape[0]
+        z_local, v_span = _z_and_span(t_q, q_valid, emb_local)
+        offset = _shard_offset(n_local)
 
-    @jax.jit
-    def step(rids, rw, t_q, q_valid, q_gid, emb_s):
-        (tk_d, tk_i), d_local = shmapped(rids, rw, t_q, q_valid, q_gid, emb_s)
-        return TopK(tk_d, tk_i), d_local
+        nb = n_local // rb
+        ids_b = rids.reshape(nb, rb, h1)
+        w_b = rw.reshape(nb, rb, h1)
+        los = offset + jnp.arange(nb, dtype=jnp.int32) * rb
+        stk = StreamingTopK(min(kc, n_local))
+
+        def body(carry, xs):
+            ids_blk, w_blk, lo = xs
+            partial = _phase2_partial(ids_blk, w_blk, z_local, v_span)
+            d_blk = jax.lax.psum(partial, MODEL_AXIS)   # (rb, B)
+            row = lo + jnp.arange(rb, dtype=jnp.int32)  # GLOBAL doc ids
+            d_blk = jnp.where((row < n_real)[:, None], d_blk, _INF)
+            if self_exclude:
+                d_blk = jnp.where(
+                    row[:, None] == q_gid[None, :], _INF, d_blk)
+            return stk.update_cols(carry, d_blk, row), None
+
+        local_tk, _ = jax.lax.scan(body, stk.init(b), (ids_b, w_b, los))
+        tk = crossshard_topk(local_tk, kc, axis_names=batch_axes)
+        return tk.dists, tk.indices
+
+    in_specs = (rspec, rspec, P(None, None, None), P(None, None), P(None),
+                espec)
+    if streaming:
+        shmapped = compat_shard_map(
+            kernel_streaming, mesh=mesh, in_specs=in_specs,
+            out_specs=(P(None, None), P(None, None)),
+        )
+
+        @jax.jit
+        def step(rids, rw, t_q, q_valid, q_gid, emb_s):
+            tk_d, tk_i = shmapped(rids, rw, t_q, q_valid, q_gid, emb_s)
+            return TopK(tk_d, tk_i), None
+    else:
+        shmapped = compat_shard_map(
+            kernel, mesh=mesh, in_specs=in_specs,
+            out_specs=((P(None, None), P(None, None)), rspec),
+        )
+
+        @jax.jit
+        def step(rids, rw, t_q, q_valid, q_gid, emb_s):
+            (tk_d, tk_i), d_local = shmapped(
+                rids, rw, t_q, q_valid, q_gid, emb_s)
+            return TopK(tk_d, tk_i), d_local
 
     def serve(queries: DocSet, query_ids=None) -> ServeResult:
         if self_exclude and query_ids is None:
@@ -320,6 +397,11 @@ def _build_engine_serve_step(
         q_gid = (jnp.asarray(query_ids, jnp.int32) if self_exclude
                  else jnp.full((queries.n_docs,), -1, jnp.int32))
         tk, d_local = step(r_ids, r_w, t_q, q_valid, q_gid, emb_r)
+        # Largest candidate RWMD: every non-candidate's WMD is >= this
+        # (candidates are the kc smallest lower bounds), so it certifies
+        # rerank exactness against the k-th WMD cutoff below.
+        cand_max_rwmd = tk.dists[:, -1]
+        exact = None
         if refine:
             tk = _symmetric_refine(
                 engine.resident, queries, engine.emb_full, tk)
@@ -329,7 +411,14 @@ def _build_engine_serve_step(
             # resident embeddings.
             tk = engine.rerank_topk(queries, tk.indices, k,
                                     sinkhorn_kw=wmd_kw)
-        return ServeResult(topk=tk, d_local=d_local[:n_real])
+            exact = cand_max_rwmd >= tk.dists[:, -1]
+            if kc >= n_real:  # no non-candidates exist: always exact
+                exact = jnp.ones_like(exact)
+        return ServeResult(
+            topk=tk,
+            d_local=None if d_local is None else d_local[:n_real],
+            pruned_exact=exact,
+        )
 
     return serve
 

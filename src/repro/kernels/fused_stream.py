@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused LC-RWMD phase-1 → phase-2 over one vocab chunk.
+"""Pallas TPU kernels: fused LC-RWMD phase-1 → phase-2 (and fused top-k).
 
 The seed pipeline materializes the full Phase-1 output ``Z (v, B)`` in HBM
 between the two phases — O(v·B) write + O(n·h·B) gather re-read traffic that
@@ -140,3 +140,180 @@ def fused_lc_rwmd_chunk_pallas(
         scratch_shapes=[pltpu.VMEM((cv, b_pad), jnp.float32)],
         interpret=interpret,
     )(emb_chunk, t, valid, ids_rel, w_masked)
+
+
+# ---------------------------------------------------------------------------
+# Fused streaming top-k: phase-1 → phase-2 → per-query k-smallest carry
+# ---------------------------------------------------------------------------
+def _insert_candidates(cv, ci, d_blk, base_gid, n_real, block_n):
+    """Insert block_n per-query candidates into a sorted (k_sub, b) carry.
+
+    ``cv``/``ci`` hold per-query candidate lists down the SUBLANE axis,
+    ascending by the shared lexicographic key (value, global id) — the same
+    order every jnp top-k path in core/topk.py produces.  Each candidate
+    row r of ``d_blk`` (block_n, b) is a lane vector; its insertion rank per
+    query is a sublane-count, and the insert itself is a one-sublane shift —
+    no in-kernel sort needed (Mosaic has none), O(block_n · k_sub) VPU ops.
+    """
+    k_sub, b = cv.shape
+    pos = jax.lax.broadcasted_iota(jnp.int32, (k_sub, b), 0)
+    for r in range(block_n):
+        gid = base_gid + r
+        v_r = d_blk[r:r + 1, :]                       # (1, b)
+        v_r = jnp.where(gid < n_real, v_r, _INF)      # padded doc rows drop
+        # Slots strictly before the insert point: smaller value, or equal
+        # value with smaller global id (candidate gids are unique).
+        before = (cv < v_r) | ((cv == v_r) & (ci < gid))
+        rank = jnp.sum(before.astype(jnp.int32), axis=0, keepdims=True)
+        down_v = jnp.concatenate(
+            [jnp.full((1, b), _INF, jnp.float32), cv[:-1, :]], axis=0)
+        down_i = jnp.concatenate(
+            [jnp.full((1, b), -1, jnp.int32), ci[:-1, :]], axis=0)
+        cv = jnp.where(pos < rank, cv, jnp.where(pos == rank, v_r, down_v))
+        ci = jnp.where(pos < rank, ci, jnp.where(pos == rank, gid, down_i))
+        # rank == k_sub ⇒ no slot matches ⇒ the candidate is dropped (it is
+        # no smaller than everything already kept) — exactly top-k semantics.
+    return cv, ci
+
+
+def _fused_topk_kernel(
+    emb_ref, t_ref, valid_ref, ids_ref, w_ref, vals_ref, idx_ref,
+    z_cache, d_acc, *, block_v: int, block_n: int, n_real: int,
+    bf16_matmul: bool,
+):
+    i = pl.program_id(0)   # doc tile
+    j = pl.program_id(1)   # vocab subtile
+    nj = pl.num_programs(1)
+    n_b, h = valid_ref.shape
+    b_pad = z_cache.shape[1]
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_carry():
+        vals_ref[...] = jnp.full(vals_ref.shape, _INF, jnp.float32)
+        idx_ref[...] = jnp.full(idx_ref.shape, -1, jnp.int32)
+
+    @pl.when(i == 0)
+    def _compute_z_subtile():
+        e = emb_ref[...]                           # (bv, m)
+        t = t_ref[...].reshape(n_b * h, -1)        # (B·h, m)
+        valid = valid_ref[...].reshape(-1)         # (B·h,)
+        e2 = jnp.sum(e * e, axis=-1, keepdims=True)
+        t2 = jnp.sum(t * t, axis=-1, keepdims=True).T
+        if bf16_matmul:
+            et = jax.lax.dot_general(
+                e.astype(jnp.bfloat16), t.astype(jnp.bfloat16),
+                (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+            )
+        else:
+            et = jax.lax.dot_general(
+                e, t, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        sq = jnp.maximum(e2 + t2 - 2.0 * et, 0.0)  # (bv, B·h)
+        sq = jnp.where(valid[None, :] > 0, sq, _INF)
+        zmin = jnp.min(sq.reshape(block_v, n_b, h), axis=2)
+        z = jnp.sqrt(jnp.maximum(zmin, 0.0))       # (bv, B)
+        pad_b = b_pad - n_b
+        z = jnp.concatenate(
+            [z, jnp.zeros((block_v, pad_b), jnp.float32)], axis=1)
+        z_cache[pl.ds(j * block_v, block_v), :] = z
+
+    # One-hot ELL accumulation against the cached Z subtile (MXU).  Ids are
+    # ABSOLUTE vocab rows here (the kernel sees the whole restricted vocab),
+    # so the subtile selection falls out of the iota comparison directly.
+    ids = ids_ref[...]                             # (bn, h1) in [0, v)
+    w = w_ref[...]
+    bn, h1 = ids.shape
+    cols = j * block_v + jax.lax.broadcasted_iota(jnp.int32, (bn, h1, block_v), 2)
+    a = jnp.sum((ids[:, :, None] == cols).astype(jnp.float32) * w[:, :, None],
+                axis=1)                            # (bn, bv)
+    z_sub = z_cache[pl.ds(j * block_v, block_v), :]
+    contrib = jax.lax.dot_general(
+        a, z_sub, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        d_acc[...] = contrib
+
+    @pl.when(j > 0)
+    def _acc():
+        d_acc[...] += contrib
+
+    @pl.when(j == nj - 1)
+    def _merge_rows():
+        # The doc tile's distances are complete — fold them into the carry
+        # and let d_acc be overwritten by the next tile.  The (n, B) matrix
+        # never exists: per-tile distances live only in this VMEM scratch.
+        cv, ci = _insert_candidates(
+            vals_ref[...], idx_ref[...], d_acc[...], i * block_n, n_real,
+            block_n)
+        vals_ref[...] = cv
+        idx_ref[...] = ci
+
+
+def fused_lc_rwmd_topk_pallas(
+    emb: jax.Array,         # (v_pad, m) f32 restricted-vocab embedding rows
+    t: jax.Array,           # (B, h, m) f32 query word embeddings
+    valid: jax.Array,       # (B, h) f32 0/1
+    ids: jax.Array,         # (n_pad, h1) int32 ABSOLUTE resident ELL ids
+    w: jax.Array,           # (n_pad, h1) f32, 0 at padding slots/rows
+    *,
+    k: int,
+    n_real: int,
+    block_v: int = 256,
+    block_n: int = 8,
+    bf16_matmul: bool = False,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming one-sided LC-RWMD top-k: the (n, B) matrix never leaves VMEM.
+
+    Same grid sweep as :func:`fused_lc_rwmd_chunk_pallas` (doc tiles outer,
+    vocab subtiles inner; Z cached in VMEM on the first doc tile's pass), but
+    the per-tile distance block is accumulated in a (block_n, B) VMEM scratch
+    and, once its vocab sweep completes, merged into a sorted per-query
+    (k, B) carry held in the revisited output blocks.  HBM output is the
+    O(k·B) carry — phase-2 distances are never written back at all.
+
+    Returns ``(vals (k_sub, b_pad), gids (k_sub, b_pad))``; callers slice
+    ``[:k, :B]`` and transpose.  Rows ≥ ``n_real`` (doc-axis padding) are
+    masked inside the accumulator.  VMEM budget: the full (v_pad, b_pad) Z
+    cache — callers bound v_pad (the engine's restricted vocab qualifies) or
+    fall back to the jnp streaming path.
+    """
+    v_pad, m = emb.shape
+    n_b, h, _ = t.shape
+    n_pad, h1 = ids.shape
+    if v_pad % block_v != 0 or n_pad % block_n != 0:
+        raise ValueError(
+            f"v={v_pad} / n={n_pad} not multiples of block_v={block_v} / "
+            f"block_n={block_n}")
+    b_pad = max(128, n_b)       # lane-width Z cache / distance blocks
+    k_sub = -(-max(k, 1) // 8) * 8  # sublane-aligned carry height
+    grid = (n_pad // block_n, v_pad // block_v)
+
+    return pl.pallas_call(
+        functools.partial(
+            _fused_topk_kernel, block_v=block_v, block_n=block_n,
+            n_real=n_real, bf16_matmul=bf16_matmul),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_v, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((n_b, h, m), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((n_b, h), lambda i, j: (0, 0)),
+            pl.BlockSpec((block_n, h1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, h1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k_sub, b_pad), lambda i, j: (0, 0)),
+            pl.BlockSpec((k_sub, b_pad), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_sub, b_pad), jnp.float32),
+            jax.ShapeDtypeStruct((k_sub, b_pad), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((v_pad, b_pad), jnp.float32),
+            pltpu.VMEM((block_n, b_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(emb, t, valid, ids, w)

@@ -249,6 +249,117 @@ def lc_rwmd_fused(
     return d[:n]
 
 
+def streaming_phase2_topk(
+    r_ids: Array,    # (n, h1) int32 resident ELL ids (into z's vocab axis)
+    r_w: Array,      # (n, h1) float resident weights (0 = padding)
+    z: Array,        # (v, B) f32 phase-1 output
+    k: int,
+    *,
+    row_block: int = 128,
+    q_gid: Array | None = None,  # (B,) global ids to self-exclude, or None
+) -> tuple[Array, Array]:
+    """Phase-2 ELL SpMM streamed straight into a per-query top-k carry.
+
+    The jnp/scan reduction behind every streaming top-k fallback: resident
+    rows are scanned in ``row_block``-sized slabs, each slab's (R, B) partial
+    distances folded into a :class:`~repro.core.topk.StreamingTopK` carry —
+    the (n, B) matrix never materializes (peak live slab: (R, B)).  Returns
+    ``(dists (B, k), indices (B, k))``, exactly equal (ties included) to
+    ``lax.top_k`` over the materialized matrix.
+    """
+    from repro.core.topk import StreamingTopK
+
+    n, h1 = r_ids.shape
+    b = z.shape[1]
+    kk = min(k, n)
+    r = min(row_block, n)
+    nb = -(-n // r)
+    ids_b = _pad_to(r_ids, nb * r, axis=0).reshape(nb, r, h1)
+    w_b = _pad_to(r_w.astype(jnp.float32), nb * r, axis=0).reshape(nb, r, h1)
+    los = jnp.arange(nb, dtype=jnp.int32) * r
+
+    stk = StreamingTopK(kk)
+
+    def body(carry, xs):
+        ids_blk, w_blk, lo = xs
+        zg = z[ids_blk]                              # (R, h1, B)
+        d_blk = jnp.einsum("rh,rhb->rb", w_blk, zg)  # (R, B)
+        row = lo + jnp.arange(r, dtype=jnp.int32)
+        d_blk = jnp.where((row < n)[:, None], d_blk, jnp.inf)
+        if q_gid is not None:
+            d_blk = jnp.where(row[:, None] == q_gid[None, :], jnp.inf, d_blk)
+        return stk.update_cols(carry, d_blk, row), None
+
+    carry, _ = jax.lax.scan(body, stk.init(b), (ids_b, w_b, los))
+    return carry.dists, carry.indices
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "fuse", "row_block", "block_n", "block_v",
+                     "block_h", "vocab_chunk", "bf16_matmul", "interpret"),
+)
+def lc_rwmd_fused_topk(
+    emb: Array,      # (v, m) float
+    q_ids: Array,    # (B, h) int32
+    q_w: Array,      # (B, h) float (0 = padding)
+    r_ids: Array,    # (n, h1) int32 resident ELL ids
+    r_w: Array,      # (n, h1) float resident weights (0 = padding)
+    *,
+    k: int,
+    fuse: str = "jnp",
+    row_block: int = 128,
+    block_n: int = 8,
+    block_v: int = 256,
+    block_h: int = 128,
+    vocab_chunk: int = 512,
+    bf16_matmul: bool = False,
+    interpret: bool | None = None,
+) -> tuple[Array, Array]:
+    """Streaming one-sided LC-RWMD top-k: (B, k) dists + global doc ids.
+
+    Candidate selection is fused into the phase-2 accumulator, so the (n, B)
+    distance matrix never reaches HBM — the serve hot path's dominant
+    round-trip (ROADMAP item 3).  Exactly equal (ties included) to
+    ``lax.top_k`` over :func:`lc_rwmd_fused`'s output.
+
+    ``fuse``:
+      "kernel" — one fused pallas_call (fused_stream.fused_lc_rwmd_topk_pallas):
+                 Z lives in a VMEM cache, per-tile distances in a VMEM
+                 scratch, the sorted (k, B) carry in the revisited output
+                 block.  HBM peak: O(k·B).  VMEM bounds v (use the engine's
+                 restricted vocab).
+      "jnp"    — phase-1 Z (v, B) in chunks, then the scan reduction of
+                 :func:`streaming_phase2_topk`.  HBM peak: O(v·B) for Z
+                 (v ≪ n at serving scale) — never O(n·B).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    n = r_ids.shape[0]
+    b = q_ids.shape[0]
+    kk = min(k, n)
+
+    if fuse == "kernel":
+        bv = block_v
+        emb_f = _pad_to(
+            _pad_to(emb.astype(jnp.float32), 128, axis=1), bv, axis=0)
+        t = emb_f[q_ids.reshape(-1)].reshape(b, q_ids.shape[1], -1)
+        valid = (q_w > 0).astype(jnp.float32)
+        ids_p = _pad_to(r_ids, block_n, axis=0)
+        w_p = _pad_to(r_w.astype(jnp.float32), block_n, axis=0)
+        vals, gids = _fs.fused_lc_rwmd_topk_pallas(
+            emb_f, t, valid, ids_p, w_p, k=kk, n_real=n, block_v=bv,
+            block_n=block_n, bf16_matmul=bf16_matmul, interpret=interpret)
+        return vals[:kk, :b].T, gids[:kk, :b].T
+    if fuse == "jnp":
+        from repro.core.lc_rwmd import phase1_z
+
+        z = phase1_z(emb, q_ids, q_w, bf16_matmul=bf16_matmul,
+                     vocab_chunk=vocab_chunk)
+        return streaming_phase2_topk(r_ids, r_w, z, kk, row_block=row_block)
+    raise ValueError(f"unknown fuse mode {fuse!r}")
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_n", "bf16_matmul", "interpret")
 )

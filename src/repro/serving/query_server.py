@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lc_rwmd import LCRWMDEngine
+from repro.core.pipeline import AdaptiveRefineBudget
 from repro.data.docs import DocSet, make_docset
 from repro.distributed.lcrwmd_dist import build_serve_step
 
@@ -39,6 +40,12 @@ class ServerConfig:
     rerank_wmd: bool = False        # exact-style re-rank of the top-k
     wmd_kw: dict = dataclasses.field(
         default_factory=lambda: dict(eps=0.02, eps_scaling=3, max_iters=200))
+    # Adaptive rerank budget (rerank_wmd only): grow on pruning failures,
+    # halve after `budget_decay_after` consecutive all-exact batches.  A
+    # budget change rebuilds the serve step (one recompile, O(log) times).
+    adaptive_budget: bool = False
+    budget_decay_after: int | None = 4
+    streaming_topk: bool = True     # fuse selection into the serve step
 
 
 class QueryServer:
@@ -48,18 +55,36 @@ class QueryServer:
         self.resident = resident
         self.emb = jnp.asarray(emb)
         self.cfg = cfg
+        self._mesh = mesh
         # All resident-side prep (vocab restriction, padding, placement on
         # the mesh, resident-embedding gathers) happens ONCE here; per-flush
         # work is only the transient query batch.  The WMD re-rank (when
         # enabled) runs INSIDE the serve step as one fused batched Sinkhorn
-        # call over the LC-RWMD top-2k candidates — no second full pass.
+        # call over the LC-RWMD top-budget candidates — no second full pass.
+        # Candidate selection streams through the phase-2 accumulator
+        # (StreamingTopK): the (n_shard, B) distance block never reaches HBM
+        # on the flush hot path.
         self.engine = LCRWMDEngine(resident, self.emb)
-        self._serve = build_serve_step(
-            mesh, k=cfg.k, refine=cfg.refine_symmetric, bf16_matmul=False,
-            engine=self.engine, rerank_wmd=cfg.rerank_wmd,
-            rerank_budget=2 * cfg.k, wmd_kw=cfg.wmd_kw)
+        self.budget: AdaptiveRefineBudget | None = None
+        if cfg.rerank_wmd and cfg.adaptive_budget:
+            self.budget = AdaptiveRefineBudget(
+                k=cfg.k, n_resident=resident.n_docs, init=2 * cfg.k,
+                decay_after=cfg.budget_decay_after)
+        self._serve = self._build_serve(
+            self.budget.budget if self.budget else 2 * cfg.k)
         self._pending: list[tuple[np.ndarray, np.ndarray]] = []
-        self.stats = {"queries": 0, "batches": 0, "wmd_reranks": 0}
+        self.stats = {"queries": 0, "batches": 0, "wmd_reranks": 0,
+                      "budget_rebuilds": 0, "budget_trajectory": []}
+        if self.budget is not None:
+            self.stats["budget_trajectory"].append(self.budget.budget)
+
+    def _build_serve(self, rerank_budget: int):
+        cfg = self.cfg
+        return build_serve_step(
+            self._mesh, k=cfg.k, refine=cfg.refine_symmetric,
+            bf16_matmul=False, engine=self.engine, rerank_wmd=cfg.rerank_wmd,
+            rerank_budget=rerank_budget, wmd_kw=cfg.wmd_kw,
+            streaming=cfg.streaming_topk)
 
     # -- request path ------------------------------------------------------
     def submit(self, ids: np.ndarray, weights: np.ndarray):
@@ -85,6 +110,15 @@ class QueryServer:
         self.stats["batches"] += 1
         if self.cfg.rerank_wmd:
             self.stats["wmd_reranks"] += len(qs)
+        if self.budget is not None and res.pruned_exact is not None:
+            # Feed only the REAL queries' exactness flags (padding queries
+            # are all-zero histograms, their flags are meaningless).
+            old = self.budget.budget
+            new = self.budget.update(np.asarray(res.pruned_exact)[: len(qs)])
+            if new != old:
+                self._serve = self._build_serve(new)
+                self.stats["budget_rebuilds"] += 1
+                self.stats["budget_trajectory"].append(new)
 
         tk_i = np.asarray(res.topk.indices)
         tk_d = np.asarray(res.topk.dists)

@@ -16,7 +16,9 @@ The paper's clustering workload (Sec. I motivates LC-RWMD for "clustering
     (:func:`repro.core.wmd.wmd_batched_dispatch`) on the same candidate
     pairs.  The medoid-update stage shortlists members closest to the
     cluster's WCD centroid and picks the one minimizing the summed RWMD to
-    all members (one engine block per cluster).
+    all members — all clusters' shortlists batched into ONE
+    (n, k·medoid_candidates) engine block with in-device per-cluster
+    membership masking.
 
 WCD is a heuristic prefilter here, not a bound on RWMD (WCD ≤ WMD holds,
 WCD ≤ RWMD does not in general); ``prefilter=None`` disables it and scores
@@ -108,10 +110,19 @@ def _assign_full(d_block: Array):
     return jnp.argmin(d_block, axis=1).astype(jnp.int32), jnp.min(d_block, axis=1)
 
 
-@jax.jit
-def _medoid_cost(d_block: Array, member: Array):
-    """Summed distance of each candidate column to the cluster members."""
-    return jnp.sum(jnp.where(member[:, None], d_block, 0.0), axis=0)
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _medoid_cost_batched(block: Array, labels: Array, k: int, c: int):
+    """Per-cluster candidate costs from ONE (n, k·c) engine block.
+
+    ``block[:, j*c + u]`` is the distance of every doc to cluster j's u-th
+    shortlisted candidate; membership is masked in-device per cluster, so
+    the k per-cluster engine calls of the old medoid-update stage collapse
+    into a single batched block.  Returns (k, c) summed member distances.
+    """
+    n = block.shape[0]
+    member = labels[:, None] == jnp.arange(k, dtype=labels.dtype)[None, :]
+    blk = block.reshape(n, k, c)
+    return jnp.sum(jnp.where(member[:, :, None], blk, 0.0), axis=0)
 
 
 def kmedoids(
@@ -163,21 +174,32 @@ def kmedoids(
         # Medoid update: per cluster, shortlist the members nearest the
         # cluster's WCD centroid, then pick the shortlisted member whose
         # summed RWMD to all members is smallest (exact over the shortlist).
+        # ALL clusters' shortlists go through ONE (n, k·c_upd) engine block;
+        # per-cluster membership is masked in-device (_medoid_cost_batched)
+        # instead of issuing one engine call per cluster.
         new_medoids = medoids.copy()
         cen_np = np.asarray(cen)
+        c_upd = medoid_candidates
+        shortlists = np.repeat(medoids[:, None], c_upd, axis=1).astype(np.int32)
+        valid_len = np.zeros(n_clusters, dtype=np.int64)
         for j in range(n_clusters):
             members = labels == j
             if not members.any():
-                continue  # empty cluster keeps its medoid
+                continue  # empty cluster keeps its medoid (valid_len 0)
             mean_c = cen_np[members].mean(axis=0)
             m_ids = np.nonzero(members)[0]
             d_c = np.linalg.norm(cen_np[m_ids] - mean_c, axis=1)
-            short = m_ids[np.argsort(d_c)[:medoid_candidates]]
-            pad = np.resize(short, medoid_candidates)  # fixed engine shape
-            block = engine.symmetric_resident(jnp.asarray(pad, jnp.int32))
-            costs = np.asarray(
-                _medoid_cost(block, jnp.asarray(members)))[: len(short)]
-            new_medoids[j] = short[int(np.argmin(costs))]
+            short = m_ids[np.argsort(d_c)[:c_upd]]
+            shortlists[j] = np.resize(short, c_upd)  # fixed engine shape
+            valid_len[j] = len(short)
+        block = engine.symmetric_resident(
+            jnp.asarray(shortlists.reshape(-1), jnp.int32))  # (n, k·c_upd)
+        costs = np.asarray(_medoid_cost_batched(
+            block, jnp.asarray(labels), n_clusters, c_upd))   # (k, c_upd)
+        for j in range(n_clusters):
+            if valid_len[j]:
+                best = int(np.argmin(costs[j, : valid_len[j]]))
+                new_medoids[j] = shortlists[j, best]
         if np.array_equal(np.sort(new_medoids), np.sort(medoids)):
             medoids = new_medoids
             break

@@ -116,16 +116,11 @@ class SelfPairScheduler:
                 )
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _block_topk(block: Array, k: int, col_idx: Array) -> topk_lib.TopK:
-    """Per-row top-k of a block, indices mapped to global doc ids."""
-    tk = topk_lib.topk_smallest(block, k)
-    return topk_lib.TopK(tk.dists, col_idx[tk.indices])
-
-
-@functools.partial(jax.jit, static_argnums=(2,))
-def _merge(a: topk_lib.TopK, b: topk_lib.TopK, k: int) -> topk_lib.TopK:
-    return topk_lib.merge_topk([a, b], k)
+@functools.partial(jax.jit, static_argnums=(3,))
+def _fold_block(carry: topk_lib.TopK, block: Array, col_gids: Array,
+                k: int) -> topk_lib.TopK:
+    """Fold one (R, C) block row-wise into the shared streaming carry."""
+    return topk_lib.StreamingTopK(k).update_rows(carry, block, col_gids)
 
 
 def corpus_self_topk(
@@ -134,7 +129,8 @@ def corpus_self_topk(
     """Per-document k nearest neighbours over the engine's own corpus.
 
     Exact symmetric LC-RWMD top-k (self excluded), computed by the pair-tiled
-    scheduler — the running per-row merge across tiles means the peak
+    scheduler — every block folds into the shared
+    :class:`~repro.core.topk.StreamingTopK` carry per row tile, so the peak
     distance intermediate is one (tile, tile) block.
 
     Returns a TopK of (n, k): ascending distances, global doc ids.
@@ -142,19 +138,15 @@ def corpus_self_topk(
     n = engine.resident.n_docs
     if not 1 <= k <= n - 1:
         raise ValueError(f"need 1 <= k <= n-1 = {n - 1}, got {k}")
-    # tile >= k keeps every per-block candidate set k-wide, so the running
-    # merge is always a fixed-shape (tile, 2k) -> (tile, k) top-k.
     sched = SelfPairScheduler(engine, tile=max(tile, k))
-    state: list[topk_lib.TopK | None] = [None] * len(sched.starts)
-
-    def update(row_tile: int, cand: topk_lib.TopK) -> None:
-        cur = state[row_tile]
-        state[row_tile] = cand if cur is None else _merge(cur, cand, k)
+    stk = topk_lib.StreamingTopK(k)
+    state = [stk.init(sched.tile) for _ in sched.starts]
 
     for blk in sched.blocks():
-        update(blk.s, _block_topk(blk.block, k, blk.col_idx))
+        state[blk.s] = _fold_block(state[blk.s], blk.block, blk.col_idx, k)
         if blk.mirrored:
-            update(blk.t, _block_topk(blk.block.T, k, blk.row_idx))
+            state[blk.t] = _fold_block(state[blk.t], blk.block.T,
+                                       blk.row_idx, k)
     return topk_lib.TopK(
         dists=jnp.concatenate([st.dists for st in state])[:n],
         indices=jnp.concatenate([st.indices for st in state])[:n],
@@ -200,7 +192,7 @@ def corpus_vs_corpus_topk(
     tile = min(max(tile, k_res), n_q)
     padded = _pad_docset(corpus, math.ceil(n_q / tile) * tile)
     q_rows: list[topk_lib.TopK] = []
-    running: topk_lib.TopK | None = None
+    running = topk_lib.StreamingTopK(k_res).init(n_r) if resident_side else None
     for lo in _tile_starts(n_q, tile):
         d = engine.symmetric(padded.slice_rows(lo, tile))  # (n_r, tile)
         col_gid = jnp.arange(lo, lo + tile, dtype=jnp.int32)
@@ -208,8 +200,7 @@ def corpus_vs_corpus_topk(
         d = jnp.where((col_gid >= n_q)[None, :], _INF, d)
         q_rows.append(topk_lib.topk_smallest_cols(d, k_q))
         if resident_side:
-            cand = _block_topk(d, k_res, col_gid)
-            running = cand if running is None else _merge(running, cand, k_res)
+            running = _fold_block(running, d, col_gid, k_res)
     q_tk = topk_lib.TopK(
         dists=jnp.concatenate([p.dists for p in q_rows])[:n_q],
         indices=jnp.concatenate([p.indices for p in q_rows])[:n_q],

@@ -1,10 +1,14 @@
 """Near-duplicate graphs from the tiled all-pairs stream.
 
 Consumes the :class:`~repro.workloads.corpus_distance.SelfPairScheduler`
-block stream: every symmetric (tile, tile) block is thresholded on the
-host and its surviving edges appended to a CSR-style adjacency — the
-data-dependent edge count lives entirely host-side, so the device program
-keeps the scheduler's fixed tile shapes.
+block stream: every symmetric (tile, tile) block is thresholded IN-DEVICE
+into a fixed-size survivor list (flat position + distance, compacted with a
+shape-static ``nonzero``), so the host only ever touches survivor-sized
+arrays — the data-dependent edge count stays host-side while the device
+program keeps the scheduler's fixed tile shapes.  Blocks whose survivor
+count overflows the fixed capacity (near-duplicate blocks are sparse by
+construction, so this is rare) fall back to a full host-side ``np.nonzero``
+of that one block.
 
 Graphs are undirected and stored with BOTH orientations (CSR rows are
 complete neighbor lists).  ``threshold`` is in symmetric LC-RWMD units —
@@ -14,8 +18,10 @@ true WMD near-duplicates at the same threshold (no false dismissals).
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,8 +57,25 @@ def _edges_to_csr(rows, cols, vals, n: int) -> NeighborGraph:
                          data=vals.astype(np.float32), n_docs=n)
 
 
+@functools.partial(jax.jit, static_argnums=(2,))
+def _block_survivors(block: jax.Array, threshold: jax.Array, cap: int):
+    """In-device threshold + compaction of one (R, C) block.
+
+    Returns ``(count, flat_pos (cap,), dists (cap,))`` — a fixed-size
+    overflow list: positions of the first ``cap`` survivors in flat
+    row-major order (shape-static ``nonzero``) plus their distances.  The
+    host reads ``count`` and slices; ``count > cap`` signals overflow.
+    """
+    flat = block.reshape(-1)
+    mask = flat <= threshold  # +inf masks never pass
+    count = jnp.sum(mask.astype(jnp.int32))
+    (pos,) = jnp.nonzero(mask, size=cap, fill_value=0)
+    return count, pos.astype(jnp.int32), flat[pos]
+
+
 def near_duplicate_graph(
-    engine: LCRWMDEngine, threshold: float, *, tile: int = 64
+    engine: LCRWMDEngine, threshold: float, *, tile: int = 64,
+    block_edge_cap: int | None = None,
 ) -> NeighborGraph:
     """All doc pairs with symmetric LC-RWMD ≤ ``threshold``, as CSR.
 
@@ -60,18 +83,33 @@ def near_duplicate_graph(
     orientations from the same device block (the s == t diagonal block
     already holds both and its self-distance diagonal is pre-masked +inf,
     so identical docs link at distance 0 without self-loops).
+
+    Each block is thresholded and compacted IN-DEVICE to a
+    ``block_edge_cap``-sized survivor list (default ``4·tile``), so host
+    transfers are survivor-sized, not (tile, tile)-sized; a block whose
+    survivor count overflows the cap falls back to a host-side
+    ``np.nonzero`` of that one block.
     """
     n = engine.resident.n_docs
     sched = SelfPairScheduler(engine, tile=tile)
+    cap = block_edge_cap or 4 * sched.tile
+    thr = jnp.float32(threshold)
     rows, cols, vals = [], [], []
     for blk in sched.blocks():
-        b = np.asarray(blk.block)
-        r, c = np.nonzero(b <= threshold)  # +inf masks never pass
-        if not len(r):
+        count, pos, d_dev = _block_survivors(blk.block, thr, cap)
+        cnt = int(count)
+        if cnt == 0:
             continue
+        if cnt <= cap:
+            flat = np.asarray(pos)[:cnt].astype(np.int64)
+            r, c = flat // sched.tile, flat % sched.tile
+            d = np.asarray(d_dev)[:cnt]
+        else:  # overflow: full host pass for this one (dense) block
+            b = np.asarray(blk.block)
+            r, c = np.nonzero(b <= threshold)
+            d = b[r, c]
         gi = np.asarray(blk.row_idx)[r].astype(np.int64)
         gj = np.asarray(blk.col_idx)[c].astype(np.int64)
-        d = b[r, c]
         rows.append(gi)
         cols.append(gj)
         vals.append(d)

@@ -153,7 +153,13 @@ def test_pruned_wmd_topk_engine_parity(small_corpus):
 
 
 def test_engine_serve_step_parity(small_corpus):
-    """Engine-backed distributed serve == function serve on the host mesh."""
+    """Engine-backed distributed serve == function serve on the host mesh.
+
+    Both engine modes: streaming=False keeps the materialized (n_local, B)
+    block and its d_local diagnostics; the default streaming accumulator
+    returns the same top-k from (B, k)-sized per-shard partials (d_local
+    intentionally absent — the block never exists).
+    """
     from repro.distributed.lcrwmd_dist import build_serve_step
     from repro.launch.mesh import make_host_mesh
 
@@ -161,11 +167,20 @@ def test_engine_serve_step_parity(small_corpus):
     emb = jnp.asarray(small_corpus.emb)
     queries = ds[:5]
     mesh = make_host_mesh(data=1, model=1)
+    eng = LCRWMDEngine(ds, emb)
     base = build_serve_step(mesh, k=7, bf16_matmul=False)(ds, queries, emb)
-    eng = build_serve_step(mesh, k=7, bf16_matmul=False,
-                           engine=LCRWMDEngine(ds, emb))(queries)
-    np.testing.assert_allclose(np.asarray(eng.topk.dists),
+    mat = build_serve_step(mesh, k=7, bf16_matmul=False,
+                           engine=eng, streaming=False)(queries)
+    np.testing.assert_allclose(np.asarray(mat.topk.dists),
                                np.asarray(base.topk.dists),
                                rtol=1e-4, atol=1e-2)
-    np.testing.assert_allclose(np.asarray(eng.d_local),
+    np.testing.assert_allclose(np.asarray(mat.d_local),
                                np.asarray(base.d_local), rtol=1e-4, atol=1e-2)
+    stream = build_serve_step(mesh, k=7, bf16_matmul=False,
+                              engine=eng)(queries)  # streaming default
+    assert stream.d_local is None
+    np.testing.assert_array_equal(np.asarray(stream.topk.indices),
+                                  np.asarray(mat.topk.indices))
+    np.testing.assert_allclose(np.asarray(stream.topk.dists),
+                               np.asarray(mat.topk.dists),
+                               rtol=1e-5, atol=1e-5)
