@@ -48,6 +48,7 @@ def main() -> None:
         kernels_bench,
         pruning_bench,
         scaling_analysis,
+        serving_bench,
         table3_complexity,
         workloads_bench,
     )
@@ -60,6 +61,7 @@ def main() -> None:
         "pruning_bench": pruning_bench,
         "kernels_bench": kernels_bench,
         "scaling_analysis": scaling_analysis,
+        "serving_bench": serving_bench,
         "workloads_bench": workloads_bench,
     }
     print("name,us_per_call,derived")

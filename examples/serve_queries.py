@@ -3,6 +3,12 @@ corpus is loaded once; a stream of query documents is batched and answered
 with top-k nearest neighbours; optional WMD re-rank.
 
     PYTHONPATH=src python examples/serve_queries.py [--n-docs 4096] [--n-queries 128]
+    PYTHONPATH=src python examples/serve_queries.py --async   # pipelined server
+
+``--async`` serves the same stream through :class:`AsyncQueryServer`:
+``submit`` returns a future immediately and the worker thread overlaps each
+batch's host prep with the previous batch's device execution (double
+buffering) — compare the ms/query lines.
 """
 
 import argparse
@@ -12,7 +18,7 @@ import numpy as np
 
 from repro.data.synth import CorpusSpec, make_corpus
 from repro.launch.mesh import make_host_mesh
-from repro.serving.query_server import QueryServer, ServerConfig
+from repro.serving import AsyncQueryServer, QueryServer, ServerConfig
 
 
 def main():
@@ -21,16 +27,17 @@ def main():
     ap.add_argument("--n-queries", type=int, default=128)
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--rerank-wmd", action="store_true")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="serve through the double-buffered AsyncQueryServer")
     args = ap.parse_args()
 
     corpus = make_corpus(CorpusSpec(
         n_docs=args.n_docs, vocab_size=8192, emb_dim=64, h_max=32,
         mean_h=18.0, n_classes=8, seed=1))
     mesh = make_host_mesh(data=1, model=1)  # scale via the production mesh
-    server = QueryServer(
-        corpus.docs, corpus.emb, mesh,
-        ServerConfig(k=args.k, max_batch=32, h_max=32,
-                     refine_symmetric=True, rerank_wmd=args.rerank_wmd))
+    cfg = ServerConfig(k=args.k, max_batch=32, h_max=32,
+                       refine_symmetric=True, rerank_wmd=args.rerank_wmd,
+                       max_wait_s=0.05)
 
     # Query stream: perturbed copies of random resident docs (so the true
     # nearest neighbour is known) + fresh random docs.
@@ -42,7 +49,6 @@ def main():
         src = int(rng.integers(0, args.n_docs))
         ids = ids_np[src].copy()
         w = w_np[src].copy()
-        keep = w > 0
         drop = rng.random(len(w)) < 0.2      # drop 20% of words
         w = np.where(drop, 0.0, w)
         if w.sum() == 0:
@@ -50,13 +56,24 @@ def main():
         stream.append((ids, w))
         truth.append(src)
 
-    t0 = time.perf_counter()
-    answers = list(server.serve_stream(stream))
-    dt = time.perf_counter() - t0
+    if args.use_async:
+        with AsyncQueryServer(corpus.docs, corpus.emb, mesh, cfg) as server:
+            t0 = time.perf_counter()
+            futures = [server.submit(ids, w) for ids, w in stream]
+            server.drain()
+            answers = [f.result() for f in futures]
+            dt = time.perf_counter() - t0
+        mode = "async double-buffered"
+    else:
+        server = QueryServer(corpus.docs, corpus.emb, mesh, cfg)
+        t0 = time.perf_counter()
+        answers = list(server.serve_stream(stream))
+        dt = time.perf_counter() - t0
+        mode = "sync lock-step"
 
     recall = np.mean([truth[i] in set(a[0].tolist())
                       for i, a in enumerate(answers)])
-    print(f"served {len(answers)} queries in {dt:.2f}s "
+    print(f"[{mode}] served {len(answers)} queries in {dt:.2f}s "
           f"({1e3 * dt / len(answers):.1f} ms/query incl. batching)")
     print(f"recall@{args.k} of the perturbed source doc: {recall:.3f}")
     print(f"server stats: {server.stats}")

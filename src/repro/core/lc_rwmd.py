@@ -497,16 +497,27 @@ class LCRWMDEngine:
     def topk_streaming(self, queries: DocSet, k: int):
         """Per-query top-k smallest ONE-SIDED LC-RWMD (D1), streamed.
 
-        Matches the distributed serve step's candidate semantics.  The
-        (n, B) matrix never materializes; exactly ``lax.top_k`` of
+        Args:
+          queries: DocSet with ids/weights (B, h); ids index the FULL
+            embedding table (out-of-resident-vocab words stay exact).
+          k: results per query.  JIT-STATIC — one compile per distinct
+            ``k`` (and per query batch shape); serve at a fixed ``k``.
+
+        Returns a :class:`~repro.core.topk.TopK` of (B, k): ascending
+        distances + global resident doc ids.  Matches the distributed
+        serve step's candidate semantics.  The (n, B) matrix never
+        materializes (resident rows fold into the carry in ``row_block``
+        slabs — the ctor knob); exactly ``lax.top_k`` of
         :meth:`one_sided`'s transpose, ties included."""
         return self._topk_stream(k, False, queries.ids, queries.weights)
 
     def symmetric_topk_streaming(self, queries: DocSet, k: int):
         """Per-query top-k smallest SYMMETRIC bound max(D1, D2ᵀ), streamed.
 
-        The pruning cascade's stage-1 candidate selector: both directions
-        are evaluated per row slab and folded into the (B, k) carry."""
+        Same signature/shape contract as :meth:`topk_streaming` (``k`` is
+        jit-static, result (B, k), O(k·B + row_block·B) peak).  The pruning
+        cascade's stage-1 candidate selector: both directions are evaluated
+        per row slab and folded into the (B, k) carry."""
         return self._topk_stream(k, True, queries.ids, queries.weights)
 
     # -- corpus-analytics (query-tile) entry points ------------------------
@@ -531,10 +542,16 @@ class LCRWMDEngine:
     def symmetric_resident(self, idx: Array) -> Array:
         """Tight symmetric bound (n, B) whose queries are resident docs ``idx``.
 
-        Both directions run from the engine's pre-gathered resident targets
-        (no per-call ``emb[ids]`` gather), and phase 1 sees only the
-        restricted vocabulary — exact, since resident words are by
-        construction inside ``v_e``.
+        Args:
+          idx: (B,) int32 resident doc ids; out-of-range entries (tile
+            padding, e.g. -1) behave as empty histograms and produce +inf
+            columns.  Keep ``B`` fixed across calls — the jit cache is
+            keyed on the tile shape.
+
+        Returns (n, B) f32.  Both directions run from the engine's
+        pre-gathered resident targets (no per-call ``emb[ids]`` gather),
+        and phase 1 sees only the restricted vocabulary — exact, since
+        resident words are by construction inside ``v_e``.
         """
         return self._symmetric_resident(jnp.asarray(idx, jnp.int32))
 
@@ -560,11 +577,23 @@ class LCRWMDEngine:
     ):
         """Batched Sinkhorn-WMD re-rank of per-query candidate doc ids.
 
-        ``cand_indices`` (B, budget) int32 resident doc ids (e.g. an RWMD
-        top-``budget``); all B·budget pairs are solved in ONE batched
+        Args:
+          queries: DocSet (B, h) — same batch the candidates were selected
+            for.
+          cand_indices: (B, budget) int32 resident doc ids (e.g. an RWMD
+            top-``budget`` from :meth:`topk_streaming`).
+          k: results per query (k ≤ budget).  JIT-STATIC.
+          sinkhorn_kw: solver knobs (eps, eps_scaling, max_iters, …),
+            forwarded to :func:`repro.core.wmd.wmd_candidate_values`.
+            JIT-STATIC — hashed as a sorted items tuple, so pass plain
+            scalars and reuse the same dict across calls to stay on one
+            compile.
+
+        Returns a :class:`~repro.core.topk.TopK` of (B, k): ascending WMD +
+        global doc ids.  All B·budget pairs are solved in ONE batched
         log-domain Sinkhorn call fed by the engine's pre-gathered resident
-        embeddings, then the k smallest WMD per query are returned as a
-        :class:`~repro.core.topk.TopK` with global doc ids.
+        embeddings (the ``use_kernel`` engine flag routes it through the
+        fused Pallas SDDMM+iteration kernel).
         """
         items = tuple(sorted((sinkhorn_kw or {}).items()))
         return self._rerank(k, items, queries.ids, queries.weights,

@@ -58,6 +58,17 @@ def pruned_wmd_topk(
 ) -> PrunedWMDResult:
     """Top-k WMD per query via the RWMD pruning cascade. jit-compatible.
 
+    Shapes: ``resident`` (n, h1) / ``queries`` (B, h2) DocSets, ``emb``
+    (v, m) → :class:`PrunedWMDResult` with ``topk``/``rwmd_topk`` (B, k)
+    TopKs (ascending; global resident doc ids), ``n_refined``/``cutoff``
+    (B,), and ``pruned_exact`` (B,) bool — True certifies the WMD top-k
+    equals the full-corpus WMD top-k.  ``k`` and ``refine_budget`` select
+    result/candidate widths, so treat them as jit-static (mark them static
+    if you wrap this in ``jax.jit``); ``sinkhorn_kw`` must likewise be
+    hashable-stable per compile.  ``refine_budget`` defaults to
+    ``min(4·k, n)`` and is clamped to ``[k, n]`` — feed
+    :class:`AdaptiveRefineBudget` with ``pruned_exact`` to tune it online.
+
     ``engine``: a prebuilt :class:`LCRWMDEngine` over the SAME resident set
     and embeddings — stage 1 then reuses its restricted vocabulary and
     pre-gathered resident tensors instead of re-deriving them per call

@@ -104,6 +104,17 @@ def build_serve_step(
 ):
     """Returns jit'd ``serve(resident, queries, emb) -> ServeResult``.
 
+    Shapes: ``queries`` (B, h) DocSet (keep B fixed — the compiled step is
+    shape-specialized; the query servers pad to a fixed ``max_batch``) →
+    ``ServeResult.topk`` (B, k) replicated TopK of global doc ids,
+    ``d_local`` (n_local, B) shard distances (None when streaming), and
+    ``pruned_exact`` (B,) bool (rerank path only).  Everything passed HERE
+    — ``k``, ``refine``, ``rerank_wmd``/``rerank_budget``/``wmd_kw``,
+    ``streaming``/``row_block``, ``self_exclude``, ``bf16_matmul``,
+    ``phase1_full_mesh`` — is baked into the compiled step; changing any of
+    them means building a new serve step (the servers rebuild on adaptive-
+    budget changes and count it in ``stats["budget_rebuilds"]``).
+
     ``engine``: a prebuilt :class:`repro.core.lc_rwmd.LCRWMDEngine`.  When
     given, the returned callable is ``serve(queries) -> ServeResult``: the
     resident tensors and the (vocab-restricted, padded) embedding shards are
@@ -423,11 +434,17 @@ def _build_engine_serve_step(
     return serve
 
 
+@jax.jit
 def _symmetric_refine(
     resident: DocSet, queries: DocSet, emb: Array, tk: TopK
 ) -> TopK:
     """Tighten D1 candidates with the swapped-direction bound (paper's
-    max(D1, D2ᵀ)) evaluated only on the (B, k) candidate pairs."""
+    max(D1, D2ᵀ)) evaluated only on the (B, k) candidate pairs.
+
+    jit'd at module level (DocSet/TopK are pytrees): the per-candidate
+    ``rwmd_pair`` vmap is traced once per shape, not per serve call — the
+    untraced version cost ~100 ms of host time PER FLUSH, which serialized
+    the async pipeline's host stage (see EXPERIMENTS.md §Serving)."""
     from repro.core.rwmd import rwmd_pair
 
     def per_query(q_ids, q_w, cand_idx, cand_d):
@@ -448,7 +465,20 @@ def _wmd_rerank(
     resident: DocSet, queries: DocSet, emb: Array, tk: TopK, k: int,
     wmd_kw: dict | None,
 ) -> TopK:
-    """Re-rank (B, budget) candidates by batched Sinkhorn-WMD; keep top-k."""
+    """Re-rank (B, budget) candidates by batched Sinkhorn-WMD; keep top-k.
+
+    Engine-less serve path only (the engine path uses the already-jit'd
+    :meth:`LCRWMDEngine.rerank_topk`).  Dispatches through a jit cache keyed
+    on ``(k, wmd_kw)`` so the batched solve is traced once per shape."""
+    return _wmd_rerank_jit(resident, queries, emb, tk, k,
+                           tuple(sorted((wmd_kw or {}).items())))
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5))
+def _wmd_rerank_jit(
+    resident: DocSet, queries: DocSet, emb: Array, tk: TopK, k: int,
+    kw_items: tuple,
+) -> TopK:
     from repro.core.topk import topk_from_candidates
     from repro.core.wmd import wmd_candidate_values
 
@@ -456,7 +486,7 @@ def _wmd_rerank(
     vals = wmd_candidate_values(
         emb[resident.ids[flat]], resident.weights[flat],
         emb[queries.ids], queries.weights,
-        **(wmd_kw or {}),
+        **dict(kw_items),
     )
     return topk_from_candidates(vals, tk.indices, k)
 

@@ -323,6 +323,15 @@ def lc_rwmd_fused_topk(
     round-trip (ROADMAP item 3).  Exactly equal (ties included) to
     ``lax.top_k`` over :func:`lc_rwmd_fused`'s output.
 
+    Shapes: ``emb (v, m)``, ``q_ids``/``q_w (B, h)``, ``r_ids``/``r_w
+    (n, h1)`` → ``(dists (B, k), doc_ids (B, k))``, distances ascending.
+
+    JIT-STATIC kwargs (each distinct value compiles a new program): ``k``,
+    ``fuse``, and every tiling knob — ``row_block`` (jnp slab rows),
+    ``block_n``/``block_v``/``block_h`` (Pallas tile sizes), ``vocab_chunk``
+    (phase-1 chunking), plus ``bf16_matmul``/``interpret``.  Only the array
+    arguments may vary call-to-call without recompiling.
+
     ``fuse``:
       "kernel" — one fused pallas_call (fused_stream.fused_lc_rwmd_topk_pallas):
                  Z lives in a VMEM cache, per-tile distances in a VMEM

@@ -1,0 +1,20 @@
+"""Query serving front-ends over the LC-RWMD engine.
+
+:class:`QueryServer` is the synchronous reference server;
+:class:`AsyncQueryServer` is the double-buffered pipeline (``submit`` →
+:class:`ServeFuture`, host batching overlapped with device serve).  See
+``docs/ARCHITECTURE.md`` §Serving for the pipeline diagram.
+"""
+
+from repro.serving.query_server import (
+    Answer,
+    AsyncQueryServer,
+    QueryServer,
+    ServeFuture,
+    ServerConfig,
+)
+
+__all__ = [
+    "Answer", "AsyncQueryServer", "QueryServer", "ServeFuture",
+    "ServerConfig",
+]

@@ -1,4 +1,4 @@
-"""LC-RWMD query server: batched similarity serving against a resident corpus.
+"""LC-RWMD query serving: batched similarity against a resident corpus.
 
 Production loop per the paper's deployment (Sec. VI): a RESIDENT document
 set is loaded once (sharded over the batch axes of the mesh); TRANSIENT
@@ -9,25 +9,54 @@ refinement stages tighten the LC-RWMD lower bound per the pruning cascade:
     LC-RWMD (all residents)  ->  top-k  ->  [symmetric RWMD refine]
                                          ->  [Sinkhorn-WMD re-rank]
 
-The server is synchronous-batched (collect up to ``max_batch`` or
-``max_wait_s``); stale-but-full batches keep the MXU busy — the paper's
-many-to-many mode.
+Two front-ends share one serving core (:class:`_ServeCore` — engine build,
+fixed-shape host batching, serve-step dispatch, adaptive-budget feedback):
+
+* :class:`QueryServer` — the synchronous reference server.  ``submit`` +
+  ``flush`` / ``serve_stream`` run host prep, device serve, and result
+  readback in lock-step; simple, deterministic, the parity oracle.
+
+* :class:`AsyncQueryServer` — the double-buffered pipeline.  ``submit``
+  returns a :class:`ServeFuture` immediately (bounded pending queue;
+  backpressure blocks the producer at capacity); a worker thread batches
+  and DISPATCHES batch *i+1*'s host prep while batch *i* executes on the
+  device.  JAX's async dispatch makes this a true two-stage pipeline on a
+  single worker thread: the serve step returns device futures without
+  blocking, ``jax.block_until_ready`` is deferred to result-delivery time,
+  and up to ``ServerConfig.pipeline_depth`` batches are in flight.
+  Futures always resolve in submission order.
+
+Both servers preserve the :class:`~repro.distributed.lcrwmd_dist.ServeResult`
+contract — ``pruned_exact`` certificates feed the adaptive rerank budget,
+whose changes rebuild the serve step (one recompile, O(log) times), with
+the full trajectory recorded in ``stats``.
 """
 
 from __future__ import annotations
 
+import asyncio
+import concurrent.futures
 import dataclasses
+import threading
 import time
-from typing import Sequence
+from collections import deque
+from typing import Any, Callable, NamedTuple, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+import jax.numpy as jnp
 
 from repro.core.lc_rwmd import LCRWMDEngine
 from repro.core.pipeline import AdaptiveRefineBudget
 from repro.data.docs import DocSet, make_docset
-from repro.distributed.lcrwmd_dist import build_serve_step
+from repro.distributed.lcrwmd_dist import ServeResult, build_serve_step
+
+#: One answered query: (doc ids (k,) int, distances (k,) float), ascending.
+Answer = tuple[np.ndarray, np.ndarray]
+
+#: One pending query: (ids (h,), weights (h,)) numpy histograms — or, when a
+#: ``preprocess`` hook is installed, whatever raw payload that hook accepts.
+QueryLike = Any
 
 
 @dataclasses.dataclass
@@ -46,10 +75,41 @@ class ServerConfig:
     adaptive_budget: bool = False
     budget_decay_after: int | None = 4
     streaming_topk: bool = True     # fuse selection into the serve step
+    # Async pipeline knobs (AsyncQueryServer only):
+    queue_capacity: int | None = None  # pending-query bound; default 4*max_batch
+    pipeline_depth: int = 2            # device batches in flight (2 = double buffer)
 
 
-class QueryServer:
-    """Single-process reference implementation (the mesh does the scaling)."""
+class ServeFuture(concurrent.futures.Future):
+    """Completion handle for one submitted query.
+
+    ``result(timeout=None)`` blocks for and returns the :data:`Answer`
+    ``(doc_ids (k,), distances (k,))``; inside a coroutine the future can be
+    ``await``-ed directly.  Resolution order across futures equals
+    submission order (the pipeline collects batches FIFO).
+    """
+
+    def __await__(self):
+        return asyncio.wrap_future(self).__await__()
+
+
+class _InFlight(NamedTuple):
+    """A dispatched-but-uncollected batch: device handles + bookkeeping."""
+
+    result: ServeResult  # device arrays (async-dispatched, not yet awaited)
+    n_real: int          # real (non-padding) queries in the batch
+    seq: int             # dispatch sequence number (trace/debug)
+
+
+class _ServeCore:
+    """Shared serving core: engine, serve step, host batching, budget.
+
+    ``dispatch`` is the non-blocking half (host prep + serve-step call —
+    JAX async dispatch returns device futures); ``collect`` is the blocking
+    half (device readback, stats, adaptive-budget feedback + rebuild).  The
+    synchronous server calls them back-to-back; the async pipeline keeps up
+    to ``pipeline_depth`` dispatched batches open between them.
+    """
 
     def __init__(self, resident: DocSet, emb, mesh, cfg: ServerConfig):
         self.resident = resident
@@ -72,11 +132,14 @@ class QueryServer:
                 decay_after=cfg.budget_decay_after)
         self._serve = self._build_serve(
             self.budget.budget if self.budget else 2 * cfg.k)
-        self._pending: list[tuple[np.ndarray, np.ndarray]] = []
         self.stats = {"queries": 0, "batches": 0, "wmd_reranks": 0,
                       "budget_rebuilds": 0, "budget_trajectory": []}
         if self.budget is not None:
             self.stats["budget_trajectory"].append(self.budget.budget)
+        self._seq = 0
+        # Diagnostic hook: set to a list to record ("dispatch"|"collect", seq)
+        # events — the overlap tests assert dispatch(i+1) precedes collect(i).
+        self.trace: list[tuple[str, int]] | None = None
 
     def _build_serve(self, rerank_budget: int):
         cfg = self.cfg
@@ -86,17 +149,11 @@ class QueryServer:
             rerank_budget=rerank_budget, wmd_kw=cfg.wmd_kw,
             streaming=cfg.streaming_topk)
 
-    # -- request path ------------------------------------------------------
-    def submit(self, ids: np.ndarray, weights: np.ndarray):
-        """Queue one query histogram (padded to h_max by the caller/vectorizer)."""
-        self._pending.append((ids, weights))
-
-    def _flush_chunk(self, qs: list[tuple[np.ndarray, np.ndarray]]):
-        """Serve one ≤max_batch chunk at the FIXED (max_batch, h) shape."""
+    def pad_batch(self, qs: Sequence[tuple[np.ndarray, np.ndarray]]) -> DocSet:
+        """Host prep: pad ≤max_batch histograms to the FIXED (max_batch, h)
+        shape so the engine serve step compiles once; padding queries carry
+        weight 0 everywhere and are sliced off at collect time."""
         h = self.cfg.h_max
-        # Pad the batch to exactly max_batch so the engine serve step
-        # compiles once; padding queries carry weight 0 everywhere and are
-        # sliced off below.
         b = self.cfg.max_batch
         ids = np.zeros((b, h), np.int32)
         w = np.zeros((b, h), np.float32)
@@ -104,25 +161,127 @@ class QueryServer:
             n = min(len(qi), h)
             ids[i, :n] = qi[:n]
             w[i, :n] = qw[:n]
-        queries = make_docset(np.where(w > 0, ids, -1), w)
+        return make_docset(np.where(w > 0, ids, -1), w)
+
+    def dispatch(self, qs: Sequence[tuple[np.ndarray, np.ndarray]]) -> _InFlight:
+        """Host-prep one ≤max_batch chunk and launch it on the device.
+
+        Returns immediately with device handles (JAX async dispatch): the
+        returned :class:`_InFlight` must be passed to :meth:`collect` to
+        block for and deliver the answers.
+        """
+        queries = self.pad_batch(qs)
+        seq, self._seq = self._seq, self._seq + 1
+        if self.trace is not None:
+            self.trace.append(("dispatch", seq))
         res = self._serve(queries)
         self.stats["queries"] += len(qs)
         self.stats["batches"] += 1
         if self.cfg.rerank_wmd:
             self.stats["wmd_reranks"] += len(qs)
+        return _InFlight(result=res, n_real=len(qs), seq=seq)
+
+    def collect(self, inflight: _InFlight) -> list[Answer]:
+        """Block for one dispatched batch; deliver answers + budget feedback.
+
+        This is where ``jax.block_until_ready`` effectively happens (the
+        ``np.asarray`` readback).  Adaptive-budget updates run here, at
+        result-delivery time: a budget change rebuilds the serve step, which
+        applies to every batch dispatched AFTER the rebuild (in the async
+        pipeline, at most ``pipeline_depth - 1`` already-dispatched batches
+        still use the previous budget — the trajectory in ``stats`` is the
+        ground truth either way).
+        """
+        res, n_real = inflight.result, inflight.n_real
+        tk_i = np.asarray(res.topk.indices)   # blocks on the device result
+        tk_d = np.asarray(res.topk.dists)
+        if self.trace is not None:
+            self.trace.append(("collect", inflight.seq))
         if self.budget is not None and res.pruned_exact is not None:
             # Feed only the REAL queries' exactness flags (padding queries
             # are all-zero histograms, their flags are meaningless).
             old = self.budget.budget
-            new = self.budget.update(np.asarray(res.pruned_exact)[: len(qs)])
+            new = self.budget.update(np.asarray(res.pruned_exact)[:n_real])
             if new != old:
                 self._serve = self._build_serve(new)
                 self.stats["budget_rebuilds"] += 1
                 self.stats["budget_trajectory"].append(new)
+        return [(tk_i[j], tk_d[j]) for j in range(n_real)]
 
-        tk_i = np.asarray(res.topk.indices)
-        tk_d = np.asarray(res.topk.dists)
-        return [(tk_i[j], tk_d[j]) for j in range(len(qs))]
+
+class QueryServer:
+    """Synchronous reference server (the mesh does the scaling).
+
+    A thin lock-step wrapper over the shared :class:`_ServeCore`: every
+    flush chunk is ``dispatch`` immediately followed by ``collect``, so
+    results are in hand when :meth:`flush` returns.  Use
+    :class:`AsyncQueryServer` for the pipelined variant; both produce
+    identical answers for identical inputs.
+    """
+
+    def __init__(self, resident: DocSet, emb, mesh, cfg: ServerConfig,
+                 *, preprocess: Callable[[QueryLike],
+                                         tuple[np.ndarray, np.ndarray]] | None = None):
+        self._core = _ServeCore(resident, emb, mesh, cfg)
+        self._preprocess = preprocess
+        self._pending: list[tuple[np.ndarray, np.ndarray]] = []
+
+    # -- shared-core views (kept as attributes of record for tests/tools) --
+    @property
+    def resident(self) -> DocSet:
+        return self._core.resident
+
+    @property
+    def emb(self):
+        return self._core.emb
+
+    @property
+    def cfg(self) -> ServerConfig:
+        return self._core.cfg
+
+    @property
+    def engine(self) -> LCRWMDEngine:
+        return self._core.engine
+
+    @property
+    def budget(self) -> AdaptiveRefineBudget | None:
+        return self._core.budget
+
+    @property
+    def stats(self) -> dict:
+        return self._core.stats
+
+    @property
+    def _serve(self):
+        """The compiled serve-step callable (swappable, e.g. by test spies)."""
+        return self._core._serve
+
+    @_serve.setter
+    def _serve(self, fn):
+        self._core._serve = fn
+
+    def _build_serve(self, rerank_budget: int):
+        return self._core._build_serve(rerank_budget)
+
+    # -- request path ------------------------------------------------------
+    def submit(self, ids, weights=None):
+        """Queue one query histogram (padded to h_max by the caller/vectorizer).
+
+        With a ``preprocess`` hook installed, a single raw payload may be
+        submitted instead; the hook runs HERE, on the caller's thread (the
+        async server defers it to the pipeline's host-prep stage).
+        """
+        if self._preprocess is not None and weights is None:
+            ids, weights = self._preprocess(ids)
+        elif weights is None:
+            raise ValueError(
+                "submit(ids, weights) needs explicit weights unless a "
+                "preprocess hook is installed (raw-payload submission)")
+        self._pending.append((ids, weights))
+
+    def _flush_chunk(self, qs: list[tuple[np.ndarray, np.ndarray]]):
+        """Serve one ≤max_batch chunk at the FIXED (max_batch, h) shape."""
+        return self._core.collect(self._core.dispatch(qs))
 
     def flush(self):
         """Serve everything pending; returns list of (doc_ids, distances).
@@ -137,20 +296,38 @@ class QueryServer:
             out.extend(self._flush_chunk(qs[lo : lo + self.cfg.max_batch]))
         return out
 
-    def serve_stream(self, stream: Sequence[tuple[np.ndarray, np.ndarray]]):
+    def serve_stream(self, stream):
         """Batched streaming: yields answers in arrival order.
 
         The staleness clock starts when the FIRST query of a batch arrives
         (not at the previous flush), so a steady trickle fills batches
         instead of flushing them nearly empty.
+
+        If the INPUT stream raises mid-iteration, queries queued before the
+        failure are still flushed and their answers yielded before the
+        exception propagates — a dying producer never loses accepted work.
         """
         # Arrival time of the oldest pending query; queries already pending
         # when the stream starts inherit the stream start as their clock.
         t0 = time.perf_counter() if self._pending else None
-        for q in stream:
+        it = iter(stream)
+        while True:
+            try:
+                q = next(it)
+            except StopIteration:
+                break
+            except Exception:
+                # Producer died: drain what was accepted, then re-raise.
+                # (Exception, not BaseException: a KeyboardInterrupt must
+                # propagate immediately, not run device flushes first.)
+                yield from self.flush()
+                raise
             if not self._pending:
                 t0 = time.perf_counter()
-            self.submit(*q)
+            if self._preprocess is None:
+                self.submit(*q)          # (ids, weights) pairs, as ever
+            else:
+                self.submit(q)           # raw payloads go through the hook
             full = len(self._pending) >= self.cfg.max_batch
             stale = (
                 t0 is not None
@@ -160,3 +337,259 @@ class QueryServer:
                 yield from self.flush()
                 t0 = None
         yield from self.flush()
+
+
+class AsyncQueryServer:
+    """Async double-buffered serving pipeline over the shared core.
+
+    ``submit`` enqueues one query and returns a :class:`ServeFuture`
+    immediately.  A single worker thread drives a two-stage pipeline:
+
+      1. HOST stage — gather up to ``max_batch`` pending queries (waiting at
+         most ``max_wait_s`` from the batch's first arrival), run the
+         optional ``preprocess`` hook, pad to the fixed serve shape, and
+         DISPATCH (JAX async dispatch: the serve step returns device futures
+         without blocking).
+      2. DEVICE stage — up to ``cfg.pipeline_depth`` (default 2: double
+         buffering) dispatched batches stay in flight; the oldest is
+         collected (``np.asarray`` readback = ``block_until_ready``) only
+         once the window is full or no new work is pending.
+
+    Because dispatch is async, step 1 for batch *i+1* runs on the host WHILE
+    batch *i* executes on the device — the overlap the ROADMAP item asks
+    for.  Futures resolve strictly in submission order (FIFO batching, FIFO
+    collection).
+
+    Backpressure: at most ``cfg.queue_capacity`` (default ``4·max_batch``)
+    queries may be pending; ``submit`` blocks the producer until the worker
+    drains below capacity (bounded memory under overload).
+
+    Lifecycle: use as a context manager, or call :meth:`close`.  ``drain``
+    blocks until every accepted query has been answered.
+    """
+
+    def __init__(self, resident: DocSet, emb, mesh, cfg: ServerConfig,
+                 *, preprocess: Callable[[QueryLike],
+                                         tuple[np.ndarray, np.ndarray]] | None = None):
+        self._core = _ServeCore(resident, emb, mesh, cfg)
+        self._preprocess = preprocess
+        self._capacity = cfg.queue_capacity or 4 * cfg.max_batch
+        self._depth = max(1, cfg.pipeline_depth)
+        self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)   # submit backpressure
+        self._work = threading.Condition(self._lock)       # worker wake-up
+        self._idle = threading.Condition(self._lock)       # drain wait
+        self._queue: deque[tuple[QueryLike, ServeFuture]] = deque()
+        self._batch_t0: float | None = None  # arrival of oldest pending query
+        self._flush_requested = False
+        self._closed = False
+        self._n_unanswered = 0  # accepted (queued or in flight), not resolved
+        self._worker = threading.Thread(
+            target=self._run, name="lcrwmd-serve-pipeline", daemon=True)
+        self._worker.start()
+
+    # -- shared-core views -------------------------------------------------
+    @property
+    def cfg(self) -> ServerConfig:
+        return self._core.cfg
+
+    @property
+    def engine(self) -> LCRWMDEngine:
+        return self._core.engine
+
+    @property
+    def budget(self) -> AdaptiveRefineBudget | None:
+        return self._core.budget
+
+    @property
+    def stats(self) -> dict:
+        return self._core.stats
+
+    @property
+    def _serve(self):
+        return self._core._serve
+
+    @_serve.setter
+    def _serve(self, fn):
+        self._core._serve = fn
+
+    # -- producer API ------------------------------------------------------
+    def submit(self, ids, weights=None) -> ServeFuture:
+        """Enqueue one query; returns its :class:`ServeFuture` immediately.
+
+        Accepts either ``(ids, weights)`` numpy histograms or — with a
+        ``preprocess`` hook installed — a single raw payload, which the
+        WORKER thread vectorizes inside the pipeline's host stage (so raw
+        ingest overlaps device compute).  Blocks while the pending queue is
+        at ``queue_capacity``.
+        """
+        if self._preprocess is None and weights is None:
+            raise ValueError(
+                "submit(ids, weights) needs explicit weights unless a "
+                "preprocess hook is installed (raw-payload submission)")
+        payload: QueryLike = (ids, weights)
+        fut = ServeFuture()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("submit() on a closed AsyncQueryServer")
+            while len(self._queue) >= self._capacity and not self._closed:
+                self._not_full.wait()
+            if self._closed:
+                raise RuntimeError("submit() on a closed AsyncQueryServer")
+            if not self._queue:
+                self._batch_t0 = time.perf_counter()
+            self._queue.append((payload, fut))
+            self._n_unanswered += 1
+            self._work.notify_all()
+        return fut
+
+    def flush(self) -> None:
+        """Ask the pipeline to dispatch the current partial batch now
+        (instead of waiting for ``max_batch`` fill or ``max_wait_s``)."""
+        with self._lock:
+            self._flush_requested = True
+            self._work.notify_all()
+
+    def drain(self) -> None:
+        """Block until every accepted query has been answered."""
+        with self._lock:
+            self._flush_requested = True
+            self._work.notify_all()
+            while self._n_unanswered:
+                self._idle.wait(0.1)
+                self._flush_requested = True
+                self._work.notify_all()
+            # Everything answered: a leftover flush request must not make
+            # the next submission dispatch as a near-empty batch.
+            self._flush_requested = False
+
+    def close(self) -> None:
+        """Drain, stop the worker, and reject further submissions."""
+        self.drain()
+        with self._lock:
+            self._closed = True
+            self._work.notify_all()
+            self._not_full.notify_all()
+        self._worker.join()
+
+    def __enter__(self) -> "AsyncQueryServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- pipeline (worker thread) ------------------------------------------
+    def _prep(self, payload: QueryLike) -> tuple[np.ndarray, np.ndarray]:
+        ids, w = payload
+        if self._preprocess is not None and w is None:
+            return self._preprocess(ids)
+        return ids, w
+
+    def _next_batch(self, have_inflight: bool, inflight_ready=None):
+        """Take up to max_batch pending queries, or None when the caller
+        should collect (work in flight whose device result is ready, or
+        nothing pending) or exit (closed)."""
+        cfg = self._core.cfg
+        with self._lock:
+            while True:
+                if self._queue:
+                    now = time.perf_counter()
+                    stale = (self._batch_t0 is not None
+                             and now - self._batch_t0 >= cfg.max_wait_s)
+                    if (len(self._queue) >= cfg.max_batch or stale
+                            or self._flush_requested or self._closed):
+                        take = min(len(self._queue), cfg.max_batch)
+                        items = [self._queue.popleft() for _ in range(take)]
+                        if self._queue:
+                            # Remaining queries start a fresh staleness clock.
+                            self._batch_t0 = now
+                        else:
+                            self._batch_t0 = None
+                            self._flush_requested = False
+                        self._not_full.notify_all()
+                        return items
+                    # Partial batch: wait for fill, staleness, or a flush —
+                    # but never sit on a COMPLETED in-flight batch: if the
+                    # oldest dispatched batch's device result is ready, hand
+                    # control back so its futures resolve now instead of
+                    # after up to max_wait_s.
+                    timeout = max(0.0, self._batch_t0 + cfg.max_wait_s - now)
+                    if inflight_ready is not None and have_inflight:
+                        self._work.wait(min(timeout, 0.005))
+                        if inflight_ready():
+                            return None
+                    else:
+                        self._work.wait(timeout)
+                    continue
+                # Empty queue: a pending flush request has nothing left to
+                # flush — clear it so it cannot leak onto the NEXT submitted
+                # query (which must get normal max_batch/max_wait batching).
+                self._flush_requested = False
+                if have_inflight or self._closed:
+                    return None
+                self._work.wait(0.1)
+
+    def _resolve(self, futures: list[ServeFuture], answers: list[Answer],
+                 error: BaseException | None) -> None:
+        try:
+            for i, fut in enumerate(futures):
+                try:
+                    if error is not None:
+                        fut.set_exception(error)
+                    else:
+                        fut.set_result(answers[i])
+                except concurrent.futures.InvalidStateError:
+                    # The client cancelled this future; its query was served
+                    # with the batch anyway — drop the answer, never let a
+                    # cancellation kill the pipeline thread.
+                    pass
+        finally:
+            with self._lock:
+                self._n_unanswered -= len(futures)
+                if self._n_unanswered == 0:
+                    self._idle.notify_all()
+
+    def _collect(self, entry) -> None:
+        inflight, futures = entry
+        try:
+            answers = self._core.collect(inflight)
+        except BaseException as e:  # noqa: BLE001 — forwarded to futures
+            self._resolve(futures, [], e)
+        else:
+            self._resolve(futures, answers, None)
+
+    def _run(self) -> None:
+        inflight: deque = deque()
+
+        def oldest_ready() -> bool:
+            if not inflight:
+                return False
+            dists = inflight[0][0].result.topk.dists
+            # Non-jax results (test spies, already-host data) are ready.
+            return bool(getattr(dists, "is_ready", lambda: True)())
+
+        while True:
+            batch = self._next_batch(have_inflight=bool(inflight),
+                                     inflight_ready=oldest_ready)
+            if batch is not None:
+                payloads, futures = zip(*((p, f) for p, f in batch))
+                futures = list(futures)
+                try:
+                    qs = [self._prep(p) for p in payloads]
+                    handle = self._core.dispatch(qs)
+                except BaseException as e:  # noqa: BLE001 — forwarded
+                    self._resolve(futures, [], e)
+                else:
+                    inflight.append((handle, futures))
+                # Two-slot window: only once `pipeline_depth` batches are in
+                # flight does the worker block on the oldest — i.e. batch
+                # i+1 was host-prepped AND dispatched while batch i ran.
+                if len(inflight) >= self._depth:
+                    self._collect(inflight.popleft())
+                continue
+            if inflight:
+                self._collect(inflight.popleft())
+                continue
+            with self._lock:
+                if self._closed and not self._queue:
+                    return

@@ -11,6 +11,11 @@ cover querying; this package covers the corpus-vs-corpus rest:
     with a WCD prefilter and optional Sinkhorn-WMD rerank.
   * :mod:`neighbors` — threshold / k-NN near-duplicate graphs and
     duplicate-group extraction from the same tile stream.
+
+All entry points take a prebuilt :class:`~repro.core.lc_rwmd.LCRWMDEngine`
+(built once per corpus) and a ``tile`` knob that bounds every device
+intermediate at (tile, tile) — the memory model is tabulated in
+``docs/ARCHITECTURE.md`` and EXPERIMENTS.md §Workloads.
 """
 
 from repro.workloads.clustering import (

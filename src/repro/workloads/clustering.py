@@ -138,10 +138,22 @@ def kmedoids(
 ) -> ClusterResult:
     """k-medoids over the engine's resident corpus (see module docstring).
 
+    Returns a :class:`ClusterResult`: ``labels`` (n,) int32 cluster ids,
+    ``medoids`` (n_clusters,) int32 doc ids, ``inertia`` float.  All device
+    blocks are fixed-shape — (n, n_clusters) assignment blocks and ONE
+    (n, n_clusters·medoid_candidates) medoid-update block per iteration —
+    so ``n_clusters``/``prefilter``/``medoid_candidates`` are
+    compile-relevant: keep them fixed across calls to reuse the engine's
+    jit cache.
+
     ``prefilter``: number of WCD-nearest medoid candidates scored with RWMD
-    per doc (None → all ``n_clusters`` scored via one engine block).
+    per doc (None → all ``n_clusters`` scored via one engine block).  A
+    speed knob for WCD-friendly corpora ONLY — on centroid-degenerate data
+    the prefilter feeds the exact stage garbage (see EXPERIMENTS.md
+    §Workloads).
     ``rerank_wmd``: score candidate pairs with batched Sinkhorn-WMD instead
-    of the RWMD bound (requires ``prefilter``).
+    of the RWMD bound (requires ``prefilter``); ``sinkhorn_kw`` forwards
+    solver knobs.
     ``medoid_candidates``: shortlist size for the medoid-update stage.
     """
     n = engine.resident.n_docs

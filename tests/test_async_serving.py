@@ -1,0 +1,281 @@
+"""AsyncQueryServer: pipelined dispatch order, future ordering, backpressure,
+budget wiring, and exact parity with the synchronous wrapper."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.synth import CorpusSpec, make_corpus
+from repro.launch.mesh import make_host_mesh
+from repro.serving import AsyncQueryServer, QueryServer, ServeFuture, ServerConfig
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(CorpusSpec(
+        n_docs=256, vocab_size=1024, emb_dim=32, h_max=12, mean_h=8.0,
+        n_classes=4, seed=11))
+
+
+def _queries(corpus, n, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = np.asarray(corpus.docs.ids)
+    w = np.asarray(corpus.docs.weights)
+    picks = rng.integers(0, corpus.docs.n_docs, n)
+    return [(ids[i], w[i]) for i in picks], picks
+
+
+def test_async_recall_and_sync_parity(corpus):
+    """Same queries through the pipeline and the lock-step wrapper must give
+    byte-identical answers (shared core, shared serve step semantics)."""
+    cfg = ServerConfig(k=5, max_batch=8, h_max=12, max_wait_s=0.05)
+    stream, picks = _queries(corpus, 24)
+
+    with AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(),
+                          cfg) as server:
+        futs = [server.submit(ids, w) for ids, w in stream]
+        server.drain()
+        got = [f.result(timeout=30) for f in futs]
+    assert server.stats["queries"] == 24
+    assert server.stats["batches"] == 3
+    hits = [picks[i] in set(a[0].tolist()) for i, a in enumerate(got)]
+    assert np.mean(hits) == 1.0
+
+    sync = QueryServer(corpus.docs, corpus.emb, make_host_mesh(), cfg)
+    for ids, w in stream:
+        sync.submit(ids, w)
+    want = sync.flush()
+    for (gi, gd), (wi, wd) in zip(got, want):
+        np.testing.assert_array_equal(gi, wi)
+        np.testing.assert_allclose(gd, wd)
+
+
+def test_overlap_dispatch_precedes_collect(corpus):
+    """The double-buffer property itself: with a full backlog, batch i+1 is
+    host-prepped and DISPATCHED before batch i's results are collected —
+    the serve step for i+1 is queued while i still executes on device."""
+    cfg = ServerConfig(k=4, max_batch=8, h_max=12, max_wait_s=5.0,
+                       queue_capacity=32)
+    stream, _ = _queries(corpus, 24, seed=3)
+    with AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(),
+                          cfg) as server:
+        trace = []
+        server._core.trace = trace  # ("dispatch"|"collect", batch_seq) events
+        futs = [server.submit(ids, w) for ids, w in stream]
+        server.drain()
+        for f in futs:
+            f.result(timeout=30)
+
+    def pos(kind, seq):
+        return trace.index((kind, seq))
+
+    n_batches = server.stats["batches"]
+    assert n_batches == 3
+    # All 24 queries were queued before the first batch finished, so the
+    # worker must have dispatched batch 1 before collecting batch 0.
+    assert pos("dispatch", 1) < pos("collect", 0)
+    # Collection is strictly FIFO: futures resolve in submission order.
+    collects = [s for kind, s in trace if kind == "collect"]
+    assert collects == sorted(collects)
+    # Every batch was both dispatched and collected exactly once.
+    dispatches = [s for kind, s in trace if kind == "dispatch"]
+    assert sorted(dispatches) == list(range(n_batches))
+    assert sorted(collects) == list(range(n_batches))
+
+
+def test_futures_resolve_in_submission_order(corpus):
+    cfg = ServerConfig(k=4, max_batch=8, h_max=12, max_wait_s=0.02)
+    stream, _ = _queries(corpus, 20, seed=5)
+    done_order = []
+    with AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(),
+                          cfg) as server:
+        futs = []
+        for i, (ids, w) in enumerate(stream):
+            f = server.submit(ids, w)
+            f.add_done_callback(lambda _f, i=i: done_order.append(i))
+            futs.append(f)
+        server.drain()
+        for f in futs:
+            assert isinstance(f, ServeFuture)
+            f.result(timeout=30)
+    assert done_order == list(range(20))
+
+
+def test_backpressure_blocks_at_queue_capacity(corpus):
+    """submit() must block once queue_capacity queries are pending, and
+    resume as soon as the worker drains the queue below capacity."""
+    cfg = ServerConfig(k=4, max_batch=4, h_max=12, max_wait_s=5.0,
+                       queue_capacity=4)
+    stream, _ = _queries(corpus, 9, seed=7)
+    server = AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(), cfg)
+    try:
+        gate = threading.Event()
+        inner = server._serve
+
+        def gated(queries):
+            gate.wait(timeout=30)
+            return inner(queries)
+
+        server._serve = gated
+        futs = [server.submit(ids, w) for ids, w in stream[:8]]
+        # Worker took one max_batch chunk (stuck at the gate); the other 4
+        # fill the queue to capacity, so the 9th submission must block.
+        blocked_fut = []
+
+        def submit_ninth():
+            blocked_fut.append(server.submit(*stream[8]))
+
+        t = threading.Thread(target=submit_ninth, daemon=True)
+        t.start()
+        t.join(timeout=0.5)
+        assert t.is_alive(), "submit() should block at queue capacity"
+        gate.set()  # un-stick the pipeline; backpressure must release
+        t.join(timeout=30)
+        assert not t.is_alive()
+        server.drain()
+        for f in futs + blocked_fut:
+            assert f.result(timeout=30)[0].shape == (cfg.k,)
+    finally:
+        gate.set()
+        server.close()
+    assert server.stats["queries"] == 9
+
+
+def test_async_adaptive_budget_wiring(small_corpus):
+    """The pruned_exact -> AdaptiveRefineBudget -> serve-step-rebuild loop
+    must survive the pipeline (feedback applies at collect time)."""
+    ds = small_corpus.docs
+    n = ds.n_docs
+    cfg = ServerConfig(k=4, max_batch=8, h_max=ds.h_max, max_wait_s=0.02,
+                       rerank_wmd=True, adaptive_budget=True,
+                       budget_decay_after=2,
+                       wmd_kw=dict(eps=0.05, eps_scaling=2, max_iters=60))
+    ids = np.asarray(ds.ids)
+    w = np.asarray(ds.weights)
+    with AsyncQueryServer(ds, small_corpus.emb, make_host_mesh(),
+                          cfg) as server:
+        assert server.budget is not None
+        assert server.stats["budget_trajectory"] == [2 * cfg.k]
+        futs = []
+        for round_ in range(6):
+            rng = np.random.default_rng(round_)
+            picks = rng.integers(0, n, 8)
+            futs += [server.submit(ids[i], w[i]) for i in picks]
+        server.drain()
+        for f in futs:
+            f.result(timeout=60)
+    traj = server.stats["budget_trajectory"]
+    assert all(cfg.k <= b <= n for b in traj)
+    assert server.stats["budget_rebuilds"] == len(traj) - 1
+    assert server.budget.budget == traj[-1]
+    assert server.stats["wmd_reranks"] == 48
+
+
+def test_preprocess_runs_in_pipeline(corpus):
+    """Raw payloads + a preprocess hook: the async server vectorizes inside
+    the worker's host stage; answers must match the sync server running the
+    same hook inline."""
+    h = 12
+    ids_np = np.asarray(corpus.docs.ids)
+    w_np = np.asarray(corpus.docs.weights)
+
+    calls = []
+
+    def vectorize(doc_id):
+        calls.append(threading.current_thread().name)
+        return ids_np[doc_id], w_np[doc_id]
+
+    cfg = ServerConfig(k=5, max_batch=8, h_max=h, max_wait_s=0.02)
+    picks = list(np.random.default_rng(9).integers(0, corpus.docs.n_docs, 16))
+    with AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(), cfg,
+                          preprocess=vectorize) as server:
+        futs = [server.submit(int(p)) for p in picks]
+        server.drain()
+        got = [f.result(timeout=30) for f in futs]
+    # The hook ran on the pipeline thread, not the producer's.
+    assert calls and all(n == "lcrwmd-serve-pipeline" for n in calls)
+
+    sync = QueryServer(corpus.docs, corpus.emb, make_host_mesh(), cfg,
+                       preprocess=vectorize)
+    for p in picks:
+        sync.submit(int(p))
+    want = sync.flush()
+    for (gi, gd), (wi, wd) in zip(got, want):
+        np.testing.assert_array_equal(gi, wi)
+        np.testing.assert_allclose(gd, wd)
+
+
+def test_ready_batch_collected_while_partial_batch_waits(corpus):
+    """A completed in-flight batch must resolve promptly even while a
+    PARTIAL next batch sits waiting for fill/staleness — the worker may not
+    hold finished answers hostage for up to max_wait_s."""
+    cfg = ServerConfig(k=4, max_batch=8, h_max=12, max_wait_s=10.0)
+    stream, _ = _queries(corpus, 9, seed=17)  # one full batch + one extra
+    with AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(),
+                          cfg) as server:
+        t0 = time.perf_counter()
+        futs = [server.submit(ids, w) for ids, w in stream]
+        for f in futs[:8]:
+            f.result(timeout=30)
+        # Well under the 10 s staleness window (compile + serve only).
+        assert time.perf_counter() - t0 < 6.0
+        server.flush()
+        assert futs[8].result(timeout=30)[0].shape == (cfg.k,)
+
+
+def test_cancelled_future_does_not_kill_pipeline(corpus):
+    """A client cancel() on a pending future must not crash the worker or
+    strand the rest of its batch — everyone else still gets answers."""
+    cfg = ServerConfig(k=4, max_batch=8, h_max=12, max_wait_s=0.02)
+    stream, _ = _queries(corpus, 16, seed=11)
+    with AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(),
+                          cfg) as server:
+        futs = [server.submit(ids, w) for ids, w in stream]
+        cancelled = futs[3].cancel() or futs[3].cancelled()
+        server.drain()
+        survivors = [f for i, f in enumerate(futs)
+                     if not (i == 3 and cancelled)]
+        for f in survivors:
+            assert f.result(timeout=30)[0].shape == (cfg.k,)
+    # A second round still serves (the worker thread survived).
+    assert server.stats["queries"] == 16
+
+
+def test_flush_request_does_not_leak_past_drain(corpus):
+    """drain() must not leave a stale flush flag behind: the next submitted
+    queries batch normally to max_batch instead of dispatching solo."""
+    cfg = ServerConfig(k=4, max_batch=8, h_max=12, max_wait_s=5.0)
+    stream, _ = _queries(corpus, 16, seed=13)
+    with AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(),
+                          cfg) as server:
+        for ids, w in stream[:8]:
+            server.submit(ids, w)
+        server.drain()
+        batches_before = server.stats["batches"]
+        futs = [server.submit(ids, w) for ids, w in stream[8:]]
+        server.drain()
+        for f in futs:
+            f.result(timeout=30)
+    # One full batch, not a leaked-flush 1-query dispatch plus a 7-query one.
+    assert server.stats["batches"] == batches_before + 1
+
+
+def test_submit_without_weights_raises(corpus):
+    cfg = ServerConfig(k=4, max_batch=4, h_max=12)
+    with AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(),
+                          cfg) as server:
+        with pytest.raises(ValueError, match="preprocess"):
+            server.submit(np.zeros(12, np.int32))
+    sync = QueryServer(corpus.docs, corpus.emb, make_host_mesh(), cfg)
+    with pytest.raises(ValueError, match="preprocess"):
+        sync.submit(np.zeros(12, np.int32))
+
+
+def test_submit_after_close_raises(corpus):
+    cfg = ServerConfig(k=4, max_batch=4, h_max=12)
+    server = AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(), cfg)
+    server.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit(np.zeros(12, np.int32), np.zeros(12, np.float32))

@@ -106,6 +106,30 @@ def test_serve_stream_staleness_clock_starts_at_first_pending(corpus):
     assert server.stats["batches"] == 2
 
 
+def test_serve_stream_flushes_pending_on_input_error(corpus):
+    """A producer that dies mid-stream must NOT lose accepted queries: the
+    answers for everything queued before the failure are yielded, then the
+    producer's exception propagates."""
+    server = QueryServer(corpus.docs, corpus.emb, make_host_mesh(),
+                         ServerConfig(k=5, max_batch=8, h_max=12,
+                                      max_wait_s=10.0))
+    rng = np.random.default_rng(13)
+    stream, picks = _stream_from(corpus, 5, rng)
+
+    def dying_producer():
+        yield from stream  # 5 < max_batch: all still pending at the raise
+        raise RuntimeError("ingest connection lost")
+
+    got = []
+    with pytest.raises(RuntimeError, match="ingest connection lost"):
+        for answer in server.serve_stream(dying_producer()):
+            got.append(answer)
+    assert len(got) == 5
+    assert server.stats["queries"] == 5
+    hits = [picks[i] in set(a[0].tolist()) for i, a in enumerate(got)]
+    assert np.mean(hits) == 1.0
+
+
 def test_rerank_topk_matches_bruteforce_wmd(corpus):
     """Engine rerank over candidates == per-pair WMD re-sort of the same
     candidates (top-k parity of the serve-time rerank path)."""

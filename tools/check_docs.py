@@ -1,0 +1,132 @@
+"""Docs CI checks: execute the README quickstart, verify markdown links.
+
+    PYTHONPATH=src python tools/check_docs.py --links --quickstart
+
+``--links`` walks the repo's markdown docs for relative links and verifies
+that each target file exists (and, for ``#anchor`` links into markdown,
+that a matching heading exists — GitHub's anchor slugging).  External
+http(s) links are skipped (no network in CI).
+
+``--quickstart`` extracts every ```` ```python ```` fenced block from
+README.md and executes them in order in one fresh subprocess with
+``PYTHONPATH=src`` — the quickstart must run VERBATIM as documented.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = (
+    "README.md",
+    "docs/ARCHITECTURE.md",
+    "EXPERIMENTS.md",
+    "ROADMAP.md",
+)
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def github_anchor(heading: str) -> str:
+    """GitHub's markdown heading -> anchor slug (close enough for ASCII)."""
+    text = heading.strip().lstrip("#").strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def md_anchors(path: pathlib.Path) -> set[str]:
+    anchors = set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if line.startswith("```"):
+            in_fence = not in_fence
+        elif not in_fence and line.startswith("#"):
+            anchors.add(github_anchor(line))
+    return anchors
+
+
+def check_links(doc_files=DOC_FILES) -> list[str]:
+    """Returns a list of human-readable link errors (empty = all good)."""
+    errors = []
+    for doc in doc_files:
+        doc_path = REPO / doc
+        if not doc_path.exists():
+            errors.append(f"{doc}: file missing")
+            continue
+        for target in _LINK_RE.findall(doc_path.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue  # no network in CI
+            target, _, anchor = target.partition("#")
+            if not target:  # same-file #anchor
+                if anchor and anchor not in md_anchors(doc_path):
+                    errors.append(f"{doc}: broken anchor #{anchor}")
+                continue
+            resolved = (doc_path.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(f"{doc}: broken link -> {target}")
+            elif anchor and resolved.suffix == ".md":
+                if anchor not in md_anchors(resolved):
+                    errors.append(
+                        f"{doc}: broken anchor -> {target}#{anchor}")
+    return errors
+
+
+def extract_quickstart(readme: pathlib.Path | None = None) -> str:
+    """All ```python fenced blocks from README.md, concatenated in order."""
+    readme = readme or REPO / "README.md"
+    blocks = _FENCE_RE.findall(readme.read_text())
+    if not blocks:
+        raise SystemExit("README.md has no ```python quickstart block")
+    return "\n\n".join(blocks)
+
+
+def run_quickstart() -> int:
+    code = extract_quickstart()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    with tempfile.NamedTemporaryFile(
+            "w", suffix="_readme_quickstart.py", delete=False) as f:
+        f.write(code)
+        path = f.name
+    try:
+        print(f"[check_docs] executing README quickstart ({len(code)} chars)")
+        proc = subprocess.run([sys.executable, path], env=env, cwd=REPO,
+                              timeout=600)
+        return proc.returncode
+    finally:
+        os.unlink(path)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links", action="store_true")
+    ap.add_argument("--quickstart", action="store_true")
+    args = ap.parse_args()
+    if not (args.links or args.quickstart):
+        ap.error("nothing to do: pass --links and/or --quickstart")
+    rc = 0
+    if args.links:
+        errors = check_links()
+        for e in errors:
+            print(f"[check_docs] {e}", file=sys.stderr)
+        print(f"[check_docs] links: {len(errors)} error(s) across "
+              f"{len(DOC_FILES)} docs")
+        rc |= bool(errors)
+    if args.quickstart:
+        qrc = run_quickstart()
+        print(f"[check_docs] quickstart exit code {qrc}")
+        rc |= qrc
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
