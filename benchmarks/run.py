@@ -47,6 +47,7 @@ def main() -> None:
         fig14_precision,
         kernels_bench,
         pruning_bench,
+        robustness_bench,
         scaling_analysis,
         serving_bench,
         table3_complexity,
@@ -62,6 +63,7 @@ def main() -> None:
         "kernels_bench": kernels_bench,
         "scaling_analysis": scaling_analysis,
         "serving_bench": serving_bench,
+        "robustness_bench": robustness_bench,
         "workloads_bench": workloads_bench,
     }
     print("name,us_per_call,derived")

@@ -21,6 +21,7 @@ adaptation of the paper's dynamic pruning loop.
 from __future__ import annotations
 
 import dataclasses
+import enum
 import math
 from typing import NamedTuple
 
@@ -34,6 +35,70 @@ from repro.core.wmd import wmd_candidate_values
 from repro.data.docs import DocSet
 
 Array = jax.Array
+
+
+class QualityTier(enum.IntEnum):
+    """The serving plane's degradation ladder.
+
+    The paper's pruning cascade (WCD → LC-RWMD → WMD) read TOP-DOWN is a
+    quality/cost ladder: each stage is a cheaper approximation of the one
+    above it, with a provable lower-bound relationship.  Under overload or
+    repeated stage faults the serving plane sheds the most expensive stage
+    first and keeps answering — bounded-quality results instead of errors:
+
+      tier  stage served                        relative cost   bound quality
+      ----  ----------------------------------  -------------   -------------
+      0     full configured cascade             1x              exact-style
+            (LC-RWMD [+refine] + Sinkhorn-WMD                   WMD ranking
+            rerank, as built)
+      1     LC-RWMD candidates served directly  ~1/5x – 1/50x   tight lower
+            (rerank + symmetric refine shed)    (skips Sinkhorn) bound ranking
+      2     WCD shortlist (centroid distances)  ~1/1000x        loose lower
+                                                                bound (Fig. 11)
+
+    Every delivered :class:`~repro.serving.query_server.Answer` is stamped
+    with the tier it was served at; the controller steps back up when
+    pressure clears.  Used by the tiered serve step
+    (:func:`repro.distributed.lcrwmd_dist.build_serve_step` engine path) and
+    the single-host :func:`cascade_topk` entry below.
+    """
+
+    FULL = 0
+    LCRWMD = 1
+    WCD = 2
+
+
+def cascade_topk(
+    engine: LCRWMDEngine,
+    queries: DocSet,
+    k: int,
+    *,
+    tier: QualityTier | int = QualityTier.FULL,
+    rerank_budget: int | None = None,
+    sinkhorn_kw: dict | None = None,
+) -> topk_lib.TopK:
+    """Single-host tiered cascade entry: top-k at the requested quality tier.
+
+    The non-mesh analogue of the tiered distributed serve step — each tier
+    routes through the engine's already-jit'd methods, so tier switches
+    never re-trace.  ``tier`` follows :class:`QualityTier`; ``k``,
+    ``rerank_budget`` and ``sinkhorn_kw`` are jit-static.  Returns a
+    (B, k) :class:`~repro.core.topk.TopK` (ascending, global doc ids).
+    """
+    tier = QualityTier(int(tier))
+    if tier >= QualityTier.WCD:
+        from repro.core.distances import dists
+        from repro.core.wcd import centroids
+
+        c_r = centroids(engine.resident, engine.emb_full)        # (n, m)
+        c_q = centroids(queries, engine.emb_full)                # (B, m)
+        return topk_lib.topk_smallest_cols(dists(c_r, c_q), k)   # (n, B)
+    if tier >= QualityTier.LCRWMD:
+        return engine.topk_streaming(queries, k)
+    budget = min(max(rerank_budget or 2 * k, k), engine.resident.n_docs)
+    cand = engine.topk_streaming(queries, budget)
+    return engine.rerank_topk(queries, cand.indices, k,
+                              sinkhorn_kw=sinkhorn_kw)
 
 
 class PrunedWMDResult(NamedTuple):

@@ -4,6 +4,13 @@ The paper's system ingests news documents into term-frequency histograms
 over a (up to 3M-word) vocabulary. This module provides the real-text path:
 a deterministic word tokenizer, a build-or-hash vocabulary, and histogram
 construction with stop-word removal (the paper's h excludes stop-words).
+
+Serving path: each vectorizer's ``query_histogram`` is the ``preprocess``
+hook shape the query servers expect — and it REJECTS queries that tokenize
+to zero in-vocabulary words with a typed
+:class:`~repro.serving.errors.PoisonQuery` at submit time, instead of
+letting an all-zero weight vector ride into (and NaN-poison) a device
+batch.
 """
 
 from __future__ import annotations
@@ -17,6 +24,19 @@ import numpy as np
 from repro.data.docs import DocSet, make_docset
 
 _TOKEN_RE = re.compile(r"[a-z0-9']+")
+
+
+def _reject_empty(w: np.ndarray, text: str) -> None:
+    """Raise a typed PoisonQuery for a zero-in-vocab query histogram.
+
+    Imported lazily so the data layer stays import-light; the serving
+    errors module itself is dependency-free.
+    """
+    if not (w > 0).any():
+        from repro.serving.errors import PoisonQuery
+        raise PoisonQuery(
+            "query tokenizes to zero in-vocabulary words "
+            f"(stop-words/OOV only): {text[:60]!r}")
 
 # Minimal english stop list (the paper excludes stop-words from h).
 STOP_WORDS = frozenset(
@@ -61,6 +81,17 @@ class HashingVectorizer:
         w = np.stack([self.doc_to_histogram(t)[1] for t in texts])
         return make_docset(ids, w)
 
+    def query_histogram(self, text: str) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorize ONE serving query (``preprocess`` hook shape).
+
+        Raises :class:`~repro.serving.errors.PoisonQuery` when the text
+        tokenizes to zero in-vocabulary words — the all-zero histogram can
+        never be served and must not reach a device batch.
+        """
+        ids, w = self.doc_to_histogram(text)
+        _reject_empty(w, text)
+        return ids, w
+
 
 @dataclasses.dataclass
 class VocabVectorizer:
@@ -94,3 +125,21 @@ class VocabVectorizer:
                 ids[i, j] = wid
                 w[i, j] = c
         return make_docset(ids, w)
+
+    def query_histogram(self, text: str) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorize ONE serving query (``preprocess`` hook shape).
+
+        OOV words are dropped per the paper's v_e semantics; a query whose
+        every word is OOV (or a stop-word) raises a typed
+        :class:`~repro.serving.errors.PoisonQuery` instead of producing an
+        all-zero histogram.
+        """
+        counts = Counter(self.vocab[x] for x in tokenize(text)
+                         if x in self.vocab)
+        ids = np.full(self.h_max, -1, np.int32)
+        w = np.zeros(self.h_max, np.float32)
+        for j, (wid, c) in enumerate(counts.most_common(self.h_max)):
+            ids[j] = wid
+            w[j] = c
+        _reject_empty(w, text)
+        return ids, w

@@ -28,8 +28,14 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map as compat_shard_map
-from repro.core.distances import safe_sqrt, sq_dists
-from repro.core.topk import StreamingTopK, TopK, crossshard_topk, distributed_topk
+from repro.core.distances import dists, safe_sqrt, sq_dists
+from repro.core.topk import (
+    StreamingTopK,
+    TopK,
+    crossshard_topk,
+    distributed_topk,
+    topk_smallest_cols,
+)
 from repro.data.docs import DocSet
 from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
 
@@ -44,6 +50,8 @@ class ServeResult(NamedTuple):
     pruned_exact: Array | None = None  # (B,) bool, rerank_wmd engine path:
     #                        True → WMD top-k provably equals the full-corpus
     #                        WMD top-k (candidate RWMD bound beat the cutoff)
+    tier: int = 0     # QualityTier the batch was served at (python int,
+    #                        stamped outside jit; 0 = full configured cascade)
 
 
 def _batch_axes(mesh) -> tuple[str, ...]:
@@ -164,6 +172,15 @@ def build_serve_step(
     diagnostics; results are identical either way, ties included.  The
     engine-less path is the paper-faithful materialized baseline and
     rejects ``streaming=True``.
+
+    The ENGINE-path callable additionally accepts a keyword-only
+    ``tier=`` (:class:`repro.core.pipeline.QualityTier`): the serving
+    plane's degradation ladder.  Tier 0 is the full configured cascade;
+    tier 1 serves the LC-RWMD candidates directly (the SAME compiled
+    phase-1/2 step — shedding the refine/rerank stages never re-traces);
+    tier 2 answers from a WCD centroid shortlist via a module-level
+    ``(k, self_exclude)``-keyed jit cache.  ``ServeResult.tier`` records
+    the tier a batch was served at.
     """
     batch_axes = _batch_axes(mesh)
     n_batch_shards = 1
@@ -400,14 +417,40 @@ def _build_engine_serve_step(
                 rids, rw, t_q, q_valid, q_gid, emb_s)
             return TopK(tk_d, tk_i), d_local
 
-    def serve(queries: DocSet, query_ids=None) -> ServeResult:
+    # Tier-2 (WCD shortlist) state: resident centroids, computed ONCE from
+    # the engine's pre-gathered resident word embeddings.  The step itself
+    # lives in the module-level (k, self_exclude)-keyed jit cache, so tier
+    # switches — and budget-driven serve-step rebuilds — never re-trace it.
+    n_docs, h1_r = engine.resident.ids.shape
+    cent_r = jnp.einsum(
+        "nh,nhm->nm", engine.resident.weights,
+        engine._t_r.reshape(n_docs, h1_r, -1))
+
+    def serve(queries: DocSet, query_ids=None, *, tier: int = 0) -> ServeResult:
+        """Tiered serve: ``tier`` walks the degradation ladder (see
+        :class:`repro.core.pipeline.QualityTier`).  Tier 0 is the full
+        configured cascade; tier 1 serves the LC-RWMD candidates directly
+        (refine + rerank shed — the SAME compiled phase-1/2 step, no
+        re-trace); tier 2 answers from the WCD centroid shortlist only."""
         if self_exclude and query_ids is None:
             raise ValueError("self_exclude serve step needs query_ids (B,)")
+        tier = int(tier)
         t_q = engine.gather_queries(queries.ids)
         q_valid = (queries.weights > 0).astype(jnp.float32)
         q_gid = (jnp.asarray(query_ids, jnp.int32) if self_exclude
                  else jnp.full((queries.n_docs,), -1, jnp.int32))
+        if tier >= 2:  # QualityTier.WCD
+            tk = _wcd_topk_step(k, self_exclude, cent_r, t_q,
+                                queries.weights, q_gid)
+            return ServeResult(topk=tk, d_local=None, pruned_exact=None,
+                               tier=tier)
         tk, d_local = step(r_ids, r_w, t_q, q_valid, q_gid, emb_r)
+        if tier >= 1:  # QualityTier.LCRWMD: candidates ARE the answer
+            tk = TopK(tk.dists[:, :k], tk.indices[:, :k])
+            return ServeResult(
+                topk=tk,
+                d_local=None if d_local is None else d_local[:n_real],
+                pruned_exact=None, tier=tier)
         # Largest candidate RWMD: every non-candidate's WMD is >= this
         # (candidates are the kc smallest lower bounds), so it certifies
         # rerank exactness against the k-th WMD cutoff below.
@@ -472,6 +515,28 @@ def _wmd_rerank(
     on ``(k, wmd_kw)`` so the batched solve is traced once per shape."""
     return _wmd_rerank_jit(resident, queries, emb, tk, k,
                            tuple(sorted((wmd_kw or {}).items())))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _wcd_topk_step(
+    k: int, self_exclude: bool, cent_r: Array, t_q: Array, q_w: Array,
+    q_gid: Array,
+) -> TopK:
+    """Tier-2 degraded serve: top-k by Word Centroid Distance only.
+
+    The cheapest rung of the cascade ladder (paper Sec. III): one (B, m)
+    einsum + one (n, B) centroid-distance matrix — no phase 1/2, no mesh
+    collectives (``cent_r`` is replicated; at n where WCD is the fallback
+    the matrix is trivially small next to the shed stages).  Module-level
+    jit keyed on ``(k, self_exclude)`` so every serve-step build — and every
+    adaptive-budget rebuild — shares one trace.
+    """
+    c_q = jnp.einsum("bh,bhm->bm", q_w, t_q)
+    d = dists(cent_r, c_q)  # (n, B)
+    if self_exclude:
+        row = jnp.arange(cent_r.shape[0], dtype=jnp.int32)
+        d = jnp.where(row[:, None] == q_gid[None, :], _INF, d)
+    return topk_smallest_cols(d, k)
 
 
 @functools.partial(jax.jit, static_argnums=(4, 5))

@@ -3,18 +3,34 @@
 :class:`QueryServer` is the synchronous reference server;
 :class:`AsyncQueryServer` is the double-buffered pipeline (``submit`` →
 :class:`ServeFuture`, host batching overlapped with device serve).  See
-``docs/ARCHITECTURE.md`` §Serving for the pipeline diagram.
+``docs/ARCHITECTURE.md`` §Serving for the pipeline diagram and §Failure
+modes for the degradation tiers, the typed error contract
+(:mod:`repro.serving.errors`), and the worker supervisor lifecycle.
+Deterministic fault injection lives in :mod:`repro.serving.faults`.
 """
 
+from repro.serving.errors import (
+    DeadlineExceeded,
+    PoisonQuery,
+    QueryRejected,
+    ServerClosed,
+    ServingError,
+    WorkerCrashed,
+)
+from repro.serving.faults import ALL, FaultInjector, FaultPlan, InjectedWorkerCrash
 from repro.serving.query_server import (
     Answer,
     AsyncQueryServer,
+    DegradationController,
     QueryServer,
     ServeFuture,
     ServerConfig,
 )
 
 __all__ = [
-    "Answer", "AsyncQueryServer", "QueryServer", "ServeFuture",
-    "ServerConfig",
+    "ALL", "Answer", "AsyncQueryServer", "DeadlineExceeded",
+    "DegradationController", "FaultInjector", "FaultPlan",
+    "InjectedWorkerCrash", "PoisonQuery", "QueryRejected", "QueryServer",
+    "ServeFuture", "ServerClosed", "ServerConfig", "ServingError",
+    "WorkerCrashed",
 ]

@@ -26,6 +26,33 @@ fixed-shape host batching, serve-step dispatch, adaptive-budget feedback):
   and up to ``ServerConfig.pipeline_depth`` batches are in flight.
   Futures always resolve in submission order.
 
+Fault tolerance (the serving contract): every accepted query resolves with
+either an :class:`Answer` or a typed :class:`~repro.serving.errors
+.ServingError` — no caller ever blocks forever.
+
+* Deadlines — ``submit(..., deadline=s)`` sets a per-request budget.
+  Admission control rejects queries whose deadline cannot be met
+  (:class:`QueryRejected`); queued queries whose deadline lapses are swept
+  (:class:`DeadlineExceeded`); the batcher RUSHES a partial batch when the
+  earliest pending deadline approaches.
+* Degradation — with ``cfg.degradation`` a :class:`DegradationController`
+  steps the pruning cascade down (full rerank -> LC-RWMD-only -> WCD
+  shortlist) under queue/deadline/fault pressure and back up when it
+  clears.  Each :class:`Answer` is stamped with the ``tier`` it was served
+  at.  Tier switches reuse ONE compiled serve step (the tier is a
+  dispatch-time argument, not a rebuild) so shedding never re-traces.
+* Validation — non-finite top-k distances trigger a bisection retry that
+  isolates the poison query and quarantines it with a per-query
+  :class:`PoisonQuery`; its batch-mates keep their (recomputed) answers.
+* Supervision — the async worker catches any worker-thread death, fails
+  in-flight futures with :class:`WorkerCrashed`, restarts the serve loop
+  preserving submission order, and gives up (failing everything with
+  :class:`ServerClosed`) after ``cfg.max_worker_restarts``.  ``health()``
+  snapshots queue depth, in-flight count, liveness, tier, and counters.
+* Fault injection — a deterministic :class:`~repro.serving.faults
+  .FaultPlan` may be installed via ``faults=`` to exercise all of the
+  above; see ``serving/faults.py``.
+
 Both servers preserve the :class:`~repro.distributed.lcrwmd_dist.ServeResult`
 contract — ``pruned_exact`` certificates feed the adaptive rerank budget,
 whose changes rebuild the serve step (one recompile, O(log) times), with
@@ -50,9 +77,29 @@ from repro.core.lc_rwmd import LCRWMDEngine
 from repro.core.pipeline import AdaptiveRefineBudget
 from repro.data.docs import DocSet, make_docset
 from repro.distributed.lcrwmd_dist import ServeResult, build_serve_step
+from repro.serving.errors import (
+    DeadlineExceeded,
+    PoisonQuery,
+    QueryRejected,
+    ServerClosed,
+    ServingError,
+    WorkerCrashed,
+)
 
-#: One answered query: (doc ids (k,) int, distances (k,) float), ascending.
-Answer = tuple[np.ndarray, np.ndarray]
+
+class Answer(tuple):
+    """One answered query: ``(doc_ids (k,), distances (k,))``, ascending.
+
+    A plain 2-tuple (unpacks as ``ids, dists = answer``) carrying one extra
+    attribute: ``tier`` — the degradation tier the answer was served at
+    (0 = full cascade, 1 = LC-RWMD only, 2 = WCD shortlist).
+    """
+
+    def __new__(cls, ids: np.ndarray, dists: np.ndarray, tier: int = 0):
+        self = super().__new__(cls, (ids, dists))
+        self.tier = int(tier)
+        return self
+
 
 #: One pending query: (ids (h,), weights (h,)) numpy histograms — or, when a
 #: ``preprocess`` hook is installed, whatever raw payload that hook accepts.
@@ -78,15 +125,86 @@ class ServerConfig:
     # Async pipeline knobs (AsyncQueryServer only):
     queue_capacity: int | None = None  # pending-query bound; default 4*max_batch
     pipeline_depth: int = 2            # device batches in flight (2 = double buffer)
+    # Fault tolerance:
+    admission_control: bool = True     # reject at submit when deadline unmeetable
+    validate_results: bool = True      # non-finite check + bisection quarantine
+    degradation: bool = False          # tier shedding under pressure
+    shed_queue_depth: int | None = None  # down-step threshold; default 2*max_batch
+    recover_after: int = 4             # healthy dispatches before up-step
+    fail_streak_down: int = 2          # consecutive stage failures before down-step
+    max_tier: int = 2                  # deepest shed (2 = WCD shortlist)
+    max_worker_restarts: int = 3       # supervisor gives up past this
+
+
+@dataclasses.dataclass
+class DegradationController:
+    """Load/fault-aware cascade shedding for the serving core.
+
+    Tiers index :class:`repro.core.pipeline.QualityTier`: 0 = full cascade
+    (LC-RWMD + refine/rerank), 1 = LC-RWMD top-k only, 2 = WCD centroid
+    shortlist.  Down-steps are immediate on pressure signals (queue depth
+    at ``shed_queue_depth``, a deadline miss, a worker crash, or
+    ``fail_streak_down`` consecutive stage failures); the up-step is
+    conservative (``recover_after`` consecutive dispatches with the queue
+    at most half the shed threshold).  Every transition is recorded in
+    ``transitions`` (shared with server ``stats["tier_transitions"]``).
+    """
+
+    shed_queue_depth: int = 128
+    max_tier: int = 2
+    recover_after: int = 4
+    fail_streak_down: int = 2
+    tier: int = 0
+    transitions: list = dataclasses.field(default_factory=list)
+    _healthy: int = dataclasses.field(default=0, init=False, repr=False)
+    _fail_streak: int = dataclasses.field(default=0, init=False, repr=False)
+
+    def observe_dispatch(self, queue_depth: int) -> int:
+        """Called once per batch dispatch; returns the tier to serve at."""
+        if queue_depth >= self.shed_queue_depth:
+            self._down(f"queue depth {queue_depth} >= {self.shed_queue_depth}")
+        elif self.tier > 0 and queue_depth <= self.shed_queue_depth // 2:
+            self._healthy += 1
+            if self._healthy >= self.recover_after:
+                self._up("pressure cleared")
+        return self.tier
+
+    def note_success(self) -> None:
+        self._fail_streak = 0
+
+    def note_stage_failure(self) -> None:
+        self._fail_streak += 1
+        if self._fail_streak >= self.fail_streak_down:
+            self._fail_streak = 0
+            self._down("repeated stage failures")
+
+    def note_deadline_miss(self) -> None:
+        self._down("deadline miss")
+
+    def note_crash(self) -> None:
+        self._down("worker crash")
+
+    def _down(self, reason: str) -> None:
+        self._healthy = 0
+        if self.tier < self.max_tier:
+            self.tier += 1
+            self.transitions.append({"tier": self.tier, "reason": reason})
+
+    def _up(self, reason: str) -> None:
+        self._healthy = 0
+        if self.tier > 0:
+            self.tier -= 1
+            self.transitions.append({"tier": self.tier, "reason": reason})
 
 
 class ServeFuture(concurrent.futures.Future):
     """Completion handle for one submitted query.
 
-    ``result(timeout=None)`` blocks for and returns the :data:`Answer`
-    ``(doc_ids (k,), distances (k,))``; inside a coroutine the future can be
-    ``await``-ed directly.  Resolution order across futures equals
-    submission order (the pipeline collects batches FIFO).
+    ``result(timeout=None)`` blocks for and returns the :class:`Answer`
+    ``(doc_ids (k,), distances (k,))`` — or raises that query's typed
+    :class:`~repro.serving.errors.ServingError`; inside a coroutine the
+    future can be ``await``-ed directly.  Resolution order across futures
+    equals submission order (the pipeline collects batches FIFO).
     """
 
     def __await__(self):
@@ -99,6 +217,27 @@ class _InFlight(NamedTuple):
     result: ServeResult  # device arrays (async-dispatched, not yet awaited)
     n_real: int          # real (non-padding) queries in the batch
     seq: int             # dispatch sequence number (trace/debug)
+    qs: tuple = ()       # the real query histograms (validation retries)
+    tier: int = 0        # degradation tier the batch was served at
+    t0: float = 0.0      # dispatch wall-clock (latency EWMA)
+
+
+def _check_query(ids, weights) -> None:
+    """Host-side poison screen: a query with no positive finite mass can
+    never be served (its normalized histogram is NaN)."""
+    w = np.asarray(weights, dtype=np.float32).reshape(-1)
+    if w.size == 0 or not np.isfinite(w).all() or not (w > 0).any():
+        raise PoisonQuery(
+            "query has no in-vocabulary mass (empty, all-zero, or "
+            "non-finite weight vector)")
+
+
+def _as_serving_error(e: BaseException, context: str) -> ServingError:
+    if isinstance(e, ServingError):
+        return e
+    err = ServingError(f"{context}: {type(e).__name__}: {e}")
+    err.__cause__ = e
+    return err
 
 
 class _ServeCore:
@@ -106,16 +245,24 @@ class _ServeCore:
 
     ``dispatch`` is the non-blocking half (host prep + serve-step call —
     JAX async dispatch returns device futures); ``collect`` is the blocking
-    half (device readback, stats, adaptive-budget feedback + rebuild).  The
-    synchronous server calls them back-to-back; the async pipeline keeps up
-    to ``pipeline_depth`` dispatched batches open between them.
+    half (device readback, validation, stats, adaptive-budget feedback +
+    rebuild).  The synchronous server calls them back-to-back; the async
+    pipeline keeps up to ``pipeline_depth`` dispatched batches open between
+    them.  An optional :class:`DegradationController` picks the serve tier
+    per dispatch; an optional fault injector exercises the failure paths.
     """
 
-    def __init__(self, resident: DocSet, emb, mesh, cfg: ServerConfig):
+    def __init__(self, resident: DocSet, emb, mesh, cfg: ServerConfig,
+                 faults=None):
         self.resident = resident
         self.emb = jnp.asarray(emb)
         self.cfg = cfg
         self._mesh = mesh
+        if faults is not None and not hasattr(faults, "on_dispatch"):
+            # Accept a bare FaultPlan for ergonomics.
+            from repro.serving.faults import FaultInjector
+            faults = FaultInjector(faults)
+        self.faults = faults
         # All resident-side prep (vocab restriction, padding, placement on
         # the mesh, resident-embedding gathers) happens ONCE here; per-flush
         # work is only the transient query batch.  The WMD re-rank (when
@@ -133,9 +280,23 @@ class _ServeCore:
         self._serve = self._build_serve(
             self.budget.budget if self.budget else 2 * cfg.k)
         self.stats = {"queries": 0, "batches": 0, "wmd_reranks": 0,
-                      "budget_rebuilds": 0, "budget_trajectory": []}
+                      "budget_rebuilds": 0, "budget_trajectory": [],
+                      "tier_counts": [0] * 3, "degraded_batches": 0,
+                      "tier_transitions": [],
+                      "validation_failures": 0, "validation_retries": 0,
+                      "poisoned_queries": 0, "deadline_misses": 0,
+                      "worker_restarts": 0,
+                      "stream_failures": 0, "dropped_queries": 0,
+                      "ewma_latency_s": 0.0}
         if self.budget is not None:
             self.stats["budget_trajectory"].append(self.budget.budget)
+        self.controller: DegradationController | None = None
+        if cfg.degradation:
+            self.controller = DegradationController(
+                shed_queue_depth=cfg.shed_queue_depth or 2 * cfg.max_batch,
+                max_tier=cfg.max_tier, recover_after=cfg.recover_after,
+                fail_streak_down=cfg.fail_streak_down)
+            self.stats["tier_transitions"] = self.controller.transitions
         self._seq = 0
         # Diagnostic hook: set to a list to record ("dispatch"|"collect", seq)
         # events — the overlap tests assert dispatch(i+1) precedes collect(i).
@@ -163,50 +324,147 @@ class _ServeCore:
             w[i, :n] = qw[:n]
         return make_docset(np.where(w > 0, ids, -1), w)
 
-    def dispatch(self, qs: Sequence[tuple[np.ndarray, np.ndarray]]) -> _InFlight:
+    def _raw_serve(self, qs: Sequence[tuple[np.ndarray, np.ndarray]],
+                   tier: int, batch_seq: int | None) -> ServeResult:
+        """Pad + serve one chunk at `tier`, with fault hooks applied.
+
+        ``batch_seq=None`` marks a validation RETRY: dispatch-time faults
+        (latency, crashes, transient NaNs) are skipped — only sticky
+        query-keyed poison re-applies — so bisection converges.
+        """
+        queries = self.pad_batch(qs)
+        if self.faults is not None and batch_seq is not None:
+            self.faults.on_dispatch(batch_seq)
+        # Tier 0 calls the step with its default signature so test spies /
+        # wrappers that only accept (queries,) keep working.
+        res = self._serve(queries) if tier == 0 else \
+            self._serve(queries, tier=tier)
+        if self.faults is not None:
+            res = self.faults.poison_result(batch_seq, res, qs)
+        return res
+
+    def dispatch(self, qs: Sequence[tuple[np.ndarray, np.ndarray]], *,
+                 queue_depth: int = 0) -> _InFlight:
         """Host-prep one ≤max_batch chunk and launch it on the device.
 
         Returns immediately with device handles (JAX async dispatch): the
         returned :class:`_InFlight` must be passed to :meth:`collect` to
-        block for and deliver the answers.
+        block for and deliver the answers.  With degradation enabled the
+        controller picks the tier from ``queue_depth`` pressure.
         """
-        queries = self.pad_batch(qs)
+        tier = 0
+        if self.controller is not None:
+            tier = self.controller.observe_dispatch(queue_depth)
         seq, self._seq = self._seq, self._seq + 1
         if self.trace is not None:
             self.trace.append(("dispatch", seq))
-        res = self._serve(queries)
+        t0 = time.perf_counter()
+        res = self._raw_serve(qs, tier, seq)
         self.stats["queries"] += len(qs)
         self.stats["batches"] += 1
-        if self.cfg.rerank_wmd:
+        self.stats["tier_counts"][min(tier, 2)] += 1
+        if tier:
+            self.stats["degraded_batches"] += 1
+        if self.cfg.rerank_wmd and tier == 0:
             self.stats["wmd_reranks"] += len(qs)
-        return _InFlight(result=res, n_real=len(qs), seq=seq)
+        return _InFlight(result=res, n_real=len(qs), seq=seq,
+                         qs=tuple(qs), tier=tier, t0=t0)
 
-    def collect(self, inflight: _InFlight) -> list[Answer]:
-        """Block for one dispatched batch; deliver answers + budget feedback.
+    def collect(self, inflight: _InFlight) -> list:
+        """Block for one dispatched batch; validate + deliver answers.
 
         This is where ``jax.block_until_ready`` effectively happens (the
-        ``np.asarray`` readback).  Adaptive-budget updates run here, at
-        result-delivery time: a budget change rebuilds the serve step, which
-        applies to every batch dispatched AFTER the rebuild (in the async
+        ``np.asarray`` readback).  Non-finite distances divert to the
+        bisection quarantine path (:meth:`_validated_answers`); clean
+        batches feed the adaptive budget, whose change rebuilds the serve
+        step — ONCE, here at collect time, regardless of any tier changes
+        in the same flush (tier switches never rebuild: the tier is a
+        dispatch argument of the one compiled step).  In the async
         pipeline, at most ``pipeline_depth - 1`` already-dispatched batches
         still use the previous budget — the trajectory in ``stats`` is the
-        ground truth either way).
+        ground truth either way.
+
+        Returns one entry per real query, in order: an :class:`Answer` or
+        a :class:`ServingError` instance (quarantined poison).
         """
-        res, n_real = inflight.result, inflight.n_real
+        res, n_real, tier = inflight.result, inflight.n_real, inflight.tier
         tk_i = np.asarray(res.topk.indices)   # blocks on the device result
         tk_d = np.asarray(res.topk.dists)
         if self.trace is not None:
             self.trace.append(("collect", inflight.seq))
-        if self.budget is not None and res.pruned_exact is not None:
-            # Feed only the REAL queries' exactness flags (padding queries
-            # are all-zero histograms, their flags are meaningless).
-            old = self.budget.budget
-            new = self.budget.update(np.asarray(res.pruned_exact)[:n_real])
-            if new != old:
-                self._serve = self._build_serve(new)
-                self.stats["budget_rebuilds"] += 1
-                self.stats["budget_trajectory"].append(new)
-        return [(tk_i[j], tk_d[j]) for j in range(n_real)]
+        finite = np.isfinite(tk_d[:n_real]).all(axis=1)
+        if self.cfg.validate_results and not finite.all():
+            answers = self._validated_answers(inflight, tk_i, tk_d, finite)
+        else:
+            if self.controller is not None:
+                self.controller.note_success()
+            if (self.budget is not None and res.pruned_exact is not None
+                    and tier == 0):
+                # Feed only the REAL queries' exactness flags (padding
+                # queries are all-zero histograms, flags meaningless).
+                old = self.budget.budget
+                new = self.budget.update(np.asarray(res.pruned_exact)[:n_real])
+                if new != old:
+                    self._serve = self._build_serve(new)
+                    self.stats["budget_rebuilds"] += 1
+                    self.stats["budget_trajectory"].append(new)
+            answers = [Answer(tk_i[j], tk_d[j], tier=tier)
+                       for j in range(n_real)]
+        if inflight.t0:
+            dt = time.perf_counter() - inflight.t0
+            prev = self.stats["ewma_latency_s"]
+            self.stats["ewma_latency_s"] = dt if not prev else \
+                0.8 * prev + 0.2 * dt
+        return answers
+
+    def _validated_answers(self, inflight: _InFlight, tk_i, tk_d,
+                           finite) -> list:
+        """Bisection quarantine: recover every healthy query of a batch
+        whose device result came back non-finite.
+
+        The finite rows keep their original answers.  The non-finite rows
+        are re-served (``batch_seq=None`` — transient faults don't
+        re-apply); rows that stay bad are split and recursed until a
+        singleton stays bad, which is quarantined with a per-query
+        :class:`PoisonQuery`.  Cost: O(p · log max_batch) extra serves for
+        p poison queries — never fails the other ``max_batch - p``.
+        """
+        n_real, tier = inflight.n_real, inflight.tier
+        self.stats["validation_failures"] += 1
+        if self.controller is not None:
+            self.controller.note_stage_failure()
+        out: list = [None] * n_real
+        for j in range(n_real):
+            if finite[j]:
+                out[j] = Answer(tk_i[j], tk_d[j], tier=tier)
+
+        def solve(idx: list[int]) -> None:
+            res = self._raw_serve([inflight.qs[i] for i in idx], tier, None)
+            self.stats["validation_retries"] += 1
+            d = np.asarray(res.topk.dists)
+            i_ = np.asarray(res.topk.indices)
+            ok = np.isfinite(d[:len(idx)]).all(axis=1)
+            bad = []
+            for j, q in enumerate(idx):
+                if ok[j]:
+                    out[q] = Answer(i_[j], d[j], tier=tier)
+                else:
+                    bad.append(q)
+            if not bad:
+                return
+            if len(idx) == 1:
+                q = idx[0]
+                self.stats["poisoned_queries"] += 1
+                out[q] = PoisonQuery(
+                    f"non-finite distances isolated to one query by "
+                    f"bisection (batch #{inflight.seq}, slot {q})")
+                return
+            mid = (len(bad) + 1) // 2
+            solve(bad[:mid])
+            solve(bad[mid:])
+
+        solve([j for j in range(n_real) if not finite[j]])
+        return out
 
 
 class QueryServer:
@@ -217,14 +475,21 @@ class QueryServer:
     results are in hand when :meth:`flush` returns.  Use
     :class:`AsyncQueryServer` for the pipelined variant; both produce
     identical answers for identical inputs.
+
+    ``submit`` screens queries (:class:`PoisonQuery` for zero-mass
+    histograms, :class:`QueryRejected` for already-expired deadlines);
+    ``flush`` delivers a :class:`DeadlineExceeded` instance POSITIONALLY
+    for any query whose deadline lapsed while pending (never raises for
+    it — batch-mates keep their answers).
     """
 
     def __init__(self, resident: DocSet, emb, mesh, cfg: ServerConfig,
                  *, preprocess: Callable[[QueryLike],
-                                         tuple[np.ndarray, np.ndarray]] | None = None):
-        self._core = _ServeCore(resident, emb, mesh, cfg)
+                                         tuple[np.ndarray, np.ndarray]] | None = None,
+                 faults=None):
+        self._core = _ServeCore(resident, emb, mesh, cfg, faults=faults)
         self._preprocess = preprocess
-        self._pending: list[tuple[np.ndarray, np.ndarray]] = []
+        self._pending: list[tuple[np.ndarray, np.ndarray, float | None]] = []
 
     # -- shared-core views (kept as attributes of record for tests/tools) --
     @property
@@ -264,31 +529,69 @@ class QueryServer:
         return self._core._build_serve(rerank_budget)
 
     # -- request path ------------------------------------------------------
-    def submit(self, ids, weights=None):
+    def submit(self, ids, weights=None, *, deadline: float | None = None):
         """Queue one query histogram (padded to h_max by the caller/vectorizer).
 
         With a ``preprocess`` hook installed, a single raw payload may be
         submitted instead; the hook runs HERE, on the caller's thread (the
         async server defers it to the pipeline's host-prep stage).
+
+        ``deadline`` is a relative budget in seconds; an already-expired
+        deadline raises :class:`QueryRejected` (with admission control), a
+        zero-mass histogram raises :class:`PoisonQuery`.
         """
         if self._preprocess is not None and weights is None:
-            ids, weights = self._preprocess(ids)
+            try:
+                ids, weights = self._preprocess(ids)
+            except ServingError:
+                raise
+            except Exception as e:
+                raise PoisonQuery(f"preprocess failed: {e}") from e
         elif weights is None:
             raise ValueError(
                 "submit(ids, weights) needs explicit weights unless a "
                 "preprocess hook is installed (raw-payload submission)")
-        self._pending.append((ids, weights))
+        _check_query(ids, weights)
+        abs_deadline = None
+        if deadline is not None:
+            abs_deadline = time.monotonic() + float(deadline)
+            if self.cfg.admission_control and float(deadline) <= 0:
+                raise QueryRejected(
+                    f"deadline {deadline!r}s already expired at submit")
+        self._pending.append((ids, weights, abs_deadline))
 
-    def _flush_chunk(self, qs: list[tuple[np.ndarray, np.ndarray]]):
-        """Serve one ≤max_batch chunk at the FIXED (max_batch, h) shape."""
-        return self._core.collect(self._core.dispatch(qs))
+    def _flush_chunk(self, qs: list[tuple[np.ndarray, np.ndarray, float | None]]):
+        """Serve one ≤max_batch chunk at the FIXED (max_batch, h) shape.
+
+        Expired entries are not dispatched; their slots carry a
+        :class:`DeadlineExceeded` instance in the returned list.
+        """
+        now = time.monotonic()
+        live = [j for j, q in enumerate(qs) if q[2] is None or q[2] > now]
+        dead = [j for j in range(len(qs)) if j not in set(live)]
+        out: list = [None] * len(qs)
+        for j in dead:
+            self._core.stats["deadline_misses"] += 1
+            if self._core.controller is not None:
+                self._core.controller.note_deadline_miss()
+            out[j] = DeadlineExceeded(
+                "deadline expired before the batch was dispatched")
+        if live:
+            answers = self._core.collect(
+                self._core.dispatch([qs[j][:2] for j in live],
+                                    queue_depth=len(self._pending)))
+            for j, a in zip(live, answers):
+                out[j] = a
+        return out
 
     def flush(self):
         """Serve everything pending; returns list of (doc_ids, distances).
 
         Pending queries are chunked into fixed ``max_batch``-sized serve
         calls, so an overflow (> max_batch pending) never compiles a new
-        batch shape.
+        batch shape.  Entries may be typed :class:`ServingError` instances
+        (expired deadline, quarantined poison) — positionally, so
+        batch-mates are never lost.
         """
         qs, self._pending = self._pending, []
         out = []
@@ -306,6 +609,9 @@ class QueryServer:
         If the INPUT stream raises mid-iteration, queries queued before the
         failure are still flushed and their answers yielded before the
         exception propagates — a dying producer never loses accepted work.
+        ``stats["stream_failures"]`` counts dying producers; if the
+        post-mortem flush itself fails, ``stats["dropped_queries"]`` counts
+        the accepted-but-never-answered queries (operator visibility).
         """
         # Arrival time of the oldest pending query; queries already pending
         # when the stream starts inherit the stream start as their clock.
@@ -320,7 +626,13 @@ class QueryServer:
                 # Producer died: drain what was accepted, then re-raise.
                 # (Exception, not BaseException: a KeyboardInterrupt must
                 # propagate immediately, not run device flushes first.)
-                yield from self.flush()
+                self._core.stats["stream_failures"] += 1
+                n_at_risk = len(self._pending)
+                try:
+                    yield from self.flush()
+                except Exception:
+                    self._core.stats["dropped_queries"] += n_at_risk
+                    raise
                 raise
             if not self._pending:
                 t0 = time.perf_counter()
@@ -346,9 +658,10 @@ class AsyncQueryServer:
     immediately.  A single worker thread drives a two-stage pipeline:
 
       1. HOST stage — gather up to ``max_batch`` pending queries (waiting at
-         most ``max_wait_s`` from the batch's first arrival), run the
-         optional ``preprocess`` hook, pad to the fixed serve shape, and
-         DISPATCH (JAX async dispatch: the serve step returns device futures
+         most ``max_wait_s`` from the batch's first arrival, rushing early
+         when the earliest pending deadline approaches), run the optional
+         ``preprocess`` hook, pad to the fixed serve shape, and DISPATCH
+         (JAX async dispatch: the serve step returns device futures
          without blocking).
       2. DEVICE stage — up to ``cfg.pipeline_depth`` (default 2: double
          buffering) dispatched batches stay in flight; the oldest is
@@ -362,16 +675,31 @@ class AsyncQueryServer:
 
     Backpressure: at most ``cfg.queue_capacity`` (default ``4·max_batch``)
     queries may be pending; ``submit`` blocks the producer until the worker
-    drains below capacity (bounded memory under overload).
+    drains below capacity (bounded memory under overload).  A deadline
+    bounds the wait: if the queue is still full when the query's deadline
+    arrives, ``submit`` raises :class:`QueryRejected` instead of blocking
+    past the point the answer could matter.
 
-    Lifecycle: use as a context manager, or call :meth:`close`.  ``drain``
-    blocks until every accepted query has been answered.
+    Fault tolerance: the worker loop runs under a SUPERVISOR — any
+    worker-thread death fails that batch's in-flight futures with
+    :class:`WorkerCrashed` and restarts the loop (queued requests keep
+    submission order); after ``cfg.max_worker_restarts`` consecutive
+    crashes the server closes itself and fails everything unresolved with
+    :class:`ServerClosed`.  :meth:`health` snapshots liveness, queue depth,
+    in-flight futures, degradation tier, and the error counters.  No
+    accepted future is ever left unresolved.
+
+    Lifecycle: use as a context manager, or call :meth:`close` —
+    idempotent, safe to race with ``submit``, and with ``timeout=`` it
+    force-fails whatever a wedged worker never answered.  ``drain`` blocks
+    until every accepted query has been answered.
     """
 
     def __init__(self, resident: DocSet, emb, mesh, cfg: ServerConfig,
                  *, preprocess: Callable[[QueryLike],
-                                         tuple[np.ndarray, np.ndarray]] | None = None):
-        self._core = _ServeCore(resident, emb, mesh, cfg)
+                                         tuple[np.ndarray, np.ndarray]] | None = None,
+                 faults=None):
+        self._core = _ServeCore(resident, emb, mesh, cfg, faults=faults)
         self._preprocess = preprocess
         self._capacity = cfg.queue_capacity or 4 * cfg.max_batch
         self._depth = max(1, cfg.pipeline_depth)
@@ -379,13 +707,22 @@ class AsyncQueryServer:
         self._not_full = threading.Condition(self._lock)   # submit backpressure
         self._work = threading.Condition(self._lock)       # worker wake-up
         self._idle = threading.Condition(self._lock)       # drain wait
-        self._queue: deque[tuple[QueryLike, ServeFuture]] = deque()
+        # Queue entries: (payload, future, absolute monotonic deadline|None).
+        self._queue: deque[tuple[QueryLike, ServeFuture, float | None]] = deque()
+        self._inflight: deque = deque()  # (_InFlight, futures, deadlines)
         self._batch_t0: float | None = None  # arrival of oldest pending query
         self._flush_requested = False
         self._closed = False
         self._n_unanswered = 0  # accepted (queued or in flight), not resolved
+        self._prep_idx = 0      # submission-order index fed to fault hooks
+        # Futures of the batch currently inside dispatch()/collect() on the
+        # worker thread: a crash there escapes before they reach (or after
+        # they left) `_inflight`, so the supervisor must fail them from
+        # here — otherwise they would hang forever.
+        self._crash_victims: list[ServeFuture] = []
         self._worker = threading.Thread(
-            target=self._run, name="lcrwmd-serve-pipeline", daemon=True)
+            target=self._supervised_run, name="lcrwmd-serve-pipeline",
+            daemon=True)
         self._worker.start()
 
     # -- shared-core views -------------------------------------------------
@@ -414,7 +751,8 @@ class AsyncQueryServer:
         self._core._serve = fn
 
     # -- producer API ------------------------------------------------------
-    def submit(self, ids, weights=None) -> ServeFuture:
+    def submit(self, ids, weights=None, *,
+               deadline: float | None = None) -> ServeFuture:
         """Enqueue one query; returns its :class:`ServeFuture` immediately.
 
         Accepts either ``(ids, weights)`` numpy histograms or — with a
@@ -422,23 +760,47 @@ class AsyncQueryServer:
         WORKER thread vectorizes inside the pipeline's host stage (so raw
         ingest overlaps device compute).  Blocks while the pending queue is
         at ``queue_capacity``.
+
+        ``deadline`` is a relative budget in seconds, converted to an
+        absolute monotonic deadline at submit.  Admission control
+        (``cfg.admission_control``) raises :class:`QueryRejected` when the
+        deadline is already expired or passes while waiting for queue
+        capacity; zero-mass histograms raise :class:`PoisonQuery`; a closed
+        server raises :class:`ServerClosed` (a ``RuntimeError``).
         """
         if self._preprocess is None and weights is None:
             raise ValueError(
                 "submit(ids, weights) needs explicit weights unless a "
                 "preprocess hook is installed (raw-payload submission)")
+        abs_deadline = None
+        if deadline is not None:
+            abs_deadline = time.monotonic() + float(deadline)
         payload: QueryLike = (ids, weights)
         fut = ServeFuture()
         with self._lock:
             if self._closed:
-                raise RuntimeError("submit() on a closed AsyncQueryServer")
+                raise ServerClosed("submit() on a closed AsyncQueryServer")
+            if self._preprocess is None:
+                _check_query(ids, weights)
+            if (abs_deadline is not None and self.cfg.admission_control
+                    and abs_deadline <= time.monotonic()):
+                raise QueryRejected(
+                    f"deadline {deadline!r}s already expired at submit")
             while len(self._queue) >= self._capacity and not self._closed:
-                self._not_full.wait()
+                if abs_deadline is not None and self.cfg.admission_control:
+                    slack = abs_deadline - time.monotonic()
+                    if slack <= 0:
+                        raise QueryRejected(
+                            "pending queue still at capacity when the "
+                            "query's deadline arrived")
+                    self._not_full.wait(slack)
+                else:
+                    self._not_full.wait()
             if self._closed:
-                raise RuntimeError("submit() on a closed AsyncQueryServer")
+                raise ServerClosed("submit() on a closed AsyncQueryServer")
             if not self._queue:
                 self._batch_t0 = time.perf_counter()
-            self._queue.append((payload, fut))
+            self._queue.append((payload, fut, abs_deadline))
             self._n_unanswered += 1
             self._work.notify_all()
         return fut
@@ -455,7 +817,7 @@ class AsyncQueryServer:
         with self._lock:
             self._flush_requested = True
             self._work.notify_all()
-            while self._n_unanswered:
+            while self._n_unanswered > 0:
                 self._idle.wait(0.1)
                 self._flush_requested = True
                 self._work.notify_all()
@@ -463,14 +825,50 @@ class AsyncQueryServer:
             # the next submission dispatch as a near-empty batch.
             self._flush_requested = False
 
-    def close(self) -> None:
-        """Drain, stop the worker, and reject further submissions."""
-        self.drain()
+    def close(self, timeout: float | None = None) -> None:
+        """Stop accepting work, serve what was accepted, stop the worker.
+
+        Idempotent and safe to race with ``submit`` (late submitters get
+        :class:`ServerClosed`).  The worker drains the remaining queue
+        before exiting, so accepted futures still resolve with answers.
+        With ``timeout=`` the join is bounded: if the worker is wedged past
+        it, every still-unresolved future is failed with
+        :class:`ServerClosed` so no caller blocks forever.
+        """
         with self._lock:
             self._closed = True
             self._work.notify_all()
             self._not_full.notify_all()
-        self._worker.join()
+            self._idle.notify_all()
+        self._worker.join(timeout)
+        if self._worker.is_alive():
+            self._fail_unresolved(ServerClosed(
+                f"close(timeout={timeout}) expired with the worker wedged; "
+                "unresolved futures failed"))
+        else:
+            # Worker exited cleanly; sweep any straggler that raced in.
+            self._fail_unresolved(ServerClosed("server closed"))
+
+    def health(self) -> dict:
+        """O(1) liveness/pressure snapshot for operators and supervisors."""
+        s = self._core.stats
+        with self._lock:
+            return {
+                "queue_depth": len(self._queue),
+                "in_flight": sum(len(f) for _h, f, _d in self._inflight),
+                "unanswered": self._n_unanswered,
+                "worker_alive": self._worker.is_alive(),
+                "closed": self._closed,
+                "tier": (self._core.controller.tier
+                         if self._core.controller else 0),
+                "worker_restarts": s["worker_restarts"],
+                "deadline_misses": s["deadline_misses"],
+                "poisoned_queries": s["poisoned_queries"],
+                "validation_failures": s["validation_failures"],
+                "queries": s["queries"],
+                "batches": s["batches"],
+                "ewma_latency_s": s["ewma_latency_s"],
+            }
 
     def __enter__(self) -> "AsyncQueryServer":
         return self
@@ -482,21 +880,61 @@ class AsyncQueryServer:
     def _prep(self, payload: QueryLike) -> tuple[np.ndarray, np.ndarray]:
         ids, w = payload
         if self._preprocess is not None and w is None:
-            return self._preprocess(ids)
+            ids, w = self._preprocess(ids)
+            _check_query(ids, w)  # hook output screened like direct submits
         return ids, w
 
+    def _rush_margin(self) -> float:
+        """How early (seconds) to dispatch ahead of the earliest pending
+        deadline: the observed serve latency, floored at 1 ms."""
+        return max(0.001, float(self._core.stats["ewma_latency_s"]))
+
+    def _sweep_expired_locked(self) -> list[ServeFuture]:
+        """Drop queued entries whose deadline already passed; lock held."""
+        if not self._queue:
+            return []
+        now = time.monotonic()
+        if not any(d is not None and d <= now for _p, _f, d in self._queue):
+            return []
+        keep: deque = deque()
+        expired = []
+        for entry in self._queue:
+            _p, fut, dl = entry
+            if dl is not None and dl <= now:
+                expired.append(fut)
+            else:
+                keep.append(entry)
+        self._queue = keep
+        if not keep:
+            self._batch_t0 = None
+        self._not_full.notify_all()
+        return expired
+
     def _next_batch(self, have_inflight: bool, inflight_ready=None):
-        """Take up to max_batch pending queries, or None when the caller
-        should collect (work in flight whose device result is ready, or
-        nothing pending) or exit (closed)."""
+        """Returns ``(items, expired)``.
+
+        ``items`` is up to max_batch queued entries to dispatch, or None
+        when the caller should instead fail ``expired`` (deadline sweep),
+        collect (work in flight whose device result is ready, or nothing
+        pending), or exit (closed).
+        """
         cfg = self._core.cfg
         with self._lock:
             while True:
+                expired = self._sweep_expired_locked()
+                if expired:
+                    return None, expired
                 if self._queue:
                     now = time.perf_counter()
+                    mono = time.monotonic()
                     stale = (self._batch_t0 is not None
                              and now - self._batch_t0 >= cfg.max_wait_s)
-                    if (len(self._queue) >= cfg.max_batch or stale
+                    dls = [d for _p, _f, d in self._queue if d is not None]
+                    # Rush: dispatch the partial batch early when the
+                    # earliest deadline is one serve-latency away.
+                    rush = bool(dls) and (
+                        min(dls) - mono <= self._rush_margin())
+                    if (len(self._queue) >= cfg.max_batch or stale or rush
                             or self._flush_requested or self._closed):
                         take = min(len(self._queue), cfg.max_batch)
                         items = [self._queue.popleft() for _ in range(take)]
@@ -507,17 +945,20 @@ class AsyncQueryServer:
                             self._batch_t0 = None
                             self._flush_requested = False
                         self._not_full.notify_all()
-                        return items
-                    # Partial batch: wait for fill, staleness, or a flush —
-                    # but never sit on a COMPLETED in-flight batch: if the
-                    # oldest dispatched batch's device result is ready, hand
-                    # control back so its futures resolve now instead of
-                    # after up to max_wait_s.
+                        return items, []
+                    # Partial batch: wait for fill, staleness, a flush, or
+                    # the next deadline event — but never sit on a COMPLETED
+                    # in-flight batch: if the oldest dispatched batch's
+                    # device result is ready, hand control back so its
+                    # futures resolve now instead of after up to max_wait_s.
                     timeout = max(0.0, self._batch_t0 + cfg.max_wait_s - now)
+                    if dls:
+                        timeout = min(timeout, max(
+                            0.0, min(dls) - mono - self._rush_margin()))
                     if inflight_ready is not None and have_inflight:
                         self._work.wait(min(timeout, 0.005))
                         if inflight_ready():
-                            return None
+                            return None, []
                     else:
                         self._work.wait(timeout)
                     continue
@@ -526,18 +967,19 @@ class AsyncQueryServer:
                 # query (which must get normal max_batch/max_wait batching).
                 self._flush_requested = False
                 if have_inflight or self._closed:
-                    return None
+                    return None, []
                 self._work.wait(0.1)
 
-    def _resolve(self, futures: list[ServeFuture], answers: list[Answer],
-                 error: BaseException | None) -> None:
+    def _resolve(self, futures: Sequence[ServeFuture],
+                 answers: Sequence) -> None:
+        """Deliver one entry per future: an Answer or an exception."""
         try:
-            for i, fut in enumerate(futures):
+            for fut, ans in zip(futures, answers):
                 try:
-                    if error is not None:
-                        fut.set_exception(error)
+                    if isinstance(ans, BaseException):
+                        fut.set_exception(ans)
                     else:
-                        fut.set_result(answers[i])
+                        fut.set_result(ans)
                 except concurrent.futures.InvalidStateError:
                     # The client cancelled this future; its query was served
                     # with the batch anyway — drop the answer, never let a
@@ -546,50 +988,183 @@ class AsyncQueryServer:
         finally:
             with self._lock:
                 self._n_unanswered -= len(futures)
-                if self._n_unanswered == 0:
+                if self._n_unanswered <= 0:
                     self._idle.notify_all()
 
-    def _collect(self, entry) -> None:
-        inflight, futures = entry
+    def _expire(self, futures: list[ServeFuture]) -> None:
+        self._core.stats["deadline_misses"] += len(futures)
+        if self._core.controller is not None:
+            for _ in futures:
+                self._core.controller.note_deadline_miss()
+        self._resolve(futures, [
+            DeadlineExceeded("deadline expired while queued")
+            for _ in futures])
+
+    def _prep_entries(self, entries):
+        """Host-prep a batch with PER-QUERY error containment.
+
+        A preprocess failure (or poison screen) fails only that query's
+        future with a typed :class:`PoisonQuery` — its batch-mates proceed.
+        Returns (qs, futures, deadlines) for the healthy queries.
+        """
+        qs, futs, dls, errs = [], [], [], []
+        for payload, fut, dl in entries:
+            idx, self._prep_idx = self._prep_idx, self._prep_idx + 1
+            try:
+                if self._core.faults is not None:
+                    self._core.faults.on_prep(idx)
+                q = self._prep(payload)
+            except ServingError as e:
+                errs.append((fut, e))
+            except Exception as e:
+                pe = PoisonQuery(f"preprocess failed: {e}")
+                pe.__cause__ = e
+                errs.append((fut, pe))
+            else:
+                qs.append(q)
+                futs.append(fut)
+                dls.append(dl)
+        if errs:
+            bad_futs, bad_errs = zip(*errs)
+            self._resolve(list(bad_futs), list(bad_errs))
+        return qs, futs, dls
+
+    def _collect_one(self) -> None:
+        with self._lock:
+            entry = self._inflight.popleft()
+        handle, futures, deadlines = entry
+        self._crash_victims = futures
         try:
-            answers = self._core.collect(inflight)
-        except BaseException as e:  # noqa: BLE001 — forwarded to futures
-            self._resolve(futures, [], e)
-        else:
-            self._resolve(futures, answers, None)
+            answers = self._core.collect(handle)
+        except Exception as e:  # typed forwarding; crashes escape higher
+            err = _as_serving_error(e, "batch collect failed")
+            self._crash_victims = []
+            self._resolve(futures, [err] * len(futures))
+            return
+        # Strict delivery-time deadline check: an answer that arrives past
+        # its deadline is a miss, delivered as DeadlineExceeded.
+        now = time.monotonic()
+        out = []
+        for a, dl in zip(answers, deadlines):
+            if dl is not None and now > dl:
+                self._core.stats["deadline_misses"] += 1
+                if self._core.controller is not None:
+                    self._core.controller.note_deadline_miss()
+                out.append(DeadlineExceeded(
+                    f"answer ready {now - dl:.3f}s past the deadline"))
+            else:
+                out.append(a)
+        self._crash_victims = []
+        self._resolve(futures, out)
+
+    def _oldest_ready(self) -> bool:
+        if not self._inflight:
+            return False
+        dists = self._inflight[0][0].result.topk.dists
+        # Non-jax results (test spies, already-host data) are ready.
+        return bool(getattr(dists, "is_ready", lambda: True)())
 
     def _run(self) -> None:
-        inflight: deque = deque()
-
-        def oldest_ready() -> bool:
-            if not inflight:
-                return False
-            dists = inflight[0][0].result.topk.dists
-            # Non-jax results (test spies, already-host data) are ready.
-            return bool(getattr(dists, "is_ready", lambda: True)())
-
         while True:
-            batch = self._next_batch(have_inflight=bool(inflight),
-                                     inflight_ready=oldest_ready)
+            batch, expired = self._next_batch(
+                have_inflight=bool(self._inflight),
+                inflight_ready=self._oldest_ready)
+            if expired:
+                self._expire(expired)
+                continue
             if batch is not None:
-                payloads, futures = zip(*((p, f) for p, f in batch))
-                futures = list(futures)
-                try:
-                    qs = [self._prep(p) for p in payloads]
-                    handle = self._core.dispatch(qs)
-                except BaseException as e:  # noqa: BLE001 — forwarded
-                    self._resolve(futures, [], e)
-                else:
-                    inflight.append((handle, futures))
+                qs, futures, deadlines = self._prep_entries(batch)
+                if qs:
+                    with self._lock:
+                        depth = len(self._queue)
+                    self._crash_victims = futures
+                    try:
+                        handle = self._core.dispatch(qs, queue_depth=depth)
+                    except Exception as e:  # typed forwarding; crashes escape
+                        err = _as_serving_error(e, "batch dispatch failed")
+                        self._crash_victims = []
+                        self._resolve(futures, [err] * len(futures))
+                    else:
+                        with self._lock:
+                            self._inflight.append(
+                                (handle, futures, deadlines))
+                        self._crash_victims = []
                 # Two-slot window: only once `pipeline_depth` batches are in
                 # flight does the worker block on the oldest — i.e. batch
                 # i+1 was host-prepped AND dispatched while batch i ran.
-                if len(inflight) >= self._depth:
-                    self._collect(inflight.popleft())
+                if len(self._inflight) >= self._depth:
+                    self._collect_one()
                 continue
-            if inflight:
-                self._collect(inflight.popleft())
+            if self._inflight:
+                self._collect_one()
                 continue
             with self._lock:
                 if self._closed and not self._queue:
                     return
+
+    # -- supervisor --------------------------------------------------------
+    def _supervised_run(self) -> None:
+        """Worker entry point: run the serve loop under a supervisor.
+
+        Any escape from :meth:`_run` — including ``BaseException``-derived
+        injected crashes that the per-batch typed forwarding deliberately
+        does not catch — fails the in-flight futures with
+        :class:`WorkerCrashed` (crash chained as ``__cause__``), steps the
+        degradation controller, and RESTARTS the loop: queued entries were
+        never touched, so submission order is preserved.  After
+        ``cfg.max_worker_restarts`` crashes the server closes itself and
+        fails everything unresolved with :class:`ServerClosed` — the
+        no-future-left-behind contract holds even in permanent failure.
+        """
+        while True:
+            try:
+                self._run()
+                return  # clean exit (closed + drained)
+            except BaseException as e:  # noqa: BLE001 — supervisor boundary
+                with self._lock:
+                    dead, self._inflight = self._inflight, deque()
+                # The batch mid-dispatch/mid-collect when the crash escaped
+                # never made it into (or already left) `_inflight` — its
+                # futures are staged in `_crash_victims`.
+                victims = list(self._crash_victims)
+                self._crash_victims = []
+                for _h, futs, _d in dead:
+                    victims.extend(futs)
+                self._core.stats["worker_restarts"] += 1
+                if self._core.controller is not None:
+                    self._core.controller.note_crash()
+                wc = WorkerCrashed(
+                    f"serve worker died mid-batch: {type(e).__name__}: {e}")
+                wc.__cause__ = e
+                if victims:
+                    self._resolve(victims, [wc] * len(victims))
+                restarts = self._core.stats["worker_restarts"]
+                if restarts > self._core.cfg.max_worker_restarts:
+                    with self._lock:
+                        self._closed = True
+                    self._fail_unresolved(ServerClosed(
+                        f"serve worker crashed {restarts} times "
+                        f"(> max_worker_restarts="
+                        f"{self._core.cfg.max_worker_restarts}); giving up"))
+                    return
+                # Restart the loop: still-queued requests dispatch next, in
+                # their original submission order.
+
+    def _fail_unresolved(self, exc: ServingError) -> None:
+        """Fail every accepted-but-unresolved future with `exc`."""
+        with self._lock:
+            queued = list(self._queue)
+            self._queue.clear()
+            dead, self._inflight = self._inflight, deque()
+            self._batch_t0 = None
+            self._not_full.notify_all()
+        # A batch wedged inside dispatch()/collect() on a stuck worker is in
+        # neither the queue nor `_inflight` — take it from the staging list
+        # (not cleared: the worker owns it; double-resolution is absorbed by
+        # the InvalidStateError guard in `_resolve`).
+        futs: list[ServeFuture] = list(self._crash_victims)
+        for _h, bfuts, _d in dead:          # then in-flight (older first)...
+            futs.extend(bfuts)
+        futs.extend(f for _p, f, _d in queued)  # ...then the queue (newer)
+        if futs:
+            self._resolve(futs, [exc] * len(futs))

@@ -1,4 +1,6 @@
+import importlib.util
 import os
+import signal
 
 # Tests run on the single real CPU device (the 512-device override is
 # dryrun.py-only, per the multi-pod dry-run contract).
@@ -8,6 +10,39 @@ import numpy as np
 import pytest
 
 from repro.data.synth import Corpus, CorpusSpec, make_corpus
+
+_HAVE_PYTEST_TIMEOUT = importlib.util.find_spec("pytest_timeout") is not None
+_CAN_SIGALRM = hasattr(signal, "SIGALRM")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    """Fallback hang guard for ``@pytest.mark.timeout(N)``.
+
+    The fault-injection tests guard against a hung future wedging the whole
+    suite.  When the real pytest-timeout plugin is installed it owns the
+    marker; in environments without it (this marker must not silently
+    no-op) a SIGALRM raises in the test thread after N seconds.  Main-
+    thread-only, POSIX-only — exactly the environments the suite runs in.
+    """
+    marker = item.get_closest_marker("timeout")
+    if marker is None or _HAVE_PYTEST_TIMEOUT or not _CAN_SIGALRM:
+        yield
+        return
+    seconds = float(marker.args[0]) if marker.args else 60.0
+
+    def _alarm(signum, frame):
+        raise TimeoutError(
+            f"test exceeded the {seconds:g}s timeout marker "
+            "(SIGALRM fallback; install pytest-timeout for richer output)")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, old)
 
 
 @pytest.fixture(scope="session")

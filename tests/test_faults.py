@@ -1,0 +1,533 @@
+"""Fault-tolerant serving plane: deterministic fault injection, typed
+errors, deadlines, degradation tiers, bisection quarantine, supervisor.
+
+The serving contract under test: every accepted query resolves with an
+Answer or a typed ServingError — zero hangs — and healthy queries keep
+their correct top-k even when their batch-mates are poisoned.  Faults are
+injected with the declarative FaultPlan from ``repro.serving.faults``, so
+every failure in this file is scheduled, not flaky.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.synth import CorpusSpec, make_corpus
+from repro.data.vectorizer import HashingVectorizer, VocabVectorizer
+from repro.launch.mesh import make_host_mesh
+from repro.serving import (
+    Answer,
+    AsyncQueryServer,
+    DeadlineExceeded,
+    DegradationController,
+    FaultPlan,
+    PoisonQuery,
+    QueryRejected,
+    QueryServer,
+    ServerClosed,
+    ServerConfig,
+    ServingError,
+    WorkerCrashed,
+)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(CorpusSpec(
+        n_docs=128, vocab_size=512, emb_dim=32, h_max=12, mean_h=8.0,
+        n_classes=4, seed=21))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+def _qs(corpus, n, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = np.asarray(corpus.docs.ids)
+    w = np.asarray(corpus.docs.weights)
+    picks = rng.integers(0, corpus.docs.n_docs, n)
+    return [(ids[i], w[i]) for i in picks], picks
+
+
+def _cfg(**kw):
+    base = dict(k=4, max_batch=8, h_max=12, max_wait_s=0.02)
+    base.update(kw)
+    return ServerConfig(**base)
+
+
+def _outcomes(futs, timeout=60):
+    out = []
+    for f in futs:
+        try:
+            out.append(f.result(timeout=timeout))
+        except ServingError as e:
+            out.append(e)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: one run with a worker crash + a NaN batch + a preprocess error
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(180)
+def test_combined_faultplan_every_future_resolves(corpus, mesh):
+    """Crash batch 0, NaN-poison batch 1 (transient), fail query #10's
+    preprocess — in ONE run.  Every future resolves typed, zero hangs, and
+    every query that got an Answer matches the fault-free oracle."""
+    stream, _ = _qs(corpus, 24, seed=1)
+    plan = FaultPlan(preprocess_errors=(10,), crash_batches=(0,),
+                     nan_batches={1: "all"})
+    with AsyncQueryServer(corpus.docs, corpus.emb, mesh, _cfg(),
+                          faults=plan) as server:
+        futs = [server.submit(ids, w) for ids, w in stream]
+        server.drain()
+        got = _outcomes(futs)
+
+    # Batch 0 (queries 0..7) died with the worker; the supervisor restarted.
+    assert all(isinstance(g, WorkerCrashed) for g in got[:8])
+    assert server.stats["worker_restarts"] == 1
+    # Query 10's preprocess failed: typed PoisonQuery, cause preserved.
+    assert isinstance(got[10], PoisonQuery)
+    assert isinstance(got[10].__cause__, RuntimeError)
+    # Everyone else answered: the NaN batch was transient, so the
+    # validation retry recovered ALL of its queries.
+    answered = [i for i, g in enumerate(got) if not isinstance(g, Exception)]
+    assert answered == [i for i in range(8, 24) if i != 10]
+    assert server.stats["validation_failures"] == 1
+    assert server.stats["poisoned_queries"] == 0
+
+    # Parity: answered queries match a fault-free run exactly.
+    sync = QueryServer(corpus.docs, corpus.emb, mesh, _cfg())
+    for i in answered:
+        sync.submit(*stream[i])
+    for g, (wi, wd) in zip((got[i] for i in answered), sync.flush()):
+        np.testing.assert_array_equal(g[0], wi)
+        np.testing.assert_allclose(g[1], wd)
+
+
+# ---------------------------------------------------------------------------
+# Validation + bisection quarantine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("whole_batch", [True, False])
+def test_sticky_poison_isolated_by_bisection(corpus, mesh, whole_batch):
+    """A sticky poison query (NaN on every serve, retries included) is
+    quarantined with PoisonQuery; its batch-mates get correct answers."""
+    ids = np.asarray(corpus.docs.ids)[:8].copy()
+    w = np.asarray(corpus.docs.weights)[:8].copy()
+    marker = 509
+    ids[3, 0] = marker
+    plan = FaultPlan(poison_word_id=marker, poison_whole_batch=whole_batch)
+    with AsyncQueryServer(corpus.docs, corpus.emb, mesh, _cfg(),
+                          faults=plan) as server:
+        futs = [server.submit(ids[i], w[i]) for i in range(8)]
+        server.drain()
+        got = _outcomes(futs)
+
+    assert isinstance(got[3], PoisonQuery)
+    assert server.stats["poisoned_queries"] == 1
+    healthy = [g for i, g in enumerate(got) if i != 3]
+    assert all(isinstance(g, Answer) for g in healthy)
+    # Whole-batch corruption needs the bisection ladder; single-row poison
+    # resolves in one retry.  Either way the cost is logarithmic, not a
+    # failed batch.
+    if whole_batch:
+        assert server.stats["validation_retries"] >= 3
+    else:
+        assert server.stats["validation_retries"] == 1
+
+    sync = QueryServer(corpus.docs, corpus.emb, mesh, _cfg())
+    for i in range(8):
+        if i != 3:
+            sync.submit(ids[i], w[i])
+    for g, (wi, wd) in zip(healthy, sync.flush()):
+        np.testing.assert_array_equal(g[0], wi)
+        np.testing.assert_allclose(g[1], wd)
+
+
+@pytest.mark.timeout(120)
+def test_transient_nan_batch_recovers_everyone(corpus, mesh):
+    """A transient device NaN (whole batch) costs ONE retry and zero
+    quarantines — parity with the fault-free answers."""
+    stream, _ = _qs(corpus, 8, seed=3)
+    plan = FaultPlan(nan_batches={0: "all"})
+    with AsyncQueryServer(corpus.docs, corpus.emb, mesh, _cfg(),
+                          faults=plan) as server:
+        futs = [server.submit(i, w) for i, w in stream]
+        server.drain()
+        got = _outcomes(futs)
+    assert all(isinstance(g, Answer) for g in got)
+    assert server.stats["validation_failures"] == 1
+    assert server.stats["validation_retries"] == 1
+    assert server.stats["poisoned_queries"] == 0
+
+    sync = QueryServer(corpus.docs, corpus.emb, mesh, _cfg())
+    for q in stream:
+        sync.submit(*q)
+    for g, (wi, wd) in zip(got, sync.flush()):
+        np.testing.assert_array_equal(g[0], wi)
+
+
+# ---------------------------------------------------------------------------
+# Worker supervisor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_supervisor_restarts_and_preserves_order(corpus, mesh):
+    """A worker crash fails only the in-flight batch (WorkerCrashed, cause
+    chained); queued queries are served after the restart, in submission
+    order, and the server stays healthy."""
+    stream, _ = _qs(corpus, 16, seed=5)
+    plan = FaultPlan(crash_batches=(0,))
+    done_order = []
+    with AsyncQueryServer(corpus.docs, corpus.emb, mesh,
+                          _cfg(pipeline_depth=1), faults=plan) as server:
+        futs = []
+        for i, (ids, w) in enumerate(stream):
+            f = server.submit(ids, w)
+            f.add_done_callback(lambda _f, i=i: done_order.append(i))
+            futs.append(f)
+        server.drain()
+        health = server.health()
+        got = _outcomes(futs)
+
+    assert all(isinstance(g, WorkerCrashed) for g in got[:8])
+    assert all(isinstance(g.__cause__, BaseException) for g in got[:8])
+    assert all(isinstance(g, Answer) for g in got[8:])
+    assert done_order == list(range(16))  # submission order preserved
+    assert health["worker_alive"] and not health["closed"]
+    assert health["worker_restarts"] == 1
+
+
+@pytest.mark.timeout(120)
+def test_supervisor_gives_up_past_max_restarts(corpus, mesh):
+    """Crashing every batch exhausts max_worker_restarts: the server closes
+    itself, fails the leftovers with ServerClosed, rejects new submits —
+    still zero hangs."""
+    stream, _ = _qs(corpus, 24, seed=7)
+    plan = FaultPlan(crash_batches=(0, 1, 2))
+    server = AsyncQueryServer(
+        corpus.docs, corpus.emb, mesh,
+        _cfg(pipeline_depth=1, max_worker_restarts=1), faults=plan)
+    try:
+        futs = [server.submit(ids, w) for ids, w in stream]
+        got = _outcomes(futs, timeout=60)
+        assert all(isinstance(g, (WorkerCrashed, ServerClosed)) for g in got)
+        assert sum(isinstance(g, WorkerCrashed) for g in got) == 16
+        assert sum(isinstance(g, ServerClosed) for g in got) == 8
+        with pytest.raises(ServerClosed):
+            server.submit(*stream[0])
+        assert not server.health()["worker_alive"]
+    finally:
+        server.close(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# Deadlines + admission control
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_deadline_admission_sweep_and_delivery(corpus, mesh):
+    stream, _ = _qs(corpus, 8, seed=9)
+    plan = FaultPlan(latency_s={0: 0.25})
+    with AsyncQueryServer(corpus.docs, corpus.emb, mesh,
+                          _cfg(max_wait_s=5.0), faults=plan) as server:
+        # Already-expired deadline: rejected synchronously at submit.
+        with pytest.raises(QueryRejected):
+            server.submit(*stream[0], deadline=-0.5)
+        # Injected host latency makes batch 0 slow; the 50 ms deadline
+        # passes while the answer is in flight -> DeadlineExceeded, counted.
+        assert server.stats["deadline_misses"] == 0
+        f_late = server.submit(*stream[0], deadline=0.05)
+        f_fine = server.submit(*stream[1])
+        server.flush()
+        server.drain()
+        with pytest.raises(DeadlineExceeded):
+            f_late.result(timeout=30)
+        assert isinstance(f_fine.result(timeout=30), Answer)
+        assert server.stats["deadline_misses"] == 1
+
+    # Sync server: expired entries are delivered positionally, batch-mates
+    # keep answers, and the flush never raises for a deadline.
+    sync = QueryServer(corpus.docs, corpus.emb, mesh, _cfg())
+    sync.submit(*stream[0])
+    sync.submit(*stream[1], deadline=1e-6)
+    time.sleep(0.01)
+    a0, a1 = sync.flush()
+    assert isinstance(a0, Answer)
+    assert isinstance(a1, DeadlineExceeded)
+    assert sync.stats["deadline_misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Poison screening (satellite: vectorizer guard)
+# ---------------------------------------------------------------------------
+
+def test_zero_mass_submit_rejected(corpus, mesh):
+    cfg = _cfg()
+    sync = QueryServer(corpus.docs, corpus.emb, mesh, cfg)
+    with pytest.raises(PoisonQuery):
+        sync.submit(np.zeros(12, np.int32), np.zeros(12, np.float32))
+    with pytest.raises(PoisonQuery):
+        sync.submit(np.zeros(12, np.int32), np.full(12, np.nan, np.float32))
+    with AsyncQueryServer(corpus.docs, corpus.emb, mesh, cfg) as server:
+        with pytest.raises(PoisonQuery):
+            server.submit(np.zeros(12, np.int32), np.zeros(12, np.float32))
+        assert server.stats["queries"] == 0
+
+
+def test_vectorizer_query_histogram_rejects_oov_only():
+    texts = ["gpu acceleration of word movers distance",
+             "linear complexity relaxed transport kernels"]
+    vv = VocabVectorizer(h_max=8).fit(texts)
+    ids, w = vv.query_histogram("relaxed transport")
+    assert (w > 0).sum() == 2
+    with pytest.raises(PoisonQuery):
+        vv.query_histogram("the and of")          # stop-words only
+    with pytest.raises(PoisonQuery):
+        vv.query_histogram("zebra quagga")        # OOV only
+    hv = HashingVectorizer(n_features=1 << 12, h_max=8)
+    ids, w = hv.query_histogram("relaxed transport")
+    assert (w > 0).any()
+    with pytest.raises(PoisonQuery):
+        hv.query_histogram("the and of")
+
+
+@pytest.mark.timeout(120)
+def test_poison_preprocess_fails_only_its_future(corpus, mesh):
+    """A preprocess hook raising PoisonQuery in the async host stage fails
+    that one future; batch-mates are served."""
+    ids_np = np.asarray(corpus.docs.ids)
+    w_np = np.asarray(corpus.docs.weights)
+
+    def vectorize(doc_id):
+        if doc_id < 0:
+            raise PoisonQuery("unserveable payload")
+        return ids_np[doc_id], w_np[doc_id]
+
+    with AsyncQueryServer(corpus.docs, corpus.emb, mesh, _cfg(),
+                          preprocess=vectorize) as server:
+        futs = [server.submit(int(p)) for p in (0, 1, -1, 2)]
+        server.drain()
+        got = _outcomes(futs)
+    assert isinstance(got[2], PoisonQuery)
+    assert all(isinstance(g, Answer) for i, g in enumerate(got) if i != 2)
+    assert server.stats["queries"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Degradation controller + tier stamping
+# ---------------------------------------------------------------------------
+
+def test_degradation_controller_transitions():
+    c = DegradationController(shed_queue_depth=8, recover_after=2,
+                              fail_streak_down=2)
+    assert c.observe_dispatch(0) == 0
+    assert c.observe_dispatch(8) == 1          # shed on queue depth
+    assert c.observe_dispatch(9) == 2          # still over -> deeper
+    assert c.observe_dispatch(10) == 2         # clamped at max_tier
+    assert c.observe_dispatch(4) == 2          # healthy #1 (<= shed/2)
+    assert c.observe_dispatch(0) == 1          # healthy #2 -> step up
+    c.note_stage_failure()                     # streak 1: no change
+    assert c.tier == 1
+    c.note_stage_failure()                     # streak 2 -> down
+    assert c.tier == 2
+    c.note_success()
+    assert c.observe_dispatch(0) == 2
+    assert c.observe_dispatch(0) == 1
+    c.note_deadline_miss()
+    assert c.tier == 2
+    c.note_crash()
+    assert c.tier == 2                         # clamped
+    assert [t["tier"] for t in c.transitions] == [1, 2, 1, 2, 1, 2]
+
+
+@pytest.mark.timeout(180)
+def test_degradation_sheds_and_recovers_under_flood(corpus, mesh):
+    """Flooding the queue forces tier > 0 batches (stamped on answers);
+    pressure clearing steps back toward full quality."""
+    stream, _ = _qs(corpus, 48, seed=13)
+    cfg = _cfg(max_batch=4, max_wait_s=0.001, degradation=True,
+               shed_queue_depth=8, recover_after=2, queue_capacity=64)
+    with AsyncQueryServer(corpus.docs, corpus.emb, mesh, cfg) as server:
+        futs = [server.submit(ids, w) for ids, w in stream]
+        server.drain()
+        tiers = [f.result(timeout=30).tier for f in futs]
+    assert any(t > 0 for t in tiers), "flood never engaged degradation"
+    assert server.stats["degraded_batches"] >= 1
+    assert sum(server.stats["tier_counts"]) == server.stats["batches"]
+    trans = server.stats["tier_transitions"]
+    assert trans and trans[0]["tier"] == 1
+    downs = [t for t in trans if "queue depth" in t["reason"]]
+    assert downs, "no queue-pressure transition recorded"
+    # Answers at every tier still contain plausible neighbors (k of them).
+    assert all(len(f.result()[0]) == cfg.k for f in futs)
+
+
+@pytest.mark.timeout(120)
+def test_tier_and_budget_change_in_same_flush_single_rebuild(corpus, mesh):
+    """Satellite: when a degradation tier change and an adaptive-budget
+    change land in the same flush, the serve step is rebuilt exactly ONCE
+    (at collect time, for the budget) — tier switches never rebuild."""
+    ids_np = np.asarray(corpus.docs.ids)
+    w_np = np.asarray(corpus.docs.weights)
+    cfg = _cfg(max_batch=4, max_wait_s=0.01, rerank_wmd=True,
+               adaptive_budget=True, degradation=True, shed_queue_depth=32,
+               wmd_kw=dict(eps=0.05, eps_scaling=2, max_iters=40))
+    server = AsyncQueryServer(corpus.docs, corpus.emb, mesh, cfg)
+    try:
+        builds = []
+        orig_build = server._core._build_serve
+        server._core._build_serve = lambda b: (builds.append(b),
+                                               orig_build(b))[1]
+        # Force a deterministic budget change on the first feedback.
+        def force_update(flags):
+            server.budget.budget = 16
+            return 16
+        server.budget.update = force_update
+
+        gate = threading.Event()
+        inner = server._serve
+
+        def gated(queries, **kw):
+            gate.wait(timeout=30)
+            return inner(queries, **kw)
+
+        server._serve = gated
+        trace = []
+        server._core.trace = trace
+
+        # Batch A dispatches at tier 0 (tier decided before the gate) and
+        # blocks in the gated serve.
+        futs = [server.submit(ids_np[i], w_np[i]) for i in range(4)]
+        deadline = time.monotonic() + 30
+        while ("dispatch", 0) not in trace:
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        # Tier change lands while batch A is still in this flush window.
+        server._core.controller.note_crash()
+        futs += [server.submit(ids_np[i], w_np[i]) for i in range(4, 8)]
+        gate.set()
+        server.drain()
+        answers = [f.result(timeout=60) for f in futs]
+    finally:
+        gate.set()
+        server.close(timeout=30)
+
+    assert [a.tier for a in answers] == [0] * 4 + [1] * 4
+    # Exactly one rebuild: the budget change at batch A's collect.  The
+    # tier-1 dispatch of batch B reused the SAME compiled step.
+    assert server.stats["budget_rebuilds"] == 1
+    assert builds == [16]
+    assert server.stats["budget_trajectory"] == [8, 16]
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle (satellites: idempotent close, serve_stream drop counter)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(120)
+def test_close_idempotent_and_failfast_when_worker_wedged(corpus, mesh):
+    """close() with a wedged worker: bounded by timeout, fails ALL
+    unresolved futures with ServerClosed (in-flight and queued), is
+    idempotent, and never deadlocks — even racing a blocked submit."""
+    stream, _ = _qs(corpus, 8, seed=15)
+    server = AsyncQueryServer(corpus.docs, corpus.emb, mesh,
+                              _cfg(max_batch=4, max_wait_s=0.001))
+    gate = threading.Event()
+    inner = server._serve
+
+    def gated(queries, **kw):
+        gate.wait(timeout=60)
+        return inner(queries, **kw)
+
+    server._serve = gated
+    trace = []
+    server._core.trace = trace
+    try:
+        futs = [server.submit(ids, w) for ids, w in stream]
+        deadline = time.monotonic() + 30
+        while ("dispatch", 0) not in trace:  # batch 0 wedged in the gate
+            assert time.monotonic() < deadline
+            time.sleep(0.005)
+        t0 = time.monotonic()
+        server.close(timeout=0.3)
+        assert time.monotonic() - t0 < 10  # bounded, not a deadlock
+        for f in futs:
+            with pytest.raises(ServerClosed):
+                f.result(timeout=10)
+        server.close(timeout=0.1)  # second close: no-op, no deadlock
+        with pytest.raises(RuntimeError, match="closed"):
+            server.submit(*stream[0])
+    finally:
+        gate.set()
+    server.close(timeout=30)  # worker unwedged: third close joins cleanly
+    assert not server._worker.is_alive()
+
+
+@pytest.mark.timeout(120)
+def test_serve_stream_records_dropped_queries(corpus, mesh):
+    """A dying producer: accepted queries flush (drop count 0); if the
+    post-mortem flush ALSO fails, the dropped count is visible in stats."""
+    stream, _ = _qs(corpus, 6, seed=17)
+
+    def dying_producer():
+        yield from stream[:3]
+        raise IOError("producer died")
+
+    sync = QueryServer(corpus.docs, corpus.emb, mesh, _cfg(max_wait_s=60))
+    got = []
+    with pytest.raises(IOError):
+        for a in sync.serve_stream(dying_producer()):
+            got.append(a)
+    assert len(got) == 3  # accepted work still answered
+    assert sync.stats["stream_failures"] == 1
+    assert sync.stats["dropped_queries"] == 0
+
+    # Now the flush itself fails too (serve step broken): the accepted-but-
+    # never-answered queries are counted as dropped.
+    sync2 = QueryServer(corpus.docs, corpus.emb, mesh, _cfg(max_wait_s=60))
+
+    def broken(queries, **kw):
+        raise RuntimeError("device lost")
+
+    sync2._serve = broken
+    with pytest.raises(RuntimeError, match="device lost"):
+        list(sync2.serve_stream(dying_producer()))
+    assert sync2.stats["stream_failures"] == 1
+    assert sync2.stats["dropped_queries"] == 3
+
+
+@pytest.mark.timeout(120)
+def test_health_snapshot_shape(corpus, mesh):
+    with AsyncQueryServer(corpus.docs, corpus.emb, mesh, _cfg()) as server:
+        h = server.health()
+        assert h["worker_alive"] and not h["closed"]
+        assert h["queue_depth"] == 0 and h["in_flight"] == 0
+        assert h["tier"] == 0 and h["worker_restarts"] == 0
+        stream, _ = _qs(corpus, 4, seed=19)
+        futs = [server.submit(*q) for q in stream]
+        server.drain()
+        for f in futs:
+            f.result(timeout=30)
+        h = server.health()
+        assert h["queries"] == 4 and h["unanswered"] == 0
+    assert not server.health()["worker_alive"]
+
+
+def test_answer_is_a_tuple_with_tier(corpus, mesh):
+    sync = QueryServer(corpus.docs, corpus.emb, mesh, _cfg())
+    stream, _ = _qs(corpus, 2, seed=23)
+    for q in stream:
+        sync.submit(*q)
+    answers = sync.flush()
+    for a in answers:
+        i, d = a            # 2-tuple unpack (back-compat)
+        assert i.shape == d.shape == (4,)
+        assert a.tier == 0  # full-quality stamp
+        assert isinstance(a, tuple)
