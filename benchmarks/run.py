@@ -46,6 +46,7 @@ def main() -> None:
         fig12_13_runtime,
         fig14_precision,
         kernels_bench,
+        lifecycle_bench,
         pruning_bench,
         robustness_bench,
         scaling_analysis,
@@ -63,6 +64,7 @@ def main() -> None:
         "kernels_bench": kernels_bench,
         "scaling_analysis": scaling_analysis,
         "serving_bench": serving_bench,
+        "lifecycle_bench": lifecycle_bench,
         "robustness_bench": robustness_bench,
         "workloads_bench": workloads_bench,
     }

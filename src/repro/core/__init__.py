@@ -2,7 +2,10 @@
 
 from repro.core.distances import dists, sq_dists
 from repro.core.lc_rwmd import (
+    EngineSegment,
     LCRWMDEngine,
+    SegmentedEngine,
+    SegmentTensors,
     lc_rwmd_one_sided,
     lc_rwmd_streaming,
     lc_rwmd_symmetric,
@@ -51,7 +54,8 @@ from repro.core.wmd import (
 
 __all__ = [
     "dists", "sq_dists",
-    "LCRWMDEngine", "lc_rwmd_one_sided", "lc_rwmd_streaming",
+    "EngineSegment", "LCRWMDEngine", "SegmentTensors", "SegmentedEngine",
+    "lc_rwmd_one_sided", "lc_rwmd_streaming",
     "lc_rwmd_symmetric", "phase1_z", "phase1_z_from_t", "phase2_spmm",
     "restrict_vocab",
     "AdaptiveRefineBudget", "PrunedWMDResult", "knn_classify",

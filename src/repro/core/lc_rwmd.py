@@ -20,15 +20,46 @@ oracle the kernels are tested against.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.distances import safe_sqrt, sq_dists
 from repro.data.docs import DocSet
 
 Array = jax.Array
 _INF = jnp.float32(jnp.inf)
+
+
+class SegmentTensors(NamedTuple):
+    """Device tensors of one immutable engine segment (a jit-able pytree).
+
+    Both :class:`LCRWMDEngine` (one implicit segment) and
+    :class:`EngineSegment` reduce to this record, and the module-level jitted
+    segment kernels take it as a *traced* argument — so every segment with
+    the same shapes shares ONE compiled trace (appending a delta segment of a
+    previously seen shape never re-traces anything).
+    """
+
+    emb_r: Array     # (v_e, m) restricted embedding rows (phase-1 input)
+    r_ids: Array     # (n_rows, h1) restricted int32 word ids (ELL)
+    r_w: Array       # (n_rows, h1) f32 weights (0 at padding rows/slots)
+    t_r: Array       # (n_rows*h1, m) pre-gathered FULL-table word embeddings
+    valid_r: Array   # (n_rows*h1,) bool slot validity
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held by this segment's resident tensors."""
+        return int(sum(x.size * x.dtype.itemsize for x in self))
+
+
+def _pad_rows(x: Array, n_pad: int) -> Array:
+    pad = n_pad - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
 
 
 # ---------------------------------------------------------------------------
@@ -262,6 +293,12 @@ class LCRWMDEngine:
         n, h1 = resident.ids.shape
         self._t_r = self.emb_full[resident.ids.reshape(-1)]  # (n*h1, m)
         self._valid_r = (resident.weights > 0).reshape(-1)   # (n*h1,)
+        # All-rows-live mask: the monolithic engine routes its non-kernel
+        # query paths through the SAME module-level segment kernels the
+        # SegmentedEngine uses (tensors passed as traced arguments, never
+        # closed over as jaxpr constants — constant folding is what made
+        # bound-method jits drift from the eager oracle by low-order bits).
+        self._row_valid_all = jnp.ones(n, dtype=bool)
 
         if jit_methods:
             # ``donate_queries`` lets XLA reuse the per-call query buffers on
@@ -319,10 +356,21 @@ class LCRWMDEngine:
         )
         return phase2_spmm(self.resident_restricted, z1)
 
-    def _one_sided_impl(self, q_ids: Array, q_w: Array) -> Array:
-        b = q_ids.shape[0]
-        t_q = self.emb_full[q_ids.reshape(-1)]
-        return self._d1_from_t(t_q, (q_w > 0).reshape(-1), b)
+    def _gather_flat(self, q_ids: Array) -> Array:
+        """(B*h, m) EAGER query gather from the full table.
+
+        Kept OUTSIDE the jitted impls on purpose: fusing the gather into the
+        phase-1 distance matmul lets XLA pick a different contraction
+        schedule per program, which perturbs low-order bits (amplified near
+        zero by the sqrt).  With the gather hoisted, every engine path —
+        monolithic or segmented — feeds bit-identical pre-gathered targets
+        through shape-stable kernels, which is what makes segmented-vs-
+        monolithic parity exact.
+        """
+        return self.emb_full[jnp.asarray(q_ids).reshape(-1)]
+
+    def _one_sided_impl(self, t_q: Array, q_w: Array) -> Array:
+        return self._d1_from_t(t_q, (q_w > 0).reshape(-1), q_w.shape[0])
 
     def _symmetric_from_t(self, t_q: Array, q_w: Array, b: int) -> Array:
         """Symmetric bound from pre-gathered (B*h2, m) query targets."""
@@ -340,11 +388,9 @@ class LCRWMDEngine:
         d2 = jnp.einsum("bh,bhn->bn", q_w, z2.reshape(b, h2, n))
         return jnp.maximum(d1, d2.T)
 
-    def _symmetric_impl(self, q_ids: Array, q_w: Array) -> Array:
-        b = q_ids.shape[0]
-        # ONE query gather feeds both directions.
-        t_q = self.emb_full[q_ids.reshape(-1)]           # (B*h2, m)
-        return self._symmetric_from_t(t_q, q_w, b)
+    def _symmetric_impl(self, t_q: Array, q_w: Array) -> Array:
+        # ONE (eager, pre-hoisted) query gather feeds both directions.
+        return self._symmetric_from_t(t_q, q_w, q_w.shape[0])
 
     def _resident_query_tensors(self, idx: Array):
         """Query-side tensors for resident docs ``idx`` (B,), sliced from the
@@ -379,30 +425,30 @@ class LCRWMDEngine:
         )
         return phase2_spmm(sub, z)
 
-    def _pad_rows(self, x: Array, n_pad: int) -> Array:
-        pad = n_pad - x.shape[0]
-        if pad == 0:
-            return x
-        return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    def _segment_tensors(self) -> "SegmentTensors":
+        """This engine's precomputed state as one :class:`SegmentTensors`."""
+        return SegmentTensors(
+            emb_r=self.emb_restricted,
+            r_ids=self.resident_restricted.ids,
+            r_w=self.resident_restricted.weights,
+            t_r=self._t_r, valid_r=self._valid_r,
+        )
 
-    def _topk_stream_impl(self, k: int, symmetric: bool, q_ids: Array,
-                          q_w: Array):
+    def _topk_stream_impl(self, k: int, symmetric: bool, t_q: Array,
+                          q_w: Array, row_valid: Array | None = None):
         """Streaming top-k: phase-2 row blocks fold into a (B, k) carry.
 
-        Phase 1 runs ONCE (kernel or jnp) at (v_e, B); resident rows are
-        then scanned in ``row_block`` slabs — the one-sided term via the
-        blocked ELL SpMM, the swapped direction (symmetric=True) via the
-        engine's pre-gathered resident targets restricted to the slab — and
-        every slab folds into a :class:`~repro.core.topk.StreamingTopK`
-        carry.  No (n, B) (nor (B, n)) intermediate exists; exactly equal to
-        ``topk_smallest_cols`` of the materialized matrix, ties included.
+        Phase 1 runs ONCE (kernel or jnp) at (v_e, B); the shared
+        :func:`_topk_stream_from_z` fold then scans resident rows in
+        ``row_block`` slabs — the one-sided term via the blocked ELL SpMM,
+        the swapped direction (symmetric=True) via the engine's pre-gathered
+        resident targets restricted to the slab — and every slab folds into
+        a :class:`~repro.core.topk.StreamingTopK` carry.  No (n, B) (nor
+        (B, n)) intermediate exists; exactly equal to ``topk_smallest_cols``
+        of the materialized matrix, ties included.  ``row_valid`` (traced)
+        masks tombstoned rows without recompiling.
         """
-        from repro.core.topk import StreamingTopK
-
-        b, h2 = q_ids.shape
-        n, h1 = self.resident.ids.shape
-        m = self.emb_full.shape[1]
-        t_q = self.emb_full[q_ids.reshape(-1)]       # (B*h2, m)
+        b, h2 = q_w.shape
         valid_q = (q_w > 0).reshape(-1)
         if self.use_kernel:
             from repro.kernels import ops as kops
@@ -417,46 +463,11 @@ class LCRWMDEngine:
                 self.emb_restricted, t_q, valid_q, b,
                 bf16_matmul=self.bf16_matmul, vocab_chunk=self.vocab_chunk,
             )
-
-        kk = min(k, n)
-        if not symmetric:
-            # The one-sided fold IS the shared phase-2 streaming reduction.
-            from repro.core.topk import TopK
-            from repro.kernels.ops import streaming_phase2_topk
-
-            d, i = streaming_phase2_topk(
-                self.resident_restricted.ids,
-                self.resident_restricted.weights, z1, kk,
-                row_block=self.row_block)
-            return TopK(d, i)
-
-        r = self.row_block
-        nb = -(-n // r)
-        n_pad = nb * r
-        ids_b = self._pad_rows(self.resident_restricted.ids, n_pad)
-        w_b = self._pad_rows(self.resident_restricted.weights, n_pad)
-        t_r_b = self._pad_rows(self._t_r.reshape(n, h1, m), n_pad)
-        v_r_b = self._pad_rows(self._valid_r.reshape(n, h1), n_pad)
-        xs = [ids_b.reshape(nb, r, h1), w_b.reshape(nb, r, h1),
-              jnp.arange(nb, dtype=jnp.int32) * r,
-              t_r_b.reshape(nb, r * h1, m), v_r_b.reshape(nb, r * h1)]
-        stk = StreamingTopK(kk)
-
-        def body(carry, xs):
-            ids_blk, w_blk, lo, tr_blk, vr_blk = xs
-            d1 = phase2_spmm(DocSet(ids=ids_blk, weights=w_blk), z1)
-            sq = sq_dists(t_q, tr_blk, bf16_matmul=self.bf16_matmul)
-            sq = jnp.where(vr_blk[None, :], sq, _INF)
-            z2 = safe_sqrt(jnp.min(sq.reshape(b * h2, r, h1), axis=2))
-            d2 = jnp.einsum("bh,bhr->br", q_w, z2.reshape(b, h2, r))
-            d_blk = jnp.maximum(d1.T, d2)                       # (B, R)
-            row = lo + jnp.arange(r, dtype=jnp.int32)
-            d_blk = jnp.where((row < n)[None, :], d_blk, _INF)
-            idx = jnp.broadcast_to(row[None, :], (b, r))
-            return stk.update(carry, d_blk, idx), None
-
-        carry, _ = jax.lax.scan(body, stk.init(b), xs)
-        return carry
+        return _topk_stream_from_z(
+            self._segment_tensors(), z1, t_q, q_w, row_valid,
+            k=k, symmetric=symmetric, row_block=self.row_block,
+            bf16_matmul=self.bf16_matmul,
+        )
 
     def _rerank_impl(
         self, k: int, sink_items: tuple, q_ids: Array, q_w: Array,
@@ -479,20 +490,42 @@ class LCRWMDEngine:
         return topk_lib.topk_from_candidates(vals, cand_idx, k)
 
     # -- public entry points ----------------------------------------------
+    def _dense_dispatch(self, queries: DocSet, symmetric: bool) -> Array:
+        if self.use_kernel:
+            fn = self._symmetric if symmetric else self._one_sided
+            return fn(self._gather_flat(queries.ids), queries.weights)
+        return _segment_dense(
+            self._segment_tensors(), self._gather_flat(queries.ids),
+            queries.weights, self._row_valid_all,
+            symmetric=symmetric, bf16_matmul=self.bf16_matmul,
+            vocab_chunk=self.vocab_chunk,
+        )
+
+    def _topk_dispatch(self, queries: DocSet, k: int, symmetric: bool):
+        t_q = self._gather_flat(queries.ids)
+        if self.use_kernel:
+            return self._topk_stream(k, symmetric, t_q, queries.weights)
+        return _segment_topk(
+            self._segment_tensors(), t_q, queries.weights,
+            self._row_valid_all, k=k, symmetric=symmetric,
+            row_block=self.row_block, bf16_matmul=self.bf16_matmul,
+            vocab_chunk=self.vocab_chunk,
+        )
+
     def one_sided(self, queries: DocSet) -> Array:
         """D1 (n, B): cost of moving each resident doc into each query."""
-        return self._one_sided(queries.ids, queries.weights)
+        return self._dense_dispatch(queries, symmetric=False)
 
     def symmetric(self, queries: DocSet) -> Array:
         """Tight symmetric bound max(D1, D2ᵀ), shape (n, B)."""
-        return self._symmetric(queries.ids, queries.weights)
+        return self._dense_dispatch(queries, symmetric=True)
 
     def topk(self, queries: DocSet, k: int):
         """Per-query top-k smallest symmetric LC-RWMD: TopK (B, k).
 
         Streaming since the top-k unification: alias of
         :meth:`symmetric_topk_streaming` (exact results, O(k·B) peak)."""
-        return self._topk_stream(k, True, queries.ids, queries.weights)
+        return self._topk_dispatch(queries, k, symmetric=True)
 
     def topk_streaming(self, queries: DocSet, k: int):
         """Per-query top-k smallest ONE-SIDED LC-RWMD (D1), streamed.
@@ -509,7 +542,7 @@ class LCRWMDEngine:
         materializes (resident rows fold into the carry in ``row_block``
         slabs — the ctor knob); exactly ``lax.top_k`` of
         :meth:`one_sided`'s transpose, ties included."""
-        return self._topk_stream(k, False, queries.ids, queries.weights)
+        return self._topk_dispatch(queries, k, symmetric=False)
 
     def symmetric_topk_streaming(self, queries: DocSet, k: int):
         """Per-query top-k smallest SYMMETRIC bound max(D1, D2ᵀ), streamed.
@@ -518,7 +551,7 @@ class LCRWMDEngine:
         jit-static, result (B, k), O(k·B + row_block·B) peak).  The pruning
         cascade's stage-1 candidate selector: both directions are evaluated
         per row slab and folded into the (B, k) carry."""
-        return self._topk_stream(k, True, queries.ids, queries.weights)
+        return self._topk_dispatch(queries, k, symmetric=True)
 
     # -- corpus-analytics (query-tile) entry points ------------------------
     #
@@ -606,8 +639,6 @@ def restrict_vocab(resident: DocSet, emb: Array) -> tuple[DocSet, Array, Array]:
     Returns (remapped resident DocSet, restricted emb (v_e, m), old→new map).
     Host-side preprocessing (jit-incompatible shapes).
     """
-    import numpy as np
-
     ids = np.asarray(resident.ids)
     w = np.asarray(resident.weights)
     used = np.unique(ids[w > 0])
@@ -616,3 +647,577 @@ def restrict_vocab(resident: DocSet, emb: Array) -> tuple[DocSet, Array, Array]:
     new_ids = np.where(w > 0, old_to_new[ids], 0)
     sub = DocSet(ids=jnp.asarray(new_ids), weights=resident.weights)
     return sub, jnp.asarray(np.asarray(emb)[used]), jnp.asarray(old_to_new)
+
+
+# ---------------------------------------------------------------------------
+# Segmented corpora — incremental ingest / delete without full rebuild
+# ---------------------------------------------------------------------------
+def _topk_stream_from_z(
+    seg: SegmentTensors,
+    z1: Array,          # (v_e, B) phase-1 output over seg.emb_r
+    t_q: Array,         # (B*h2, m) pre-gathered query targets
+    q_w: Array,         # (B, h2)
+    row_valid: Array | None,   # (n_rows,) bool live mask, or None
+    *,
+    k: int,
+    symmetric: bool,
+    row_block: int,
+    bf16_matmul: bool,
+):
+    """The streaming top-k fold over ONE segment's rows (post-phase-1).
+
+    Shared verbatim between :class:`LCRWMDEngine` (monolithic) and the
+    per-segment kernels, which is what makes the segmented-vs-monolithic
+    parity *bit*-exact: the same fold, the same slab schedule, the same
+    lexicographic (distance, doc id) tie order.  ``row_valid=None`` and an
+    all-True mask are exactly equal (a ``where`` with a true mask is the
+    identity).
+    """
+    from repro.core.topk import StreamingTopK, TopK
+
+    b, h2 = q_w.shape
+    n, h1 = seg.r_ids.shape
+    m = seg.t_r.shape[-1]
+    kk = min(k, n)
+    if not symmetric:
+        # The one-sided fold IS the shared phase-2 streaming reduction.
+        from repro.kernels.ops import streaming_phase2_topk
+
+        d, i = streaming_phase2_topk(
+            seg.r_ids, seg.r_w, z1, kk, row_block=row_block,
+            row_valid=row_valid)
+        return TopK(d, i)
+
+    r = min(row_block, n)
+    nb = -(-n // r)
+    n_pad = nb * r
+    ids_b = _pad_rows(seg.r_ids, n_pad)
+    w_b = _pad_rows(seg.r_w, n_pad)
+    t_r_b = _pad_rows(seg.t_r.reshape(n, h1, m), n_pad)
+    v_r_b = _pad_rows(seg.valid_r.reshape(n, h1), n_pad)
+    live_b = (None if row_valid is None
+              else _pad_rows(row_valid, n_pad).reshape(nb, r))
+    xs = [ids_b.reshape(nb, r, h1), w_b.reshape(nb, r, h1),
+          jnp.arange(nb, dtype=jnp.int32) * r,
+          t_r_b.reshape(nb, r * h1, m), v_r_b.reshape(nb, r * h1), live_b]
+    stk = StreamingTopK(kk)
+
+    def body(carry, xs):
+        ids_blk, w_blk, lo, tr_blk, vr_blk, live_blk = xs
+        d1 = phase2_spmm(DocSet(ids=ids_blk, weights=w_blk), z1)
+        sq = sq_dists(t_q, tr_blk, bf16_matmul=bf16_matmul)
+        sq = jnp.where(vr_blk[None, :], sq, _INF)
+        z2 = safe_sqrt(jnp.min(sq.reshape(b * h2, r, h1), axis=2))
+        d2 = jnp.einsum("bh,bhr->br", q_w, z2.reshape(b, h2, r))
+        d_blk = jnp.maximum(d1.T, d2)                       # (B, R)
+        row = lo + jnp.arange(r, dtype=jnp.int32)
+        d_blk = jnp.where((row < n)[None, :], d_blk, _INF)
+        if live_blk is not None:
+            d_blk = jnp.where(live_blk[None, :], d_blk, _INF)
+        idx = jnp.broadcast_to(row[None, :], (b, r))
+        return stk.update(carry, d_blk, idx), None
+
+    carry, _ = jax.lax.scan(body, stk.init(b), xs)
+    return carry
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "symmetric", "row_block", "bf16_matmul",
+                     "vocab_chunk"),
+)
+def _segment_topk(
+    seg: SegmentTensors, t_q: Array, q_w: Array, row_valid: Array,
+    *, k: int, symmetric: bool, row_block: int, bf16_matmul: bool,
+    vocab_chunk: int | None,
+):
+    """Streaming top-k of ONE segment: TopK (B, min(k, n_rows)), local ids.
+
+    Module-level jit over a :class:`SegmentTensors` pytree: every segment of
+    the same shape — across appends, corpora, and engines — shares one trace.
+    """
+    b = q_w.shape[0]
+    z1 = phase1_z_from_t(
+        seg.emb_r, t_q, (q_w > 0).reshape(-1), b,
+        bf16_matmul=bf16_matmul, vocab_chunk=vocab_chunk,
+    )
+    return _topk_stream_from_z(
+        seg, z1, t_q, q_w, row_valid,
+        k=k, symmetric=symmetric, row_block=row_block,
+        bf16_matmul=bf16_matmul,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("symmetric", "bf16_matmul", "vocab_chunk"),
+)
+def _segment_dense(
+    seg: SegmentTensors, t_q: Array, q_w: Array, row_valid: Array,
+    *, symmetric: bool, bf16_matmul: bool, vocab_chunk: int | None,
+):
+    """Materialized one-sided / symmetric distances of ONE segment: (n_rows, B).
+
+    Tombstoned (and padding) rows come out +inf.
+    """
+    b, h2 = q_w.shape
+    n, h1 = seg.r_ids.shape
+    valid_q = (q_w > 0).reshape(-1)
+    z1 = phase1_z_from_t(
+        seg.emb_r, t_q, valid_q, b,
+        bf16_matmul=bf16_matmul, vocab_chunk=vocab_chunk,
+    )
+    d = phase2_spmm(DocSet(ids=seg.r_ids, weights=seg.r_w), z1)
+    if symmetric:
+        sq = sq_dists(t_q, seg.t_r, bf16_matmul=bf16_matmul)
+        sq = jnp.where(seg.valid_r[None, :], sq, _INF)
+        z2 = safe_sqrt(jnp.min(sq.reshape(b * h2, n, h1), axis=2))
+        d2 = jnp.einsum("bh,bhn->bn", q_w, z2.reshape(b, h2, n))
+        d = jnp.maximum(d, d2.T)
+    return jnp.where(row_valid[:, None], d, _INF)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("b", "bf16_matmul", "vocab_chunk"),
+)
+def _segment_phase1(
+    emb_r: Array, t_q: Array, valid_q: Array,
+    *, b: int, bf16_matmul: bool, vocab_chunk: int | None,
+) -> Array:
+    return phase1_z_from_t(
+        emb_r, t_q, valid_q, b,
+        bf16_matmul=bf16_matmul, vocab_chunk=vocab_chunk,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _segmented_rerank(
+    k: int, sink_items: tuple, use_kernel: bool, bf16_matmul: bool,
+    t1: Array, w1: Array, t_q: Array, q_w: Array,
+    cand_idx: Array, cand_valid: Array,
+):
+    """Sinkhorn re-rank over pre-gathered candidates with a validity mask.
+
+    Invalid candidates (empty top-k slots, tombstoned docs) get +inf WMD so
+    they can never displace a live candidate.  With an all-True mask this is
+    value-identical to :meth:`LCRWMDEngine.rerank_topk`.
+    """
+    from repro.core import topk as topk_lib
+    from repro.core.wmd import wmd_candidate_values
+
+    vals = wmd_candidate_values(
+        t1, w1, t_q, q_w,
+        use_kernel=use_kernel, bf16_matmul=bf16_matmul, **dict(sink_items),
+    )
+    vals = jnp.where(cand_valid.reshape(vals.shape), vals, _INF)
+    return topk_lib.topk_from_candidates(vals, cand_idx, k)
+
+
+class EngineSegment:
+    """One immutable unit of a :class:`SegmentedEngine`.
+
+    Owns a contiguous global doc-id range ``[offset, offset + n_real)`` and
+    the same precomputed state an :class:`LCRWMDEngine` would build for it:
+    the per-segment ``v_e`` vocab restriction, the remapped ELL resident
+    matrix, and the pre-gathered full-table resident word embeddings.  Rows
+    may be padded to ``n_pad`` (zero-weight, non-live) and the restricted
+    vocab to a ``vocab_pad`` multiple so repeated delta shapes hit the same
+    jit trace.
+    """
+
+    def __init__(
+        self,
+        docs: DocSet,
+        emb_full: Array,
+        *,
+        offset: int,
+        n_pad: int | None = None,
+        vocab_pad: int | None = None,
+    ):
+        n_real = docs.n_docs
+        if n_pad is not None and n_pad > n_real:
+            docs = DocSet(
+                ids=_pad_rows(docs.ids, n_pad),
+                weights=_pad_rows(docs.weights, n_pad),
+            )
+        self.docs = docs
+        self.offset = int(offset)
+        self.n_real = int(n_real)
+        sub, emb_r, old_to_new = restrict_vocab(docs, emb_full)
+        if vocab_pad:
+            pad = (-emb_r.shape[0]) % int(vocab_pad)
+            if pad:
+                emb_r = jnp.pad(emb_r, ((0, pad), (0, 0)))
+        self.old_to_new = old_to_new
+        self.tensors = SegmentTensors(
+            emb_r=emb_r,
+            r_ids=sub.ids,
+            r_w=sub.weights,
+            t_r=emb_full[docs.ids.reshape(-1)],
+            valid_r=(docs.weights > 0).reshape(-1),
+        )
+
+    @property
+    def n_rows(self) -> int:
+        """Row count including trace-reuse padding (≥ ``n_real``)."""
+        return self.docs.n_docs
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held by this segment (the eviction accounting unit)."""
+        return self.tensors.nbytes
+
+
+class SegmentedEngine:
+    """LC-RWMD engine over a base + delta segment list: churn without rebuild.
+
+    Same query surface as :class:`LCRWMDEngine` (``one_sided`` / ``symmetric``
+    / streaming ``topk*`` / ``rerank_topk`` / the corpus-analytics tile entry
+    points), plus a corpus lifecycle:
+
+      * :meth:`append` builds ONE small :class:`EngineSegment` over the new
+        docs (its own v_e restriction + gathers) — cost O(delta), not
+        O(corpus); returns the assigned global doc ids.
+      * :meth:`delete` flips per-row tombstone bits.  The mask is a *traced*
+        argument of every segment kernel, so deletes never recompile; dead
+        docs are +inf in every distance path and can never appear in a top-k.
+      * :meth:`compact` merges all segments into one base segment, re-running
+        the vocab restriction with tombstoned rows zero-weighted (their words
+        leave v_e).  Global doc ids are STABLE across compaction — dead rows
+        keep their slots as empty histograms.
+
+    Queries run phase-1/phase-2 per segment through module-level jitted
+    kernels and fold per-segment (distance, global id) top-k candidates with
+    :func:`repro.core.topk.merge_topk`.  Because every segment uses the exact
+    fold of the monolithic engine and the shared lexicographic tie order,
+    results are bit-identical (indices AND distances) to a monolithic rebuild
+    over the merged live corpus — see tests/test_segments.py.
+    """
+
+    def __init__(
+        self,
+        resident: DocSet | None,
+        emb: Array,
+        *,
+        bf16_matmul: bool = False,
+        vocab_chunk: int | None = None,
+        row_block: int = 128,
+        delta_pad: int | None = None,
+        vocab_pad: int | None = None,
+    ):
+        self.emb_full = jnp.asarray(emb, dtype=jnp.float32)
+        self.bf16_matmul = bf16_matmul
+        self.vocab_chunk = vocab_chunk
+        self.use_kernel = False   # segment kernels are the pure-jnp fold
+        self.interpret = False
+        self.row_block = max(1, int(row_block))
+        self.delta_pad = delta_pad
+        self.vocab_pad = vocab_pad
+        self.segments: list[EngineSegment] = []
+        self._live: list[np.ndarray] = []
+        self.version = 0          # bumped on every append/delete/compact
+        self._resident_cache: DocSet | None = None
+        self._resident_version = -1
+        self._live_dev: tuple[Array, ...] | None = None
+        self._global_live_dev: Array | None = None
+        if resident is not None and resident.n_docs:
+            self._append_segment(resident, n_pad=None, live=None)
+
+    # -- lifecycle --------------------------------------------------------
+    def _append_segment(self, docs: DocSet, *, n_pad, live) -> EngineSegment:
+        seg = EngineSegment(
+            docs, self.emb_full, offset=self.n_docs,
+            n_pad=n_pad, vocab_pad=self.vocab_pad,
+        )
+        if live is None:
+            live = np.zeros(seg.n_rows, dtype=bool)
+            live[:seg.n_real] = True
+        self.segments.append(seg)
+        self._live.append(live)
+        self._bump()
+        return seg
+
+    def _bump(self) -> None:
+        self.version += 1
+        self._resident_cache = None
+        self._live_dev = None
+        self._global_live_dev = None
+
+    def append(self, docs: DocSet) -> np.ndarray:
+        """Ingest ``docs`` as a new delta segment; returns their global ids."""
+        if docs.n_docs == 0:
+            return np.empty(0, dtype=np.int64)
+        if self.segments:
+            h = self.h_max
+            if docs.h_max > h:
+                raise ValueError(
+                    f"appended docs have h_max={docs.h_max} > engine "
+                    f"h_max={h}; re-pad the corpus or rebuild")
+            if docs.h_max < h:
+                pad = h - docs.h_max
+                docs = DocSet(
+                    ids=jnp.pad(docs.ids, ((0, 0), (0, pad))),
+                    weights=jnp.pad(docs.weights, ((0, 0), (0, pad))),
+                )
+        n_pad = None
+        if self.delta_pad and self.segments:
+            n_pad = -(-docs.n_docs // int(self.delta_pad)) * int(self.delta_pad)
+        lo = self.n_docs
+        self._append_segment(docs, n_pad=n_pad, live=None)
+        return np.arange(lo, lo + docs.n_docs, dtype=np.int64)
+
+    def delete(self, doc_ids) -> int:
+        """Tombstone global doc ids; returns how many were newly deleted."""
+        n = self.n_docs
+        removed = 0
+        for g in np.atleast_1d(np.asarray(doc_ids, dtype=np.int64)):
+            if g < 0 or g >= n:
+                raise IndexError(f"doc id {int(g)} out of range [0, {n})")
+            for seg, live in zip(self.segments, self._live):
+                if seg.offset <= g < seg.offset + seg.n_real:
+                    local = int(g - seg.offset)
+                    removed += int(live[local])
+                    live[local] = False
+                    break
+        if removed:
+            self._bump()
+        return removed
+
+    def compact(self) -> None:
+        """Merge every segment into one base segment (stable global ids).
+
+        Re-runs the v_e vocab restriction over the merged corpus with
+        tombstoned rows zero-weighted, so deleted docs' words leave the
+        restricted vocabulary and delta fragmentation disappears; dead rows
+        keep their (now empty) global id slots.
+        """
+        if not self.segments:
+            return
+        base = self.segments[0]
+        if (len(self.segments) == 1 and base.n_rows == base.n_real
+                and bool(self._live[0].all())):
+            return   # already one dense, fully-live base segment
+        res = self.resident
+        live = self.live_mask()
+        w = np.where(live[:, None], np.asarray(res.weights), 0.0)
+        merged = DocSet(ids=jnp.asarray(np.asarray(res.ids)),
+                        weights=jnp.asarray(w.astype(np.float32)))
+        seg = EngineSegment(merged, self.emb_full, offset=0,
+                            vocab_pad=self.vocab_pad)
+        self.segments = [seg]
+        self._live = [live.copy()]
+        self._bump()
+
+    # -- corpus views ------------------------------------------------------
+    @property
+    def n_docs(self) -> int:
+        """Size of the global doc-id space (INCLUDING tombstoned docs)."""
+        return sum(s.n_real for s in self.segments)
+
+    @property
+    def n_live(self) -> int:
+        """Docs that are actually queryable (excludes tombstones)."""
+        return int(sum(l[:s.n_real].sum()
+                       for s, l in zip(self.segments, self._live)))
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def h_max(self) -> int:
+        return self.segments[0].docs.h_max if self.segments else 0
+
+    @property
+    def nbytes(self) -> int:
+        """Total device bytes of all segments (LRU eviction accounting)."""
+        return sum(seg.nbytes for seg in self.segments)
+
+    @property
+    def emb_restricted(self) -> Array:
+        """Base segment's restricted embedding (compat view for analytics)."""
+        return self.segments[0].tensors.emb_r
+
+    @property
+    def resident(self) -> DocSet:
+        """The merged corpus as one DocSet, global doc id == row (cached).
+
+        Tombstoned docs keep their rows (their weights are untouched here;
+        use :meth:`live_mask` to filter) so global ids stay stable.
+        """
+        if self._resident_cache is None or self._resident_version != self.version:
+            ids = np.concatenate(
+                [np.asarray(s.docs.ids)[:s.n_real] for s in self.segments])
+            w = np.concatenate(
+                [np.asarray(s.docs.weights)[:s.n_real] for s in self.segments])
+            self._resident_cache = DocSet(ids=jnp.asarray(ids),
+                                          weights=jnp.asarray(w))
+            self._resident_version = self.version
+        return self._resident_cache
+
+    def live_mask(self) -> np.ndarray:
+        """(n_docs,) host bool mask: True where the doc is not tombstoned."""
+        if not self.segments:
+            return np.zeros(0, dtype=bool)
+        return np.concatenate(
+            [l[:s.n_real] for s, l in zip(self.segments, self._live)])
+
+    def live_mask_device(self) -> Array:
+        """(n_docs,) device live mask (cached per corpus version)."""
+        if self._global_live_dev is None:
+            self._global_live_dev = jnp.asarray(self.live_mask())
+        return self._global_live_dev
+
+    def _seg_live_device(self) -> tuple[Array, ...]:
+        if self._live_dev is None:
+            self._live_dev = tuple(jnp.asarray(l) for l in self._live)
+        return self._live_dev
+
+    # -- query surface -----------------------------------------------------
+    def _gather_queries_flat(self, q_ids: Array) -> Array:
+        return self.emb_full[jnp.asarray(q_ids).reshape(-1)]
+
+    def gather_queries(self, q_ids: Array) -> Array:
+        b, h = q_ids.shape
+        return self._gather_queries_flat(q_ids).reshape(b, h, -1)
+
+    def _fold_topk(self, queries: DocSet, k: int, symmetric: bool):
+        from repro.core.topk import TopK, merge_topk
+
+        t_q = self._gather_queries_flat(queries.ids)
+        parts = []
+        for seg, live in zip(self.segments, self._seg_live_device()):
+            tk = _segment_topk(
+                seg.tensors, t_q, queries.weights, live,
+                k=min(k, seg.n_rows), symmetric=symmetric,
+                row_block=max(1, min(self.row_block, seg.n_rows)),
+                bf16_matmul=self.bf16_matmul, vocab_chunk=self.vocab_chunk,
+            )
+            idx = jnp.where(tk.indices >= 0, tk.indices + seg.offset,
+                            tk.indices)
+            parts.append(TopK(tk.dists, idx))
+        kk = min(k, self.n_docs)
+        if len(parts) == 1 and parts[0].dists.shape[-1] == kk:
+            return parts[0]
+        return merge_topk(parts, kk)
+
+    def topk(self, queries: DocSet, k: int):
+        """Top-k smallest symmetric LC-RWMD over all live docs: TopK (B, k)."""
+        return self._fold_topk(queries, k, symmetric=True)
+
+    def topk_streaming(self, queries: DocSet, k: int):
+        """Top-k smallest one-sided LC-RWMD (D1), segment-folded."""
+        return self._fold_topk(queries, k, symmetric=False)
+
+    def symmetric_topk_streaming(self, queries: DocSet, k: int):
+        """Top-k smallest symmetric bound, segment-folded."""
+        return self._fold_topk(queries, k, symmetric=True)
+
+    def _dense(self, queries: DocSet, *, symmetric: bool) -> Array:
+        t_q = self._gather_queries_flat(queries.ids)
+        outs = [
+            _segment_dense(
+                seg.tensors, t_q, queries.weights, live,
+                symmetric=symmetric, bf16_matmul=self.bf16_matmul,
+                vocab_chunk=self.vocab_chunk,
+            )[:seg.n_real]
+            for seg, live in zip(self.segments, self._seg_live_device())
+        ]
+        return jnp.concatenate(outs, axis=0)
+
+    def one_sided(self, queries: DocSet) -> Array:
+        """D1 (n_docs, B); tombstoned rows are +inf."""
+        return self._dense(queries, symmetric=False)
+
+    def symmetric(self, queries: DocSet) -> Array:
+        """max(D1, D2ᵀ) (n_docs, B); tombstoned rows are +inf."""
+        return self._dense(queries, symmetric=True)
+
+    def rerank_topk(self, queries: DocSet, cand_indices: Array, k: int,
+                    *, sinkhorn_kw: dict | None = None):
+        """Batched Sinkhorn-WMD re-rank of global candidate doc ids.
+
+        Same contract as :meth:`LCRWMDEngine.rerank_topk`; empty (-1) and
+        tombstoned candidates are masked to +inf WMD.  The candidate gathers
+        run eagerly at fixed (B, budget) shapes, so corpus churn (which
+        changes ``n_docs``) never re-traces the jitted solve.
+        """
+        items = tuple(sorted((sinkhorn_kw or {}).items()))
+        res = self.resident
+        n = self.n_docs
+        cand = jnp.asarray(cand_indices)
+        safe = jnp.clip(cand.reshape(-1), 0, n - 1)
+        ids1 = res.ids[safe]                                 # (B*budget, h1)
+        t1 = self.emb_full[ids1.reshape(-1)].reshape(
+            ids1.shape[0], ids1.shape[1], -1)
+        w1 = res.weights[safe]
+        cand_valid = (cand >= 0) & jnp.take(
+            self.live_mask_device(), jnp.clip(cand, 0, n - 1))
+        return _segmented_rerank(
+            k, items, self.use_kernel, self.bf16_matmul,
+            t1, w1, self.gather_queries(queries.ids), queries.weights,
+            cand, cand_valid,
+        )
+
+    # -- corpus-analytics (query-tile) entry points ------------------------
+    def resident_tile(self, idx: Array) -> DocSet:
+        """Resident docs named by global ids ``idx`` as a query DocSet.
+
+        Out-of-range AND tombstoned entries behave as empty histograms.
+        """
+        res = self.resident
+        n = self.n_docs
+        idx = jnp.asarray(idx, jnp.int32)
+        safe = jnp.clip(idx, 0, n - 1)
+        inb = ((idx >= 0) & (idx < n)
+               & jnp.take(self.live_mask_device(), safe))
+        return DocSet(
+            ids=res.ids[safe],
+            weights=jnp.where(inb[:, None], res.weights[safe], 0.0),
+        )
+
+    def symmetric_resident(self, idx: Array) -> Array:
+        """Symmetric bound (n_docs, B) whose queries are resident docs ``idx``."""
+        return self.symmetric(self.resident_tile(idx))
+
+    def phase1_resident(self, idx: Array) -> tuple:
+        """Per-segment phase-1 Z tiles for resident-doc queries ``idx``.
+
+        Returns a TUPLE of (v_e_s, B) arrays — one per segment — which is the
+        ``z`` handle :meth:`one_sided_rows` (and the pair scheduler) expects.
+        """
+        tile = self.resident_tile(idx)
+        t_q = self._gather_queries_flat(tile.ids)
+        valid = (tile.weights > 0).reshape(-1)
+        return tuple(
+            _segment_phase1(
+                seg.tensors.emb_r, t_q, valid, b=tile.n_docs,
+                bf16_matmul=self.bf16_matmul, vocab_chunk=self.vocab_chunk,
+            )
+            for seg in self.segments
+        )
+
+    def _one_sided_rows_impl(self, row_idx: Array, z) -> Array:
+        zs = z if isinstance(z, (tuple, list)) else (z,)
+        total = None
+        for seg, zz in zip(self.segments, zs):
+            local = row_idx - seg.offset
+            owner = (local >= 0) & (local < seg.n_real)
+            safe = jnp.clip(local, 0, seg.n_rows - 1)
+            sub = DocSet(
+                ids=seg.tensors.r_ids[safe],
+                weights=jnp.where(owner[:, None],
+                                  seg.tensors.r_w[safe], 0.0),
+            )
+            d = jnp.where(owner[:, None], phase2_spmm(sub, zz), 0.0)
+            total = d if total is None else total + d
+        return total
+
+    def one_sided_rows(self, row_idx: Array, z) -> Array:
+        """Phase-2 restricted to global rows ``row_idx``: (R, B).
+
+        ``z`` is a :meth:`phase1_resident` tuple; each row's contribution
+        comes from the one segment that owns it (others contribute 0).
+        Tombstoned rows still produce values here — schedulers mask by the
+        engine's :meth:`live_mask_device`.
+        """
+        return self._one_sided_rows_impl(jnp.asarray(row_idx, jnp.int32), z)

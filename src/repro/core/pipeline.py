@@ -92,7 +92,11 @@ def cascade_topk(
 
         c_r = centroids(engine.resident, engine.emb_full)        # (n, m)
         c_q = centroids(queries, engine.emb_full)                # (B, m)
-        return topk_lib.topk_smallest_cols(dists(c_r, c_q), k)   # (n, B)
+        d = dists(c_r, c_q)                                      # (n, B)
+        live = getattr(engine, "live_mask_device", None)
+        if live is not None:  # segmented engine: tombstones never shortlist
+            d = jnp.where(live()[:, None], d, jnp.inf)
+        return topk_lib.topk_smallest_cols(d, k)
     if tier >= QualityTier.LCRWMD:
         return engine.topk_streaming(queries, k)
     budget = min(max(rerank_budget or 2 * k, k), engine.resident.n_docs)
@@ -170,7 +174,10 @@ def pruned_wmd_topk(
     # both outputs: candidates sort ascending, so the RWMD-only top-k is the
     # first k columns of the candidate set.
     rwmd_topk = topk_lib.TopK(cand.dists[:, :k], cand.indices[:, :k])
-    flat = cand.indices.reshape(-1)                     # (B*budget,)
+    # Segmented engines may hand back unfilled (-1) candidate slots when
+    # fewer than `budget` live docs exist — clip the gather and re-inf the
+    # values so dead slots never win; a no-op for dense monolithic engines.
+    flat = jnp.clip(cand.indices, 0, n - 1).reshape(-1)  # (B*budget,)
     wmd_vals = wmd_candidate_values(
         emb[resident.ids[flat]], resident.weights[flat],
         emb[queries.ids], queries.weights,
@@ -179,6 +186,7 @@ def pruned_wmd_topk(
         interpret=interpret or None,
         **sinkhorn_kw,
     )  # (B, budget)
+    wmd_vals = jnp.where(cand.indices >= 0, wmd_vals, jnp.inf)
 
     # Cut-off L = k-th smallest WMD among the first k candidates (the
     # paper's bootstrap); docs with RWMD >= L are provably outside top-k.
@@ -287,6 +295,19 @@ class AdaptiveRefineBudget:
         """Forget past failures (e.g. after a corpus swap) so decay may
         re-probe budgets that used to be insufficient."""
         self.failed_budget = 0
+
+    def on_corpus_change(self, n_resident: int) -> None:
+        """Re-anchor the controller after ingest/delete/compact or an engine
+        swap: the failed-budget floor was measured against a DIFFERENT corpus,
+        so inheriting it would pin another tenant's worst case onto this one.
+        Updates the clamp range, re-clamps the current budget, resets the
+        exactness streak, and forgets the stale floor."""
+        if n_resident < 1:
+            raise ValueError(f"n_resident must be positive, got {n_resident}")
+        self.n_resident = int(n_resident)
+        self.budget = self._clamp(self.budget)
+        self.exact_streak = 0
+        self.reset_decay_floor()
 
     def update(self, pruned_exact) -> int:
         """Observe one batch's ``pruned_exact`` flags; return the new budget."""

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+import numpy as np
+
 from repro.compat import shard_map as compat_shard_map
 from repro.core.distances import dists, safe_sqrt, sq_dists
 from repro.core.topk import (
@@ -41,6 +43,51 @@ from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
 
 Array = jax.Array
 _INF = 3.4e38
+
+# Module-level cache of compiled serve-step callables.  Historically every
+# `build_serve_step` call created fresh `@jax.jit` objects, so each engine
+# swap / adaptive-budget rebuild / tenant switch re-traced from scratch even
+# when the mesh, shapes, and static config were identical.  Keying the step
+# on (mesh, static config) — with ALL resident state passed as traced
+# arguments (including the live-row mask) — lets same-shaped corpora share
+# one trace: multi-tenant engine caches hit this instead of XLA.
+_STEP_CACHE: dict = {}
+
+
+def _mesh_key(mesh) -> tuple:
+    return (
+        tuple(mesh.axis_names),
+        tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
+
+
+def _slab_geometry(
+    n_rows: int, n_batch_shards: int, row_block: int, psum_batch: int,
+    streaming: bool,
+) -> tuple[int, int, int]:
+    """(rb, g, row_mult): slab rows, slabs per collective, row pad multiple.
+
+    ``g`` is the psum batching factor: the streaming scan evaluates ``g``
+    consecutive ``rb``-row slabs per scan step and reduces them with ONE
+    model-axis psum of the stacked (g·rb, B) partial — one collective (and
+    one carry fold) per ``g`` slabs instead of per slab, at a peak-memory
+    cost of (g·rb, B) instead of (rb, B).  Results are exactly equal: psum
+    is elementwise and the streaming top-k fold is grouping-invariant.
+    """
+    rows_per_shard = max(1, -(-n_rows // n_batch_shards))
+    rb = max(1, min(row_block, rows_per_shard))
+    g = max(1, min(psum_batch, -(-rows_per_shard // rb))) if streaming else 1
+    return rb, g, n_batch_shards * (rb * g if streaming else 1)
+
+
+def _pad_rows_mult(x, mult: int, value=0):
+    """Zero-pad the leading axis of ``x`` up to a multiple of ``mult``."""
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=value)
 
 
 class ServeResult(NamedTuple):
@@ -109,6 +156,7 @@ def build_serve_step(
     self_exclude: bool = False,
     streaming: bool | None = None,
     row_block: int = 128,
+    psum_batch: int = 8,
 ):
     """Returns jit'd ``serve(resident, queries, emb) -> ServeResult``.
 
@@ -173,6 +221,26 @@ def build_serve_step(
     engine-less path is the paper-faithful materialized baseline and
     rejects ``streaming=True``.
 
+    ``psum_batch`` (streaming path) batches the per-slab model-axis psums:
+    ``psum_batch`` consecutive ``row_block`` slabs are reduced with ONE
+    collective of the stacked (psum_batch·row_block, B) partials per scan
+    step — cutting collective launch count by that factor on small row
+    blocks, at proportionally higher (still O(row_block·B)) slab memory.
+    Exactly equal results (psum is elementwise; the top-k fold is
+    grouping-invariant).
+
+    ``engine`` may also be a :class:`repro.core.lc_rwmd.SegmentedEngine`:
+    the serve step then scans base + delta segments back-to-back inside the
+    shard kernel — each segment phase-1s against its OWN restricted vocab,
+    streams phase-2 slabs with its tombstone mask and per-segment
+    self-exclusion applied locally, and folds (distance, global id)
+    candidates into one shared carry — before the single cross-shard top-k
+    collective.  The returned callable re-places segment tensors whenever
+    ``engine.version`` changes, so ingest/delete/compact are admissible
+    between batches: deletes only change the traced live-mask VALUES (no
+    re-trace), and appends re-trace only for segment-shape signatures not
+    yet seen (pad deltas via ``delta_pad``/``vocab_pad`` to pin the shapes).
+
     The ENGINE-path callable additionally accepts a keyword-only
     ``tier=`` (:class:`repro.core.pipeline.QualityTier`): the serving
     plane's degradation ladder.  Tier 0 is the full configured cascade;
@@ -195,8 +263,21 @@ def build_serve_step(
     kc = (rerank_budget or 2 * k) if rerank_wmd else k
     kc = max(kc, k)  # the rerank stage must keep at least k candidates
     if engine is not None:
-        kc = min(kc, engine.resident.n_docs)
+        kc = min(kc, engine.n_docs if hasattr(engine, "segments")
+                 else engine.resident.n_docs)
 
+    if engine is not None and hasattr(engine, "segments"):
+        if streaming is False:
+            raise ValueError(
+                "the segmented serve step is streaming-only (d_local "
+                "diagnostics are a monolithic-engine feature)")
+        return _build_segmented_serve_step(
+            mesh, engine, k=k, kc=kc, refine=refine, bf16_matmul=bf16_matmul,
+            phase1_full_mesh=phase1_full_mesh, batch_axes=batch_axes,
+            n_batch_shards=n_batch_shards, n_model=n_model,
+            rerank_wmd=rerank_wmd, wmd_kw=wmd_kw, self_exclude=self_exclude,
+            row_block=row_block, psum_batch=psum_batch,
+        )
     if engine is not None:
         return _build_engine_serve_step(
             mesh, engine, k=k, kc=kc, refine=refine, bf16_matmul=bf16_matmul,
@@ -204,7 +285,7 @@ def build_serve_step(
             n_batch_shards=n_batch_shards, n_model=n_model,
             rerank_wmd=rerank_wmd, wmd_kw=wmd_kw, self_exclude=self_exclude,
             streaming=streaming if streaming is not None else True,
-            row_block=row_block,
+            row_block=row_block, psum_batch=psum_batch,
         )
     if self_exclude:
         raise ValueError("self_exclude requires an engine-backed serve step")
@@ -284,10 +365,135 @@ def build_serve_step(
     return serve
 
 
+def _engine_step(
+    mesh, *, kc, streaming, rb, g, self_exclude, bf16_matmul,
+    phase1_full_mesh,
+):
+    """Compiled monolithic-engine shard step from the module-level cache.
+
+    Every piece of resident state — ids, weights, the LIVE-row mask, query
+    tensors and embedding shards — is a *traced argument*, so one cached
+    step serves every same-shaped corpus: engine swaps (multi-tenant cache
+    readmits) and row tombstones change values, never traces.  The live
+    mask subsumes the old ``row < n_real`` padding closure.
+    """
+    key = ("mono", _mesh_key(mesh), kc, streaming, rb, g, self_exclude,
+           bf16_matmul, phase1_full_mesh)
+    step = _STEP_CACHE.get(key)
+    if step is not None:
+        return step
+
+    batch_axes = _batch_axes(mesh)
+    n_batch_shards = 1
+    for a in batch_axes:
+        n_batch_shards *= mesh.shape[a]
+
+    def _z_and_span(t_q, q_valid, emb_local):
+        """Phase-1 Z for this shard's vocab span (+ the span size)."""
+        v_local = emb_local.shape[0]
+        z_local = _z_from_t(emb_local, t_q, q_valid, bf16_matmul=bf16_matmul)
+        if phase1_full_mesh:
+            for a in reversed(batch_axes):
+                z_local = jax.lax.all_gather(z_local, a, axis=0, tiled=True)
+            return z_local, v_local * n_batch_shards
+        return z_local, v_local
+
+    def _shard_offset(n_local):
+        offset = jnp.int32(0)
+        for a in batch_axes:
+            offset = offset * mesh.shape[a] + jax.lax.axis_index(a)
+        return offset * n_local
+
+    def kernel(rids, rw, r_live, t_q, q_valid, q_gid, emb_local):
+        n_local = rids.shape[0]
+        z_local, v_span = _z_and_span(t_q, q_valid, emb_local)
+        partial = _phase2_partial(rids, rw, z_local, v_span)
+        d_local = jax.lax.psum(partial, MODEL_AXIS)  # (n_l, B)
+        offset = _shard_offset(n_local)
+
+        # Padded alignment rows AND tombstoned docs arrive as live=False.
+        d_local = jnp.where(r_live[:, None], d_local, _INF)
+        if self_exclude:
+            # Corpus mode: each query IS a resident doc; its own row must
+            # not consume a candidate slot.  Masked locally (only the shard
+            # owning the row sees a match), before the top-k collective.
+            row = offset + jnp.arange(n_local, dtype=jnp.int32)
+            d_local = jnp.where(row[:, None] == q_gid[None, :], _INF, d_local)
+
+        tk = distributed_topk(d_local, kc, axis_names=batch_axes,
+                              shard_offset=offset)
+        return (tk.dists, tk.indices), d_local
+
+    def kernel_streaming(rids, rw, r_live, t_q, q_valid, q_gid, emb_local):
+        n_local, h1 = rids.shape
+        b = t_q.shape[0]
+        z_local, v_span = _z_and_span(t_q, q_valid, emb_local)
+        offset = _shard_offset(n_local)
+
+        # `g` rb-row slabs are evaluated per scan step and reduced with ONE
+        # model-axis psum of the stacked (g·rb, B) partial — one collective
+        # (and one carry fold) per g slabs (see _slab_geometry).
+        blk = rb * g
+        nb = n_local // blk
+        ids_b = rids.reshape(nb, blk, h1)
+        w_b = rw.reshape(nb, blk, h1)
+        live_b = r_live.reshape(nb, blk)
+        los = offset + jnp.arange(nb, dtype=jnp.int32) * blk
+        stk = StreamingTopK(min(kc, n_local))
+
+        def body(carry, xs):
+            ids_blk, w_blk, live_blk, lo = xs
+            partial = _phase2_partial(ids_blk, w_blk, z_local, v_span)
+            d_blk = jax.lax.psum(partial, MODEL_AXIS)    # (g·rb, B)
+            row = lo + jnp.arange(blk, dtype=jnp.int32)  # GLOBAL doc ids
+            d_blk = jnp.where(live_blk[:, None], d_blk, _INF)
+            if self_exclude:
+                d_blk = jnp.where(
+                    row[:, None] == q_gid[None, :], _INF, d_blk)
+            return stk.update_cols(carry, d_blk, row), None
+
+        local_tk, _ = jax.lax.scan(
+            body, stk.init(b), (ids_b, w_b, live_b, los))
+        tk = crossshard_topk(local_tk, kc, axis_names=batch_axes)
+        return tk.dists, tk.indices
+
+    rspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
+    lspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
+    espec = (P((MODEL_AXIS,) + batch_axes, None) if phase1_full_mesh
+             else P(MODEL_AXIS, None))
+    in_specs = (rspec, rspec, lspec, P(None, None, None), P(None, None),
+                P(None), espec)
+    if streaming:
+        shmapped = compat_shard_map(
+            kernel_streaming, mesh=mesh, in_specs=in_specs,
+            out_specs=(P(None, None), P(None, None)),
+        )
+
+        @jax.jit
+        def step(rids, rw, r_live, t_q, q_valid, q_gid, emb_s):
+            tk_d, tk_i = shmapped(
+                rids, rw, r_live, t_q, q_valid, q_gid, emb_s)
+            return TopK(tk_d, tk_i), None
+    else:
+        shmapped = compat_shard_map(
+            kernel, mesh=mesh, in_specs=in_specs,
+            out_specs=((P(None, None), P(None, None)), rspec),
+        )
+
+        @jax.jit
+        def step(rids, rw, r_live, t_q, q_valid, q_gid, emb_s):
+            (tk_d, tk_i), d_local = shmapped(
+                rids, rw, r_live, t_q, q_valid, q_gid, emb_s)
+            return TopK(tk_d, tk_i), d_local
+
+    _STEP_CACHE[key] = step
+    return step
+
+
 def _build_engine_serve_step(
     mesh, engine, *, k, kc, refine, bf16_matmul, phase1_full_mesh,
     batch_axes, n_batch_shards, n_model, rerank_wmd=False, wmd_kw=None,
-    self_exclude=False, streaming=True, row_block=128,
+    self_exclude=False, streaming=True, row_block=128, psum_batch=8,
 ):
     """Engine-backed serve step: resident state prepped + placed at build.
 
@@ -306,116 +512,31 @@ def _build_engine_serve_step(
     """
     from jax.sharding import NamedSharding
 
-    def _pad_rows(x, mult, value=0):
-        pad = (-x.shape[0]) % mult
-        if pad == 0:
-            return x
-        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
-        return jnp.pad(x, widths, constant_values=value)
-
     n_real = engine.resident.n_docs
-    # Streaming scans shard rows in row_block slabs: pad the doc axis so
-    # every shard holds a whole number of slabs (masked via row < n_real).
-    rb = max(1, min(row_block, -(-n_real // n_batch_shards)))
-    row_mult = n_batch_shards * (rb if streaming else 1)
+    # Streaming scans shard rows in (psum_batch · row_block)-row super-slabs:
+    # pad the doc axis so every shard holds a whole number of them (padding
+    # rows are live=False in the traced mask).
+    rb, g, row_mult = _slab_geometry(
+        n_real, n_batch_shards, row_block, psum_batch, streaming)
     emb_shards = n_model * (n_batch_shards if phase1_full_mesh else 1)
-    emb_r = _pad_rows(engine.emb_restricted, emb_shards)
-    r_ids = _pad_rows(engine.resident_restricted.ids, row_mult)
-    r_w = _pad_rows(engine.resident_restricted.weights, row_mult)
+    emb_r = _pad_rows_mult(engine.emb_restricted, emb_shards)
+    r_ids = _pad_rows_mult(engine.resident_restricted.ids, row_mult)
+    r_w = _pad_rows_mult(engine.resident_restricted.weights, row_mult)
+    r_live = jnp.arange(r_ids.shape[0], dtype=jnp.int32) < n_real
 
     rspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
+    lspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
     espec = (P((MODEL_AXIS,) + batch_axes, None) if phase1_full_mesh
              else P(MODEL_AXIS, None))
     r_ids = jax.device_put(r_ids, NamedSharding(mesh, rspec))
     r_w = jax.device_put(r_w, NamedSharding(mesh, rspec))
+    r_live = jax.device_put(r_live, NamedSharding(mesh, lspec))
     emb_r = jax.device_put(emb_r, NamedSharding(mesh, espec))
 
-    def _z_and_span(t_q, q_valid, emb_local):
-        """Phase-1 Z for this shard's vocab span (+ the span size)."""
-        v_local = emb_local.shape[0]
-        z_local = _z_from_t(emb_local, t_q, q_valid, bf16_matmul=bf16_matmul)
-        if phase1_full_mesh:
-            for a in reversed(batch_axes):
-                z_local = jax.lax.all_gather(z_local, a, axis=0, tiled=True)
-            return z_local, v_local * n_batch_shards
-        return z_local, v_local
-
-    def _shard_offset(n_local):
-        offset = jnp.int32(0)
-        for a in batch_axes:
-            offset = offset * mesh.shape[a] + jax.lax.axis_index(a)
-        return offset * n_local
-
-    def kernel(rids, rw, t_q, q_valid, q_gid, emb_local):
-        n_local = rids.shape[0]
-        z_local, v_span = _z_and_span(t_q, q_valid, emb_local)
-        partial = _phase2_partial(rids, rw, z_local, v_span)
-        d_local = jax.lax.psum(partial, MODEL_AXIS)  # (n_l, B)
-        offset = _shard_offset(n_local)
-
-        # Padded resident rows (doc-axis alignment) must never enter top-k.
-        row = offset + jnp.arange(n_local, dtype=jnp.int32)
-        d_local = jnp.where((row < n_real)[:, None], d_local, _INF)
-        if self_exclude:
-            # Corpus mode: each query IS a resident doc; its own row must
-            # not consume a candidate slot.  Masked locally (only the shard
-            # owning the row sees a match), before the top-k collective.
-            d_local = jnp.where(row[:, None] == q_gid[None, :], _INF, d_local)
-
-        tk = distributed_topk(d_local, kc, axis_names=batch_axes,
-                              shard_offset=offset)
-        return (tk.dists, tk.indices), d_local
-
-    def kernel_streaming(rids, rw, t_q, q_valid, q_gid, emb_local):
-        n_local, h1 = rids.shape
-        b = t_q.shape[0]
-        z_local, v_span = _z_and_span(t_q, q_valid, emb_local)
-        offset = _shard_offset(n_local)
-
-        nb = n_local // rb
-        ids_b = rids.reshape(nb, rb, h1)
-        w_b = rw.reshape(nb, rb, h1)
-        los = offset + jnp.arange(nb, dtype=jnp.int32) * rb
-        stk = StreamingTopK(min(kc, n_local))
-
-        def body(carry, xs):
-            ids_blk, w_blk, lo = xs
-            partial = _phase2_partial(ids_blk, w_blk, z_local, v_span)
-            d_blk = jax.lax.psum(partial, MODEL_AXIS)   # (rb, B)
-            row = lo + jnp.arange(rb, dtype=jnp.int32)  # GLOBAL doc ids
-            d_blk = jnp.where((row < n_real)[:, None], d_blk, _INF)
-            if self_exclude:
-                d_blk = jnp.where(
-                    row[:, None] == q_gid[None, :], _INF, d_blk)
-            return stk.update_cols(carry, d_blk, row), None
-
-        local_tk, _ = jax.lax.scan(body, stk.init(b), (ids_b, w_b, los))
-        tk = crossshard_topk(local_tk, kc, axis_names=batch_axes)
-        return tk.dists, tk.indices
-
-    in_specs = (rspec, rspec, P(None, None, None), P(None, None), P(None),
-                espec)
-    if streaming:
-        shmapped = compat_shard_map(
-            kernel_streaming, mesh=mesh, in_specs=in_specs,
-            out_specs=(P(None, None), P(None, None)),
-        )
-
-        @jax.jit
-        def step(rids, rw, t_q, q_valid, q_gid, emb_s):
-            tk_d, tk_i = shmapped(rids, rw, t_q, q_valid, q_gid, emb_s)
-            return TopK(tk_d, tk_i), None
-    else:
-        shmapped = compat_shard_map(
-            kernel, mesh=mesh, in_specs=in_specs,
-            out_specs=((P(None, None), P(None, None)), rspec),
-        )
-
-        @jax.jit
-        def step(rids, rw, t_q, q_valid, q_gid, emb_s):
-            (tk_d, tk_i), d_local = shmapped(
-                rids, rw, t_q, q_valid, q_gid, emb_s)
-            return TopK(tk_d, tk_i), d_local
+    step = _engine_step(
+        mesh, kc=kc, streaming=streaming, rb=rb, g=g,
+        self_exclude=self_exclude, bf16_matmul=bf16_matmul,
+        phase1_full_mesh=phase1_full_mesh)
 
     # Tier-2 (WCD shortlist) state: resident centroids, computed ONCE from
     # the engine's pre-gathered resident word embeddings.  The step itself
@@ -444,7 +565,7 @@ def _build_engine_serve_step(
                                 queries.weights, q_gid)
             return ServeResult(topk=tk, d_local=None, pruned_exact=None,
                                tier=tier)
-        tk, d_local = step(r_ids, r_w, t_q, q_valid, q_gid, emb_r)
+        tk, d_local = step(r_ids, r_w, r_live, t_q, q_valid, q_gid, emb_r)
         if tier >= 1:  # QualityTier.LCRWMD: candidates ARE the answer
             tk = TopK(tk.dists[:, :k], tk.indices[:, :k])
             return ServeResult(
@@ -473,6 +594,217 @@ def _build_engine_serve_step(
             d_local=None if d_local is None else d_local[:n_real],
             pruned_exact=exact,
         )
+
+    return serve
+
+
+def _segmented_step(
+    mesh, *, kc, rbs, gs, self_exclude, bf16_matmul, phase1_full_mesh,
+):
+    """Compiled segmented shard step (one per segment-shape signature).
+
+    The kernel scans every segment back-to-back INSIDE the shard: each
+    segment phase-1s against its own restricted vocab shard, streams its
+    phase-2 super-slabs with the traced live mask and per-segment
+    self-exclusion applied locally, and folds (distance, GLOBAL id)
+    candidates into one shared :class:`~repro.core.topk.StreamingTopK`
+    carry — then ONE cross-shard top-k collective merges the per-shard
+    partials, exactly like the monolithic step.  ``rbs``/``gs`` are the
+    per-segment slab geometries (their length fixes the segment count);
+    everything else — tensors, live masks, id offsets — is traced, so
+    deletes and same-shape delta appends reuse the cached trace.
+    """
+    key = ("seg", _mesh_key(mesh), kc, rbs, gs, self_exclude, bf16_matmul,
+           phase1_full_mesh)
+    step = _STEP_CACHE.get(key)
+    if step is not None:
+        return step
+
+    n_segments = len(rbs)
+    batch_axes = _batch_axes(mesh)
+    n_batch_shards = 1
+    for a in batch_axes:
+        n_batch_shards *= mesh.shape[a]
+
+    def _z_and_span(t_q, q_valid, emb_local):
+        v_local = emb_local.shape[0]
+        z_local = _z_from_t(emb_local, t_q, q_valid, bf16_matmul=bf16_matmul)
+        if phase1_full_mesh:
+            for a in reversed(batch_axes):
+                z_local = jax.lax.all_gather(z_local, a, axis=0, tiled=True)
+            return z_local, v_local * n_batch_shards
+        return z_local, v_local
+
+    def _shard_offset(n_local):
+        offset = jnp.int32(0)
+        for a in batch_axes:
+            offset = offset * mesh.shape[a] + jax.lax.axis_index(a)
+        return offset * n_local
+
+    def kernel(seg_rids, seg_rw, seg_live, seg_offs, t_q, q_valid, q_gid,
+               seg_embs):
+        b = t_q.shape[0]
+        total_local = sum(r.shape[0] for r in seg_rids)
+        stk = StreamingTopK(min(kc, total_local))
+        carry = stk.init(b)
+        for s in range(n_segments):
+            rids, rw, live = seg_rids[s], seg_rw[s], seg_live[s]
+            n_local, h1 = rids.shape
+            z_local, v_span = _z_and_span(t_q, q_valid, seg_embs[s])
+            # Rows of this shard's slice of segment s own the global ids
+            # [seg_offs[s] + shard_off, ...) — offsets are traced, so
+            # compaction's offset rewrite reuses the cached trace too.
+            row0 = seg_offs[s] + _shard_offset(n_local)
+            blk = rbs[s] * gs[s]
+            nb = n_local // blk
+            ids_b = rids.reshape(nb, blk, h1)
+            w_b = rw.reshape(nb, blk, h1)
+            live_b = live.reshape(nb, blk)
+            los = row0 + jnp.arange(nb, dtype=jnp.int32) * blk
+
+            def body(carry, xs, z_local=z_local, v_span=v_span, blk=blk):
+                ids_blk, w_blk, live_blk, lo = xs
+                partial = _phase2_partial(ids_blk, w_blk, z_local, v_span)
+                d_blk = jax.lax.psum(partial, MODEL_AXIS)    # (g·rb, B)
+                row = lo + jnp.arange(blk, dtype=jnp.int32)  # GLOBAL ids
+                d_blk = jnp.where(live_blk[:, None], d_blk, _INF)
+                if self_exclude:
+                    d_blk = jnp.where(
+                        row[:, None] == q_gid[None, :], _INF, d_blk)
+                return stk.update_cols(carry, d_blk, row), None
+
+            carry, _ = jax.lax.scan(body, carry, (ids_b, w_b, live_b, los))
+        tk = crossshard_topk(carry, kc, axis_names=batch_axes)
+        return tk.dists, tk.indices
+
+    rspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
+    lspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
+    espec = (P((MODEL_AXIS,) + batch_axes, None) if phase1_full_mesh
+             else P(MODEL_AXIS, None))
+    seg = lambda spec: tuple(spec for _ in range(n_segments))  # noqa: E731
+    shmapped = compat_shard_map(
+        kernel, mesh=mesh,
+        in_specs=(seg(rspec), seg(rspec), seg(lspec), P(None),
+                  P(None, None, None), P(None, None), P(None), seg(espec)),
+        out_specs=(P(None, None), P(None, None)),
+    )
+
+    @jax.jit
+    def step(seg_rids, seg_rw, seg_live, seg_offs, t_q, q_valid, q_gid,
+             seg_embs):
+        tk_d, tk_i = shmapped(seg_rids, seg_rw, seg_live, seg_offs,
+                              t_q, q_valid, q_gid, seg_embs)
+        return TopK(tk_d, tk_i)
+
+    _STEP_CACHE[key] = step
+    return step
+
+
+def _build_segmented_serve_step(
+    mesh, engine, *, k, kc, refine, bf16_matmul, phase1_full_mesh,
+    batch_axes, n_batch_shards, n_model, rerank_wmd=False, wmd_kw=None,
+    self_exclude=False, row_block=128, psum_batch=8,
+):
+    """Serve step over a :class:`~repro.core.lc_rwmd.SegmentedEngine`.
+
+    Per-segment resident tensors (ids, weights, live masks, restricted
+    embedding shards) are placed on the mesh lazily and re-placed whenever
+    ``engine.version`` changes, so the SAME callable keeps serving across
+    ingest/delete/compact — no rebuild, and no re-trace unless the segment
+    shape signature is new.  Tier-2 centroids are refreshed on the same
+    version check with tombstoned rows pushed to an unreachable distance.
+    """
+    from jax.sharding import NamedSharding
+
+    rspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
+    lspec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
+    espec = (P((MODEL_AXIS,) + batch_axes, None) if phase1_full_mesh
+             else P(MODEL_AXIS, None))
+    emb_shards = n_model * (n_batch_shards if phase1_full_mesh else 1)
+    state: dict = {"version": None}
+
+    def _refresh():
+        if state["version"] == engine.version:
+            return
+        if not engine.segments:
+            raise ValueError("segmented serve step needs a non-empty engine")
+        rbs, gs, rids, rw, live, embs, offs = [], [], [], [], [], [], []
+        for seg, lv in zip(engine.segments, engine._live):
+            rb_s, g_s, row_mult = _slab_geometry(
+                seg.n_rows, n_batch_shards, row_block, psum_batch, True)
+            lv_pad = np.zeros(
+                seg.n_rows + (-seg.n_rows) % row_mult, dtype=bool)
+            lv_pad[:seg.n_rows] = lv
+            rbs.append(rb_s)
+            gs.append(g_s)
+            rids.append(jax.device_put(
+                _pad_rows_mult(seg.tensors.r_ids, row_mult),
+                NamedSharding(mesh, rspec)))
+            rw.append(jax.device_put(
+                _pad_rows_mult(seg.tensors.r_w, row_mult),
+                NamedSharding(mesh, rspec)))
+            live.append(jax.device_put(
+                jnp.asarray(lv_pad), NamedSharding(mesh, lspec)))
+            embs.append(jax.device_put(
+                _pad_rows_mult(seg.tensors.emb_r, emb_shards),
+                NamedSharding(mesh, espec)))
+            offs.append(seg.offset)
+        state["step"] = _segmented_step(
+            mesh, kc=kc, rbs=tuple(rbs), gs=tuple(gs),
+            self_exclude=self_exclude, bf16_matmul=bf16_matmul,
+            phase1_full_mesh=phase1_full_mesh)
+        state["rids"] = tuple(rids)
+        state["rw"] = tuple(rw)
+        state["live"] = tuple(live)
+        state["embs"] = tuple(embs)
+        state["offs"] = jnp.asarray(offs, dtype=jnp.int32)
+        # Tier-2 WCD shortlist: per-segment centroids from the pre-gathered
+        # resident embeddings; tombstoned rows sit at distance ~1e18 so the
+        # shortlist can never surface them.
+        cents = []
+        for seg in engine.segments:
+            n_rows, h1 = seg.docs.ids.shape
+            c = jnp.einsum("nh,nhm->nm", seg.docs.weights,
+                           seg.tensors.t_r.reshape(n_rows, h1, -1))
+            cents.append(c[:seg.n_real])
+        cent = jnp.concatenate(cents, axis=0)
+        state["cent"] = jnp.where(
+            engine.live_mask_device()[:, None], cent, 1e18)
+        state["version"] = engine.version
+
+    def serve(queries: DocSet, query_ids=None, *, tier: int = 0) -> ServeResult:
+        """Tiered segmented serve (same ladder as the monolithic step)."""
+        if self_exclude and query_ids is None:
+            raise ValueError("self_exclude serve step needs query_ids (B,)")
+        tier = int(tier)
+        _refresh()
+        t_q = engine.gather_queries(queries.ids)
+        q_valid = (queries.weights > 0).astype(jnp.float32)
+        q_gid = (jnp.asarray(query_ids, jnp.int32) if self_exclude
+                 else jnp.full((queries.n_docs,), -1, jnp.int32))
+        if tier >= 2:  # QualityTier.WCD
+            tk = _wcd_topk_step(k, self_exclude, state["cent"], t_q,
+                                queries.weights, q_gid)
+            return ServeResult(topk=tk, d_local=None, pruned_exact=None,
+                               tier=tier)
+        tk = state["step"](state["rids"], state["rw"], state["live"],
+                           state["offs"], t_q, q_valid, q_gid, state["embs"])
+        if tier >= 1:  # QualityTier.LCRWMD: candidates ARE the answer
+            return ServeResult(
+                topk=TopK(tk.dists[:, :k], tk.indices[:, :k]),
+                d_local=None, pruned_exact=None, tier=tier)
+        cand_max_rwmd = tk.dists[:, -1]
+        exact = None
+        if refine:
+            tk = _symmetric_refine(
+                engine.resident, queries, engine.emb_full, tk)
+        if rerank_wmd:
+            tk = engine.rerank_topk(queries, tk.indices, k,
+                                    sinkhorn_kw=wmd_kw)
+            exact = cand_max_rwmd >= tk.dists[:, -1]
+            if kc >= engine.n_live:  # candidates cover every live doc
+                exact = jnp.ones_like(exact)
+        return ServeResult(topk=tk, d_local=None, pruned_exact=exact)
 
     return serve
 

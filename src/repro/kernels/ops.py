@@ -257,6 +257,7 @@ def streaming_phase2_topk(
     *,
     row_block: int = 128,
     q_gid: Array | None = None,  # (B,) global ids to self-exclude, or None
+    row_valid: Array | None = None,  # (n,) bool row mask (tombstones), or None
 ) -> tuple[Array, Array]:
     """Phase-2 ELL SpMM streamed straight into a per-query top-k carry.
 
@@ -266,6 +267,10 @@ def streaming_phase2_topk(
     the (n, B) matrix never materializes (peak live slab: (R, B)).  Returns
     ``(dists (B, k), indices (B, k))``, exactly equal (ties included) to
     ``lax.top_k`` over the materialized matrix.
+
+    ``row_valid`` masks individual resident rows to +inf (the segmented
+    engine's tombstones): a traced array argument, so flipping entries never
+    re-compiles.  ``row_valid=None`` and an all-True mask are exactly equal.
     """
     from repro.core.topk import StreamingTopK
 
@@ -277,20 +282,27 @@ def streaming_phase2_topk(
     ids_b = _pad_to(r_ids, nb * r, axis=0).reshape(nb, r, h1)
     w_b = _pad_to(r_w.astype(jnp.float32), nb * r, axis=0).reshape(nb, r, h1)
     los = jnp.arange(nb, dtype=jnp.int32) * r
+    if row_valid is not None:
+        valid_b = _pad_to(row_valid, nb * r, axis=0).reshape(nb, r)
+        xs = (ids_b, w_b, los, valid_b)
+    else:
+        xs = (ids_b, w_b, los, None)
 
     stk = StreamingTopK(kk)
 
     def body(carry, xs):
-        ids_blk, w_blk, lo = xs
+        ids_blk, w_blk, lo, valid_blk = xs
         zg = z[ids_blk]                              # (R, h1, B)
         d_blk = jnp.einsum("rh,rhb->rb", w_blk, zg)  # (R, B)
         row = lo + jnp.arange(r, dtype=jnp.int32)
         d_blk = jnp.where((row < n)[:, None], d_blk, jnp.inf)
+        if valid_blk is not None:
+            d_blk = jnp.where(valid_blk[:, None], d_blk, jnp.inf)
         if q_gid is not None:
             d_blk = jnp.where(row[:, None] == q_gid[None, :], jnp.inf, d_blk)
         return stk.update_cols(carry, d_blk, row), None
 
-    carry, _ = jax.lax.scan(body, stk.init(b), (ids_b, w_b, los))
+    carry, _ = jax.lax.scan(body, stk.init(b), xs)
     return carry.dists, carry.indices
 
 

@@ -9,6 +9,11 @@ modes for the degradation tiers, the typed error contract
 Deterministic fault injection lives in :mod:`repro.serving.faults`.
 """
 
+from repro.serving.corpus_manager import (
+    DEFAULT_CORPUS,
+    CorpusManager,
+    CorpusState,
+)
 from repro.serving.errors import (
     DeadlineExceeded,
     PoisonQuery,
@@ -28,7 +33,8 @@ from repro.serving.query_server import (
 )
 
 __all__ = [
-    "ALL", "Answer", "AsyncQueryServer", "DeadlineExceeded",
+    "ALL", "Answer", "AsyncQueryServer", "CorpusManager", "CorpusState",
+    "DEFAULT_CORPUS", "DeadlineExceeded",
     "DegradationController", "FaultInjector", "FaultPlan",
     "InjectedWorkerCrash", "PoisonQuery", "QueryRejected", "QueryServer",
     "ServeFuture", "ServerClosed", "ServerConfig", "ServingError",

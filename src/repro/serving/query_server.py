@@ -73,10 +73,15 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.lc_rwmd import LCRWMDEngine
+from repro.core.lc_rwmd import SegmentedEngine
 from repro.core.pipeline import AdaptiveRefineBudget
 from repro.data.docs import DocSet, make_docset
 from repro.distributed.lcrwmd_dist import ServeResult, build_serve_step
+from repro.serving.corpus_manager import (
+    DEFAULT_CORPUS,
+    CorpusManager,
+    CorpusState,
+)
 from repro.serving.errors import (
     DeadlineExceeded,
     PoisonQuery,
@@ -134,6 +139,11 @@ class ServerConfig:
     fail_streak_down: int = 2          # consecutive stage failures before down-step
     max_tier: int = 2                  # deepest shed (2 = WCD shortlist)
     max_worker_restarts: int = 3       # supervisor gives up past this
+    # Corpus lifecycle / multi-tenancy (CorpusManager):
+    cache_bytes: int | None = None     # device-byte LRU budget; None = no evict
+    delta_pad: int | None = 64         # round ingest deltas for trace reuse
+    vocab_pad: int | None = None       # round per-segment v_e for trace reuse
+    dedup_threshold: float | None = None  # default near-dup ingest gate
 
 
 @dataclasses.dataclass
@@ -220,6 +230,7 @@ class _InFlight(NamedTuple):
     qs: tuple = ()       # the real query histograms (validation retries)
     tier: int = 0        # degradation tier the batch was served at
     t0: float = 0.0      # dispatch wall-clock (latency EWMA)
+    state: Any = None    # CorpusState the batch was served against
 
 
 def _check_query(ids, weights) -> None:
@@ -241,7 +252,7 @@ def _as_serving_error(e: BaseException, context: str) -> ServingError:
 
 
 class _ServeCore:
-    """Shared serving core: engine, serve step, host batching, budget.
+    """Shared serving core: corpus cache, serve steps, host batching, budgets.
 
     ``dispatch`` is the non-blocking half (host prep + serve-step call —
     JAX async dispatch returns device futures); ``collect`` is the blocking
@@ -250,6 +261,13 @@ class _ServeCore:
     pipeline keeps up to ``pipeline_depth`` dispatched batches open between
     them.  An optional :class:`DegradationController` picks the serve tier
     per dispatch; an optional fault injector exercises the failure paths.
+
+    Corpora live in a :class:`CorpusManager` (LRU engine cache with
+    device-byte eviction).  Each batch is served against ONE corpus — the
+    ``corpus_id`` of its queries — through that corpus's own compiled
+    serve step and adaptive budget; the ``engine`` / ``budget`` /
+    ``_serve`` attributes view the ACTIVE (most recently dispatched)
+    corpus, which is the default corpus for single-tenant callers.
     """
 
     def __init__(self, resident: DocSet, emb, mesh, cfg: ServerConfig,
@@ -264,19 +282,20 @@ class _ServeCore:
             faults = FaultInjector(faults)
         self.faults = faults
         # All resident-side prep (vocab restriction, padding, placement on
-        # the mesh, resident-embedding gathers) happens ONCE here; per-flush
-        # work is only the transient query batch.  The WMD re-rank (when
-        # enabled) runs INSIDE the serve step as one fused batched Sinkhorn
-        # call over the LC-RWMD top-budget candidates — no second full pass.
+        # the mesh, resident-embedding gathers) happens ONCE per corpus
+        # (and once per ingested delta SEGMENT — O(delta), not O(corpus));
+        # per-flush work is only the transient query batch.  The WMD
+        # re-rank (when enabled) runs INSIDE the serve step as one fused
+        # batched Sinkhorn call over the LC-RWMD top-budget candidates.
         # Candidate selection streams through the phase-2 accumulator
-        # (StreamingTopK): the (n_shard, B) distance block never reaches HBM
-        # on the flush hot path.
-        self.engine = LCRWMDEngine(resident, self.emb)
-        self.budget: AdaptiveRefineBudget | None = None
-        if cfg.rerank_wmd and cfg.adaptive_budget:
-            self.budget = AdaptiveRefineBudget(
-                k=cfg.k, n_resident=resident.n_docs, init=2 * cfg.k,
-                decay_after=cfg.budget_decay_after)
+        # (StreamingTopK): the (n_shard, B) distance block never reaches
+        # HBM on the flush hot path.
+        self.manager = CorpusManager(
+            self.emb, cache_bytes=cfg.cache_bytes,
+            engine_kw=dict(delta_pad=cfg.delta_pad, vocab_pad=cfg.vocab_pad),
+            make_budget=self._make_budget,
+            dedup_threshold=cfg.dedup_threshold)
+        self._active = self.manager.add_corpus(DEFAULT_CORPUS, resident)
         self._serve = self._build_serve(
             self.budget.budget if self.budget else 2 * cfg.k)
         self.stats = {"queries": 0, "batches": 0, "wmd_reranks": 0,
@@ -287,7 +306,9 @@ class _ServeCore:
                       "poisoned_queries": 0, "deadline_misses": 0,
                       "worker_restarts": 0,
                       "stream_failures": 0, "dropped_queries": 0,
-                      "ewma_latency_s": 0.0}
+                      "corpus_switches": 0,
+                      "ewma_latency_s": 0.0,
+                      "cache": self.manager.stats}
         if self.budget is not None:
             self.stats["budget_trajectory"].append(self.budget.budget)
         self.controller: DegradationController | None = None
@@ -302,13 +323,68 @@ class _ServeCore:
         # events — the overlap tests assert dispatch(i+1) precedes collect(i).
         self.trace: list[tuple[str, int]] | None = None
 
+    # -- active-corpus views -----------------------------------------------
+    @property
+    def engine(self) -> SegmentedEngine:
+        return self._active.engine
+
+    @property
+    def budget(self) -> AdaptiveRefineBudget | None:
+        return self._active.budget
+
+    @property
+    def _serve(self):
+        st = self._active
+        if st.serve is None:   # first use, or readmitted after eviction
+            st.serve = self._build_serve(
+                st.budget.budget if st.budget else 2 * self.cfg.k)
+        return st.serve
+
+    @_serve.setter
+    def _serve(self, fn):
+        self._active.serve = fn
+
+    def _make_budget(self, engine) -> AdaptiveRefineBudget | None:
+        cfg = self.cfg
+        if cfg.rerank_wmd and cfg.adaptive_budget:
+            return AdaptiveRefineBudget(
+                k=cfg.k, n_resident=max(1, engine.n_live), init=2 * cfg.k,
+                decay_after=cfg.budget_decay_after)
+        return None
+
     def _build_serve(self, rerank_budget: int):
+        # The segmented serve step is streaming-only, so the serving path
+        # always fuses selection (cfg.streaming_topk remains a knob for the
+        # monolithic/diagnostic entry points).
         cfg = self.cfg
         return build_serve_step(
             self._mesh, k=cfg.k, refine=cfg.refine_symmetric,
             bf16_matmul=False, engine=self.engine, rerank_wmd=cfg.rerank_wmd,
             rerank_budget=rerank_budget, wmd_kw=cfg.wmd_kw,
-            streaming=cfg.streaming_topk)
+            streaming=True)
+
+    def _activate(self, corpus_id: str | None) -> CorpusState:
+        """Check out (readmitting if evicted) and make a corpus active."""
+        st = self.manager.checkout(corpus_id or DEFAULT_CORPUS)
+        if st is not self._active:
+            self._active = st
+            self.stats["corpus_switches"] += 1
+        return st
+
+    # -- corpus lifecycle (admissible between batches; manager-locked) -----
+    def add_corpus(self, corpus_id: str, docs: DocSet) -> None:
+        self.manager.add_corpus(corpus_id, docs)
+
+    def ingest(self, docs: DocSet, *, corpus_id: str | None = None,
+               dedup_threshold: float | None = None):
+        return self.manager.ingest(corpus_id or DEFAULT_CORPUS, docs,
+                                   dedup_threshold=dedup_threshold)
+
+    def delete_docs(self, doc_ids, *, corpus_id: str | None = None) -> int:
+        return self.manager.delete_docs(corpus_id or DEFAULT_CORPUS, doc_ids)
+
+    def compact(self, corpus_id: str | None = None) -> None:
+        self.manager.compact(corpus_id or DEFAULT_CORPUS)
 
     def pad_batch(self, qs: Sequence[tuple[np.ndarray, np.ndarray]]) -> DocSet:
         """Host prep: pad ≤max_batch histograms to the FIXED (max_batch, h)
@@ -344,13 +420,20 @@ class _ServeCore:
         return res
 
     def dispatch(self, qs: Sequence[tuple[np.ndarray, np.ndarray]], *,
-                 queue_depth: int = 0) -> _InFlight:
+                 queue_depth: int = 0,
+                 corpus_id: str | None = None) -> _InFlight:
         """Host-prep one ≤max_batch chunk and launch it on the device.
 
         Returns immediately with device handles (JAX async dispatch): the
         returned :class:`_InFlight` must be passed to :meth:`collect` to
         block for and deliver the answers.  With degradation enabled the
         controller picks the tier from ``queue_depth`` pressure.
+
+        The batch is served against ONE corpus (``corpus_id``, default
+        corpus when None) — batching upstream never mixes corpora.  The
+        manager lock is held across activation + serve-step launch so a
+        concurrent ingest/delete/compact lands between batches, never
+        mid-dispatch.
         """
         tier = 0
         if self.controller is not None:
@@ -359,7 +442,9 @@ class _ServeCore:
         if self.trace is not None:
             self.trace.append(("dispatch", seq))
         t0 = time.perf_counter()
-        res = self._raw_serve(qs, tier, seq)
+        with self.manager.lock:
+            state = self._activate(corpus_id)
+            res = self._raw_serve(qs, tier, seq)
         self.stats["queries"] += len(qs)
         self.stats["batches"] += 1
         self.stats["tier_counts"][min(tier, 2)] += 1
@@ -368,7 +453,7 @@ class _ServeCore:
         if self.cfg.rerank_wmd and tier == 0:
             self.stats["wmd_reranks"] += len(qs)
         return _InFlight(result=res, n_real=len(qs), seq=seq,
-                         qs=tuple(qs), tier=tier, t0=t0)
+                         qs=tuple(qs), tier=tier, t0=t0, state=state)
 
     def collect(self, inflight: _InFlight) -> list:
         """Block for one dispatched batch; validate + deliver answers.
@@ -388,6 +473,11 @@ class _ServeCore:
         a :class:`ServingError` instance (quarantined poison).
         """
         res, n_real, tier = inflight.result, inflight.n_real, inflight.tier
+        if inflight.state is not None:
+            # Budget feedback, rebuilds, and validation retries must hit the
+            # corpus this batch was served against, not whichever corpus a
+            # later pipelined dispatch activated.
+            self._active = inflight.state
         tk_i = np.asarray(res.topk.indices)   # blocks on the device result
         tk_d = np.asarray(res.topk.dists)
         if self.trace is not None:
@@ -489,7 +579,9 @@ class QueryServer:
                  faults=None):
         self._core = _ServeCore(resident, emb, mesh, cfg, faults=faults)
         self._preprocess = preprocess
-        self._pending: list[tuple[np.ndarray, np.ndarray, float | None]] = []
+        # Pending entries: (ids, weights, absolute deadline|None, corpus_id).
+        self._pending: list[
+            tuple[np.ndarray, np.ndarray, float | None, str]] = []
 
     # -- shared-core views (kept as attributes of record for tests/tools) --
     @property
@@ -505,7 +597,7 @@ class QueryServer:
         return self._core.cfg
 
     @property
-    def engine(self) -> LCRWMDEngine:
+    def engine(self) -> SegmentedEngine:
         return self._core.engine
 
     @property
@@ -528,8 +620,34 @@ class QueryServer:
     def _build_serve(self, rerank_budget: int):
         return self._core._build_serve(rerank_budget)
 
+    # -- corpus lifecycle --------------------------------------------------
+    def add_corpus(self, corpus_id: str, docs: DocSet) -> None:
+        """Admit a new tenant corpus under ``corpus_id``."""
+        self._core.add_corpus(corpus_id, docs)
+
+    def ingest(self, docs: DocSet, *, corpus_id: str | None = None,
+               dedup_threshold: float | None = None):
+        """Append docs to a corpus as one delta segment (O(delta) build).
+
+        Returns ``(global_ids, admitted_mask)``; with a dedup threshold
+        (explicit or ``cfg.dedup_threshold``) near-duplicates of live docs
+        are gated out first.  Admissible between batches — no rebuild, no
+        re-trace for repeat delta shapes.
+        """
+        return self._core.ingest(docs, corpus_id=corpus_id,
+                                 dedup_threshold=dedup_threshold)
+
+    def delete_docs(self, doc_ids, *, corpus_id: str | None = None) -> int:
+        """Tombstone global doc ids; dead docs never appear in answers."""
+        return self._core.delete_docs(doc_ids, corpus_id=corpus_id)
+
+    def compact(self, corpus_id: str | None = None) -> None:
+        """Merge delta segments into one base segment (stable global ids)."""
+        self._core.compact(corpus_id)
+
     # -- request path ------------------------------------------------------
-    def submit(self, ids, weights=None, *, deadline: float | None = None):
+    def submit(self, ids, weights=None, *, deadline: float | None = None,
+               corpus_id: str | None = None):
         """Queue one query histogram (padded to h_max by the caller/vectorizer).
 
         With a ``preprocess`` hook installed, a single raw payload may be
@@ -538,7 +656,9 @@ class QueryServer:
 
         ``deadline`` is a relative budget in seconds; an already-expired
         deadline raises :class:`QueryRejected` (with admission control), a
-        zero-mass histogram raises :class:`PoisonQuery`.
+        zero-mass histogram raises :class:`PoisonQuery`.  ``corpus_id``
+        routes the query to a tenant corpus (default corpus when None); an
+        unknown id raises :class:`QueryRejected` at submit.
         """
         if self._preprocess is not None and weights is None:
             try:
@@ -552,16 +672,20 @@ class QueryServer:
                 "submit(ids, weights) needs explicit weights unless a "
                 "preprocess hook is installed (raw-payload submission)")
         _check_query(ids, weights)
+        cid = corpus_id or DEFAULT_CORPUS
+        if not self._core.manager.has_corpus(cid):
+            raise QueryRejected(f"unknown corpus {cid!r}")
         abs_deadline = None
         if deadline is not None:
             abs_deadline = time.monotonic() + float(deadline)
             if self.cfg.admission_control and float(deadline) <= 0:
                 raise QueryRejected(
                     f"deadline {deadline!r}s already expired at submit")
-        self._pending.append((ids, weights, abs_deadline))
+        self._pending.append((ids, weights, abs_deadline, cid))
 
-    def _flush_chunk(self, qs: list[tuple[np.ndarray, np.ndarray, float | None]]):
-        """Serve one ≤max_batch chunk at the FIXED (max_batch, h) shape.
+    def _flush_chunk(self, qs: list, corpus_id: str):
+        """Serve one ≤max_batch same-corpus chunk at the FIXED
+        (max_batch, h) shape.
 
         Expired entries are not dispatched; their slots carry a
         :class:`DeadlineExceeded` instance in the returned list.
@@ -579,7 +703,8 @@ class QueryServer:
         if live:
             answers = self._core.collect(
                 self._core.dispatch([qs[j][:2] for j in live],
-                                    queue_depth=len(self._pending)))
+                                    queue_depth=len(self._pending),
+                                    corpus_id=corpus_id))
             for j, a in zip(live, answers):
                 out[j] = a
         return out
@@ -589,14 +714,22 @@ class QueryServer:
 
         Pending queries are chunked into fixed ``max_batch``-sized serve
         calls, so an overflow (> max_batch pending) never compiles a new
-        batch shape.  Entries may be typed :class:`ServingError` instances
+        batch shape.  A chunk never mixes corpora: contiguous runs of the
+        same ``corpus_id`` dispatch together, preserving positional answer
+        order.  Entries may be typed :class:`ServingError` instances
         (expired deadline, quarantined poison) — positionally, so
         batch-mates are never lost.
         """
         qs, self._pending = self._pending, []
         out = []
-        for lo in range(0, len(qs), self.cfg.max_batch):
-            out.extend(self._flush_chunk(qs[lo : lo + self.cfg.max_batch]))
+        lo = 0
+        while lo < len(qs):
+            hi = lo + 1
+            while (hi < len(qs) and hi - lo < self.cfg.max_batch
+                   and qs[hi][3] == qs[lo][3]):
+                hi += 1
+            out.extend(self._flush_chunk(qs[lo:hi], qs[lo][3]))
+            lo = hi
         return out
 
     def serve_stream(self, stream):
@@ -707,8 +840,10 @@ class AsyncQueryServer:
         self._not_full = threading.Condition(self._lock)   # submit backpressure
         self._work = threading.Condition(self._lock)       # worker wake-up
         self._idle = threading.Condition(self._lock)       # drain wait
-        # Queue entries: (payload, future, absolute monotonic deadline|None).
-        self._queue: deque[tuple[QueryLike, ServeFuture, float | None]] = deque()
+        # Queue entries:
+        # (payload, future, absolute monotonic deadline|None, corpus_id).
+        self._queue: deque[
+            tuple[QueryLike, ServeFuture, float | None, str]] = deque()
         self._inflight: deque = deque()  # (_InFlight, futures, deadlines)
         self._batch_t0: float | None = None  # arrival of oldest pending query
         self._flush_requested = False
@@ -731,7 +866,7 @@ class AsyncQueryServer:
         return self._core.cfg
 
     @property
-    def engine(self) -> LCRWMDEngine:
+    def engine(self) -> SegmentedEngine:
         return self._core.engine
 
     @property
@@ -750,9 +885,34 @@ class AsyncQueryServer:
     def _serve(self, fn):
         self._core._serve = fn
 
+    # -- corpus lifecycle (admissible between batches) ---------------------
+    def add_corpus(self, corpus_id: str, docs: DocSet) -> None:
+        """Admit a new tenant corpus under ``corpus_id``."""
+        self._core.add_corpus(corpus_id, docs)
+
+    def ingest(self, docs: DocSet, *, corpus_id: str | None = None,
+               dedup_threshold: float | None = None):
+        """Append docs as one delta segment; returns (gids, admitted).
+
+        Safe to call while the pipeline is serving: the manager lock
+        serializes it against dispatch, so it lands BETWEEN batches, and
+        the serve step picks the new segment up on its next call (no
+        rebuild; repeat delta shapes reuse the compiled trace).
+        """
+        return self._core.ingest(docs, corpus_id=corpus_id,
+                                 dedup_threshold=dedup_threshold)
+
+    def delete_docs(self, doc_ids, *, corpus_id: str | None = None) -> int:
+        """Tombstone global doc ids; dead docs never appear in answers."""
+        return self._core.delete_docs(doc_ids, corpus_id=corpus_id)
+
+    def compact(self, corpus_id: str | None = None) -> None:
+        """Merge delta segments into one base segment (stable ids)."""
+        self._core.compact(corpus_id)
+
     # -- producer API ------------------------------------------------------
-    def submit(self, ids, weights=None, *,
-               deadline: float | None = None) -> ServeFuture:
+    def submit(self, ids, weights=None, *, deadline: float | None = None,
+               corpus_id: str | None = None) -> ServeFuture:
         """Enqueue one query; returns its :class:`ServeFuture` immediately.
 
         Accepts either ``(ids, weights)`` numpy histograms or — with a
@@ -767,11 +927,16 @@ class AsyncQueryServer:
         deadline is already expired or passes while waiting for queue
         capacity; zero-mass histograms raise :class:`PoisonQuery`; a closed
         server raises :class:`ServerClosed` (a ``RuntimeError``).
+        ``corpus_id`` routes the query to a tenant corpus (default corpus
+        when None); an unknown id raises :class:`QueryRejected` at submit.
         """
         if self._preprocess is None and weights is None:
             raise ValueError(
                 "submit(ids, weights) needs explicit weights unless a "
                 "preprocess hook is installed (raw-payload submission)")
+        cid = corpus_id or DEFAULT_CORPUS
+        if not self._core.manager.has_corpus(cid):
+            raise QueryRejected(f"unknown corpus {cid!r}")
         abs_deadline = None
         if deadline is not None:
             abs_deadline = time.monotonic() + float(deadline)
@@ -800,7 +965,7 @@ class AsyncQueryServer:
                 raise ServerClosed("submit() on a closed AsyncQueryServer")
             if not self._queue:
                 self._batch_t0 = time.perf_counter()
-            self._queue.append((payload, fut, abs_deadline))
+            self._queue.append((payload, fut, abs_deadline, cid))
             self._n_unanswered += 1
             self._work.notify_all()
         return fut
@@ -868,6 +1033,8 @@ class AsyncQueryServer:
                 "queries": s["queries"],
                 "batches": s["batches"],
                 "ewma_latency_s": s["ewma_latency_s"],
+                "corpus_switches": s["corpus_switches"],
+                "cache": self._core.manager.snapshot(),
             }
 
     def __enter__(self) -> "AsyncQueryServer":
@@ -894,12 +1061,13 @@ class AsyncQueryServer:
         if not self._queue:
             return []
         now = time.monotonic()
-        if not any(d is not None and d <= now for _p, _f, d in self._queue):
+        if not any(d is not None and d <= now
+                   for _p, _f, d, _c in self._queue):
             return []
         keep: deque = deque()
         expired = []
         for entry in self._queue:
-            _p, fut, dl = entry
+            _p, fut, dl, _c = entry
             if dl is not None and dl <= now:
                 expired.append(fut)
             else:
@@ -929,15 +1097,22 @@ class AsyncQueryServer:
                     mono = time.monotonic()
                     stale = (self._batch_t0 is not None
                              and now - self._batch_t0 >= cfg.max_wait_s)
-                    dls = [d for _p, _f, d in self._queue if d is not None]
+                    dls = [d for _p, _f, d, _c in self._queue
+                           if d is not None]
                     # Rush: dispatch the partial batch early when the
                     # earliest deadline is one serve-latency away.
                     rush = bool(dls) and (
                         min(dls) - mono <= self._rush_margin())
                     if (len(self._queue) >= cfg.max_batch or stale or rush
                             or self._flush_requested or self._closed):
+                        # A batch never mixes corpora: take the longest
+                        # same-corpus prefix (FIFO order preserved).
                         take = min(len(self._queue), cfg.max_batch)
-                        items = [self._queue.popleft() for _ in range(take)]
+                        cid = self._queue[0][3]
+                        n = 1
+                        while n < take and self._queue[n][3] == cid:
+                            n += 1
+                        items = [self._queue.popleft() for _ in range(n)]
                         if self._queue:
                             # Remaining queries start a fresh staleness clock.
                             self._batch_t0 = now
@@ -1008,7 +1183,7 @@ class AsyncQueryServer:
         Returns (qs, futures, deadlines) for the healthy queries.
         """
         qs, futs, dls, errs = [], [], [], []
-        for payload, fut, dl in entries:
+        for payload, fut, dl, _c in entries:
             idx, self._prep_idx = self._prep_idx, self._prep_idx + 1
             try:
                 if self._core.faults is not None:
@@ -1079,7 +1254,8 @@ class AsyncQueryServer:
                         depth = len(self._queue)
                     self._crash_victims = futures
                     try:
-                        handle = self._core.dispatch(qs, queue_depth=depth)
+                        handle = self._core.dispatch(
+                            qs, queue_depth=depth, corpus_id=batch[0][3])
                     except Exception as e:  # typed forwarding; crashes escape
                         err = _as_serving_error(e, "batch dispatch failed")
                         self._crash_victims = []
@@ -1165,6 +1341,6 @@ class AsyncQueryServer:
         futs: list[ServeFuture] = list(self._crash_victims)
         for _h, bfuts, _d in dead:          # then in-flight (older first)...
             futs.extend(bfuts)
-        futs.extend(f for _p, f, _d in queued)  # ...then the queue (newer)
+        futs.extend(f for _p, f, _d, _c in queued)  # ...then the queue
         if futs:
             self._resolve(futs, [exc] * len(futs))

@@ -38,6 +38,7 @@ from repro.workloads.neighbors import (
     NeighborGraph,
     connected_components,
     duplicate_groups,
+    ingest_dedup_mask,
     knn_graph,
     near_duplicate_graph,
 )
@@ -49,5 +50,5 @@ __all__ = [
     "corpus_self_topk", "corpus_self_topk_distributed",
     "corpus_vs_corpus_topk",
     "NeighborGraph", "connected_components", "duplicate_groups",
-    "knn_graph", "near_duplicate_graph",
+    "ingest_dedup_mask", "knn_graph", "near_duplicate_graph",
 ]

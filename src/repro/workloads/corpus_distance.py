@@ -81,19 +81,31 @@ class SelfPairScheduler:
         self.tile = min(tile, self.n)
         self.starts = _tile_starts(self.n, self.tile)
         self._z: list[Array] = []  # phase-1 cache, one (v_e, tile) per tile
+        # Segmented engines carry tombstones: snapshot the live mask at
+        # construction (the phase-1 cache is a same-version snapshot anyway)
+        # and pass it as a TRACED argument so deletes elsewhere never force
+        # a re-trace of the block step.  A dead doc's row AND column are
+        # masked — it has no neighbors and is no one's neighbor.
+        self._live = (engine.live_mask_device()
+                      if hasattr(engine, "live_mask_device") else None)
         self._step = jax.jit(self._step_impl)
 
     def _tile_idx(self, lo: int) -> Array:
         # Global ids; the last tile runs past n and is masked downstream.
         return jnp.arange(lo, lo + self.tile, dtype=jnp.int32)
 
-    def _step_impl(self, z_s: Array, z_t: Array, idx_s: Array, idx_t: Array):
+    def _step_impl(self, z_s: Array, z_t: Array, idx_s: Array, idx_t: Array,
+                   live: Array | None = None):
         """max(D1[rows_s, cols_t], D1[rows_t, cols_s]ᵀ), masked."""
         b_st = self.engine._one_sided_rows_impl(idx_s, z_t)  # (tile, tile)
         b_ts = self.engine._one_sided_rows_impl(idx_t, z_s)  # (tile, tile)
         sym = jnp.maximum(b_st, b_ts.T)
         ri, ci = idx_s[:, None], idx_t[None, :]
         invalid = (ri == ci) | (ri >= self.n) | (ci >= self.n)
+        if live is not None:
+            lr = jnp.take(live, jnp.clip(idx_s, 0, self.n - 1))
+            lc = jnp.take(live, jnp.clip(idx_t, 0, self.n - 1))
+            invalid = invalid | (~lr[:, None]) | (~lc[None, :])
         return jnp.where(invalid, _INF, sym)
 
     def _z_tile(self, t: int) -> Array:
@@ -111,7 +123,8 @@ class SelfPairScheduler:
                 idx_s = self._tile_idx(self.starts[s])
                 yield TileBlock(
                     s=s, t=t, row_idx=idx_s, col_idx=idx_t,
-                    block=self._step(self._z[s], z_t, idx_s, idx_t),
+                    block=self._step(self._z[s], z_t, idx_s, idx_t,
+                                     self._live),
                     mirrored=s < t,
                 )
 
@@ -136,8 +149,9 @@ def corpus_self_topk(
     Returns a TopK of (n, k): ascending distances, global doc ids.
     """
     n = engine.resident.n_docs
-    if not 1 <= k <= n - 1:
-        raise ValueError(f"need 1 <= k <= n-1 = {n - 1}, got {k}")
+    n_eff = getattr(engine, "n_live", n)  # tombstones can't be neighbors
+    if not 1 <= k <= n_eff - 1:
+        raise ValueError(f"need 1 <= k <= n_live-1 = {n_eff - 1}, got {k}")
     sched = SelfPairScheduler(engine, tile=max(tile, k))
     stk = topk_lib.StreamingTopK(k)
     state = [stk.init(sched.tile) for _ in sched.starts]

@@ -155,6 +155,44 @@ def knn_graph(
     return _edges_to_csr([rows], [cols], [vals], n)
 
 
+def ingest_dedup_mask(
+    engine, docs, threshold: float, *, intra_batch: bool = True,
+) -> np.ndarray:
+    """(B,) bool gate for ingest: True where a doc is NOT a near-duplicate.
+
+    The serving layer's ingest path calls this before
+    :meth:`~repro.core.lc_rwmd.SegmentedEngine.append`: each incoming doc is
+    scored by symmetric LC-RWMD against the engine's live corpus (one engine
+    call — tombstoned docs are +inf and can't block an ingest), and docs
+    within ``threshold`` of an existing doc are dropped.  Because symmetric
+    LC-RWMD lower-bounds WMD, every true WMD near-duplicate is caught (no
+    false admits); some non-duplicates may be dropped, the usual trade of a
+    lower-bound prefilter.
+
+    ``intra_batch=True`` additionally de-dups WITHIN the batch (first
+    occurrence wins), so a batch containing its own near-copies admits one.
+
+    Pick ``threshold`` above the numeric noise floor: EXACT copies score
+    ~1e-3 (not 0) because phase-1 distances come from the matmul-form
+    ``||a||² + ||b||² − 2ab`` whose cancellation error survives the sqrt
+    (see the streaming-symmetric note in tests/test_streaming_topk.py);
+    thresholds ≥ 1e-2 are safely above it on real embeddings.
+    """
+    b = docs.n_docs
+    keep = np.ones(b, dtype=bool)
+    if getattr(engine, "n_live", engine.resident.n_docs if engine else 0):
+        d = np.asarray(engine.symmetric(docs))        # (n, B); dead rows +inf
+        keep &= d.min(axis=0) > threshold
+    if intra_batch and b > 1:
+        from repro.core.lc_rwmd import lc_rwmd_symmetric
+
+        dd = np.asarray(lc_rwmd_symmetric(docs, docs, engine.emb_full))
+        for j in range(1, b):
+            if keep[j] and bool((dd[:j, j][keep[:j]] <= threshold).any()):
+                keep[j] = False
+    return keep
+
+
 def connected_components(graph: NeighborGraph) -> np.ndarray:
     """(n,) int32 component label per doc — near-duplicate groups."""
     n = graph.n_docs

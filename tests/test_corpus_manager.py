@@ -1,0 +1,231 @@
+"""Multi-tenant serving: CorpusManager LRU cache, dedup ingest gate,
+per-corpus adaptive budgets, and corpus_id routing on both servers."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.lc_rwmd import SegmentedEngine
+from repro.core.pipeline import AdaptiveRefineBudget
+from repro.data.docs import DocSet
+from repro.data.synth import CorpusSpec, make_corpus
+from repro.launch.mesh import make_host_mesh
+from repro.serving import (
+    DEFAULT_CORPUS,
+    AsyncQueryServer,
+    CorpusManager,
+    QueryRejected,
+    QueryServer,
+    ServerConfig,
+)
+
+K = 4
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(CorpusSpec(
+        n_docs=256, vocab_size=512, emb_dim=48, h_max=16, mean_h=8.0,
+        n_classes=4, seed=9,
+    ))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+def _slice(docs: DocSet, lo: int, hi: int) -> DocSet:
+    return DocSet(ids=docs.ids[lo:hi], weights=docs.weights[lo:hi])
+
+
+def _tenants(corpus, n=3, size=64):
+    return {f"t{t}": _slice(corpus.docs, t * size, (t + 1) * size)
+            for t in range(n)}
+
+
+# --------------------------------------------------------------------------
+# CorpusManager
+# --------------------------------------------------------------------------
+
+def test_checkout_unknown_corpus_raises(corpus):
+    mgr = CorpusManager(corpus.emb)
+    mgr.add_corpus("a", _slice(corpus.docs, 0, 32))
+    with pytest.raises(KeyError, match="ghost"):
+        mgr.checkout("ghost")
+    with pytest.raises(ValueError, match="already exists"):
+        mgr.add_corpus("a", _slice(corpus.docs, 0, 32))
+
+
+def test_lru_eviction_and_readmission_preserves_answers(corpus):
+    mgr = CorpusManager(corpus.emb)
+    for cid, docs in _tenants(corpus).items():
+        mgr.add_corpus(cid, docs)
+    st0 = mgr.checkout("t0")
+    st0.engine.delete([3])   # tombstones must survive the round-trip
+    queries = _slice(corpus.docs, 0, 8)
+    before = st0.engine.topk(queries, K)
+
+    one = st0.nbytes
+    mgr.cache_bytes = 2 * one + one // 2   # room for two tenants
+    mgr.checkout("t1"), mgr.checkout("t2")  # t0 becomes LRU
+    mgr._enforce_budget(keep="t2")
+    assert not mgr.is_resident("t0") and mgr.stats["evictions"] == 1
+    assert mgr.has_corpus("t0")             # evicted, but still known
+    assert "t0" in mgr.snapshot()["evicted"]
+    assert mgr.resident_bytes <= mgr.cache_bytes
+
+    st0b = mgr.checkout("t0")               # readmission (evicts the LRU)
+    assert mgr.stats["readmissions"] == 1 and mgr.stats["misses"] == 1
+    assert st0b.engine.n_live == 63 and not st0b.engine.live_mask()[3]
+    after = st0b.engine.topk(queries, K)
+    np.testing.assert_array_equal(np.asarray(before.indices),
+                                  np.asarray(after.indices))
+    np.testing.assert_allclose(np.asarray(before.dists),
+                               np.asarray(after.dists), atol=1e-5)
+
+
+def test_byte_accounting_tracks_engines(corpus):
+    mgr = CorpusManager(corpus.emb)
+    tenants = _tenants(corpus, n=2)
+    for cid, docs in tenants.items():
+        mgr.add_corpus(cid, docs)
+    assert mgr.resident_bytes == sum(
+        mgr.checkout(cid).engine.nbytes for cid in tenants)
+    mgr.ingest("t0", _slice(corpus.docs, 200, 216))
+    assert mgr.checkout("t0").nbytes > mgr.checkout("t1").nbytes
+
+
+def test_ingest_dedup_gate(corpus):
+    mgr = CorpusManager(corpus.emb, dedup_threshold=0.05)
+    mgr.add_corpus("a", _slice(corpus.docs, 0, 64))
+    fresh = _slice(corpus.docs, 100, 102)
+    dup = _slice(corpus.docs, 7, 8)          # exact copy of a live doc
+    batch = DocSet(ids=jnp.concatenate([fresh.ids, dup.ids]),
+                   weights=jnp.concatenate([fresh.weights, dup.weights]))
+    gids, keep = mgr.ingest("a", batch)
+    np.testing.assert_array_equal(keep, [True, True, False])
+    np.testing.assert_array_equal(gids, [64, 65])
+    assert mgr.stats["deduped_docs"] == 1
+    # A copy of a TOMBSTONED doc is not a duplicate anymore.
+    mgr.delete_docs("a", [7])
+    gids2, keep2 = mgr.ingest("a", _slice(corpus.docs, 7, 8))
+    np.testing.assert_array_equal(keep2, [True])
+    assert gids2[0] == 66
+
+
+def test_per_corpus_budget_isolation_and_lifecycle_wiring(corpus):
+    made = []
+
+    def make_budget(engine):
+        b = AdaptiveRefineBudget(k=K, n_resident=engine.n_live, init=2 * K,
+                                 decay_after=2)
+        made.append(b)
+        return b
+
+    mgr = CorpusManager(corpus.emb, make_budget=make_budget)
+    sa = mgr.add_corpus("a", _slice(corpus.docs, 0, 64))
+    sb = mgr.add_corpus("b", _slice(corpus.docs, 64, 128))
+    assert len(made) == 2 and sa.budget is not sb.budget
+
+    # A failure on tenant a pins ITS decay floor only.
+    sa.budget.update(np.zeros(8, dtype=bool))
+    assert sa.budget.failed_budget > 0 and sb.budget.failed_budget == 0
+
+    # Ingest re-anchors the owning corpus's controller (clamp + floor reset).
+    mgr.ingest("a", _slice(corpus.docs, 128, 144))
+    assert sa.budget.n_resident == 80 and sa.budget.failed_budget == 0
+    assert sb.budget.n_resident == 64
+
+    # Eviction/readmission resets the (stale) decay floor.
+    sb.budget.update(np.zeros(8, dtype=bool))
+    mgr.evict("b")
+    sb2 = mgr.checkout("b")
+    assert sb2.budget is sb.budget and sb2.budget.failed_budget == 0
+
+
+# --------------------------------------------------------------------------
+# Server routing
+# --------------------------------------------------------------------------
+
+def _top1(answer) -> int:
+    ids, dists = answer
+    return int(np.asarray(ids)[0])
+
+
+def test_query_server_routes_corpora(corpus, mesh):
+    docs = corpus.docs
+    cfg = ServerConfig(k=K, max_batch=4, h_max=docs.h_max)
+    server = QueryServer(_slice(docs, 0, 64), corpus.emb, mesh, cfg)
+    server.add_corpus("t2", _slice(docs, 64, 128))
+
+    with pytest.raises(QueryRejected, match="unknown corpus"):
+        server.submit(np.asarray(docs.ids[0]), np.asarray(docs.weights[0]),
+                      corpus_id="ghost")
+
+    # Interleaved tenants in one flush: each query's top-1 is its own row
+    # in ITS corpus's global id space (global row 64+j == t2-local j).
+    for j in range(3):
+        server.submit(np.asarray(docs.ids[j]), np.asarray(docs.weights[j]))
+        server.submit(np.asarray(docs.ids[64 + j]),
+                      np.asarray(docs.weights[64 + j]), corpus_id="t2")
+    answers = server.flush()
+    assert [_top1(a) for a in answers] == [0, 0, 1, 1, 2, 2]
+    assert server.stats["corpus_switches"] > 0
+    assert server.stats["cache"]["hits"] > 0
+
+    # Lifecycle routed by corpus id: delete in t2 must not touch default.
+    server.delete_docs([0], corpus_id="t2")
+    server.submit(np.asarray(docs.ids[64]), np.asarray(docs.weights[64]),
+                  corpus_id="t2")
+    server.submit(np.asarray(docs.ids[0]), np.asarray(docs.weights[0]),
+                  corpus_id=DEFAULT_CORPUS)
+    a_t2, a_def = server.flush()
+    assert _top1(a_t2) != 0 and _top1(a_def) == 0
+
+
+def test_async_server_routes_corpora(corpus, mesh):
+    docs = corpus.docs
+    cfg = ServerConfig(k=K, max_batch=4, h_max=docs.h_max, max_wait_s=0.002)
+    server = AsyncQueryServer(_slice(docs, 0, 64), corpus.emb, mesh, cfg)
+    try:
+        server.add_corpus("t2", _slice(docs, 64, 128))
+        with pytest.raises(QueryRejected, match="unknown corpus"):
+            server.submit(np.asarray(docs.ids[0]),
+                          np.asarray(docs.weights[0]), corpus_id="ghost")
+        futs = []
+        for j in range(4):
+            futs.append(server.submit(np.asarray(docs.ids[j]),
+                                      np.asarray(docs.weights[j])))
+            futs.append(server.submit(np.asarray(docs.ids[64 + j]),
+                                      np.asarray(docs.weights[64 + j]),
+                                      corpus_id="t2"))
+        server.drain()
+        tops = [_top1(f.result(timeout=60)) for f in futs]
+        assert tops == [0, 0, 1, 1, 2, 2, 3, 3]
+        health = server.health()
+        assert health["corpus_switches"] > 0
+        assert health["cache"]["resident"] == [DEFAULT_CORPUS, "t2"] or \
+            health["cache"]["resident"] == ["t2", DEFAULT_CORPUS]
+    finally:
+        server.close(timeout=30)
+
+
+def test_server_ingest_between_batches_no_rebuild(corpus, mesh):
+    """Ingest lands in answers without a serve-step rebuild: the segmented
+    step refreshes per-version tensors inside the same compiled callable."""
+    docs = corpus.docs
+    cfg = ServerConfig(k=K, max_batch=2, h_max=docs.h_max)
+    server = QueryServer(_slice(docs, 0, 64), corpus.emb, mesh, cfg)
+    server.submit(np.asarray(docs.ids[0]), np.asarray(docs.weights[0]))
+    server.flush()
+    serve_before = server._serve
+
+    gids, keep = server.ingest(_slice(docs, 200, 201))
+    assert list(gids) == [64] and keep.all()
+    server.submit(np.asarray(docs.ids[200]), np.asarray(docs.weights[200]))
+    (answer,) = server.flush()
+    assert _top1(answer) == 64
+    assert server._serve is serve_before
+    assert server.stats["budget_rebuilds"] == 0

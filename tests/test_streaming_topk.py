@@ -162,12 +162,14 @@ def test_engine_streaming_no_nB_intermediate(small_corpus):
     eng = LCRWMDEngine(ds, emb, row_block=32)
     assert eng.emb_restricted.shape[0] != n  # unambiguous (n, B) probe
     shapes = intermediate_shapes(
-        lambda qi, qw: eng._topk_stream_impl(7, True, qi, qw),
+        lambda qi, qw: eng._topk_stream_impl(7, True, eng._gather_flat(qi),
+                                             qw),
         q.ids, q.weights)
     assert (n, b) not in shapes, "engine streaming top-k materialized (n, B)"
     assert (b, n) not in shapes, "swapped direction materialized (B, n)"
     shapes_mat = intermediate_shapes(
-        lambda qi, qw: eng._symmetric_impl(qi, qw), q.ids, q.weights)
+        lambda qi, qw: eng._symmetric_impl(eng._gather_flat(qi), qw),
+        q.ids, q.weights)
     assert (n, b) in shapes_mat, "positive control lost its (n, B)"
 
 
@@ -219,10 +221,10 @@ def test_distributed_streaming_structural_and_self_exclude(small_corpus):
     t_q = eng.gather_queries(tile.ids)
     q_valid = (tile.weights > 0).astype(jnp.float32)
 
-    def build(streaming):
+    def build(streaming, psum_batch=8):
         return build_serve_step(mesh, k=5, engine=eng, bf16_matmul=False,
                                 self_exclude=True, streaming=streaming,
-                                row_block=32)
+                                row_block=32, psum_batch=psum_batch)
 
     mat = build(False)(tile, query_ids=idx)
     stream = build(True)(tile, query_ids=idx)
@@ -237,17 +239,21 @@ def test_distributed_streaming_structural_and_self_exclude(small_corpus):
 
     # Structural contract, traced through shard_map into the mesh kernel:
     # the materialized kernel forms (n_shard, B); the streaming kernel's
-    # biggest doc-axis slab is (row_block, B).
+    # biggest doc-axis slab is the (psum_batch·row_block, B) super-slab —
+    # bounded by the knobs, independent of n_shard.  psum_batch=2 here so
+    # the super-slab (64, B) stays strictly below this small shard (96).
     shapes_mat = intermediate_shapes(
         lambda qi, qw, gid: build(False)(DocSet(qi, qw), query_ids=gid).topk,
         tile.ids, tile.weights, idx)
     shapes_stream = intermediate_shapes(
-        lambda qi, qw, gid: build(True)(DocSet(qi, qw), query_ids=gid).topk,
+        lambda qi, qw, gid: build(True, psum_batch=2)(
+            DocSet(qi, qw), query_ids=gid).topk,
         tile.ids, tile.weights, idx)
     assert (n, b) in shapes_mat, "positive control lost its (n_shard, B)"
     n_pad = -(-n // 32) * 32  # streaming pads the doc axis to row_block
     assert (n, b) not in shapes_stream and (n_pad, b) not in shapes_stream, (
         f"streaming serve materialized an (n_shard, B) block: {shapes_stream}")
+    assert (64, b) in shapes_stream, "super-slab positive control lost"
 
 
 # ---------------------------------------------------------------------------
