@@ -1,0 +1,129 @@
+"""Observability overhead benchmark: instrumented vs dark serving.
+
+PR 8's acceptance number: the full observability stack — metrics
+registry, per-query span traces, event log, re-trace sentinel — must
+cost <= 5% of serving throughput when ENABLED, and be native-speed when
+disabled (the disabled fast path is one attribute check per site).
+
+Methodology mirrors ``serving_bench``: paired runs under the same
+ambient load, identical query stream and serve step, only
+``ServerConfig(observability=..., tracing=...)`` differs.  Because
+scheduler jitter can FAKE overhead but cannot fake its absence, the
+reported overhead per front-end is the MIN over paired repeats of
+``dt_on / dt_off - 1``; wall times are the usual min-estimator.
+
+Persisted as ``BENCH_obs.json``.  The <=5% assertion is wall-clock, so
+shared-runner CI demotes it to a loud warning via ``OBS_BENCH_SOFT=1``
+(numbers still land in the JSON); run on a quiet machine to enforce.
+Recorded in EXPERIMENTS.md §Observability.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BenchResult, cached_corpus
+
+BATCHES_PER_RUN = 12
+H_MAX = 24
+MAX_BATCH = 32
+REPEATS = 3
+#: Acceptance ceiling on enabled-observability overhead (fraction).
+MAX_OVERHEAD = 0.05
+
+
+def _stream(corpus, n, seed):
+    rng = np.random.default_rng(seed)
+    ids = np.asarray(corpus.docs.ids)
+    w = np.asarray(corpus.docs.weights)
+    picks = rng.integers(0, corpus.docs.n_docs, n)
+    return [(ids[i], w[i]) for i in picks]
+
+
+def _cfg(on: bool):
+    from repro.serving import ServerConfig
+
+    return ServerConfig(k=8, max_batch=MAX_BATCH, h_max=H_MAX,
+                        max_wait_s=5.0, observability=on, tracing=on)
+
+
+def _run_sync(corpus, mesh, stream, on: bool):
+    from repro.serving import QueryServer
+
+    server = QueryServer(corpus.docs, corpus.emb, mesh, _cfg(on))
+    for q in stream[:MAX_BATCH]:   # compile warm-up, untimed
+        server.submit(*q)
+    server.flush()
+    t0 = time.perf_counter()
+    for q in stream:
+        server.submit(*q)
+        if len(server._pending) >= MAX_BATCH:
+            server.flush()
+    server.flush()
+    return time.perf_counter() - t0
+
+
+def _run_async(corpus, mesh, stream, on: bool):
+    from repro.serving import AsyncQueryServer
+
+    with AsyncQueryServer(corpus.docs, corpus.emb, mesh, _cfg(on)) as server:
+        for q in stream[:MAX_BATCH]:   # compile warm-up, untimed
+            server.submit(*q)
+        server.drain()
+        t0 = time.perf_counter()
+        futs = [server.submit(*q) for q in stream]
+        server.drain()
+        dt = time.perf_counter() - t0
+        for f in futs:
+            f.result(timeout=60)
+    return dt
+
+
+def run():
+    from repro.launch.mesh import make_host_mesh
+
+    corpus = cached_corpus(
+        n_docs=1024, vocab_size=2048, emb_dim=64, h_max=H_MAX, mean_h=14.0,
+        n_classes=8, seed=17)
+    mesh = make_host_mesh()
+    n_queries = BATCHES_PER_RUN * MAX_BATCH
+    stream = _stream(corpus, n_queries, seed=3)
+
+    results = []
+    overheads = {}
+    for label, runner in (("sync", _run_sync), ("async", _run_async)):
+        dt_on = dt_off = None
+        overhead = float("inf")
+        for _ in range(REPEATS):
+            # Paired, back-to-back, alternating order drift-robustness is
+            # overkill here: one pair per iteration under the same load.
+            d_on = runner(corpus, mesh, stream, True)
+            d_off = runner(corpus, mesh, stream, False)
+            overhead = min(overhead, d_on / d_off - 1.0)
+            dt_on = d_on if dt_on is None else min(dt_on, d_on)
+            dt_off = d_off if dt_off is None else min(dt_off, d_off)
+        overheads[label] = overhead
+        results.append(BenchResult(
+            f"obs_{label}_enabled", 1e6 * dt_on / n_queries,
+            derived={"qps": round(n_queries / dt_on, 1),
+                     "overhead": round(overhead, 4)}))
+        results.append(BenchResult(
+            f"obs_{label}_disabled", 1e6 * dt_off / n_queries,
+            derived={"qps": round(n_queries / dt_off, 1)}))
+
+    worst = max(overheads.values())
+    msg = (f"observability overhead {overheads} exceeds "
+           f"{MAX_OVERHEAD:.0%} ceiling")
+    if worst > MAX_OVERHEAD and os.environ.get("OBS_BENCH_SOFT"):
+        print(f"# WARNING (soft mode): {msg}", flush=True)
+    else:
+        assert worst <= MAX_OVERHEAD, msg
+    return results
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

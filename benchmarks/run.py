@@ -47,6 +47,7 @@ def main() -> None:
         fig14_precision,
         kernels_bench,
         lifecycle_bench,
+        obs_overhead_bench,
         pruning_bench,
         robustness_bench,
         scaling_analysis,
@@ -65,6 +66,7 @@ def main() -> None:
         "scaling_analysis": scaling_analysis,
         "serving_bench": serving_bench,
         "lifecycle_bench": lifecycle_bench,
+        "obs_bench": obs_overhead_bench,
         "robustness_bench": robustness_bench,
         "workloads_bench": workloads_bench,
     }

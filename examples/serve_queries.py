@@ -29,6 +29,9 @@ def main():
     ap.add_argument("--rerank-wmd", action="store_true")
     ap.add_argument("--async", dest="use_async", action="store_true",
                     help="serve through the double-buffered AsyncQueryServer")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the server's Prometheus text exposition "
+                         "after serving")
     args = ap.parse_args()
 
     corpus = make_corpus(CorpusSpec(
@@ -76,7 +79,9 @@ def main():
     print(f"[{mode}] served {len(answers)} queries in {dt:.2f}s "
           f"({1e3 * dt / len(answers):.1f} ms/query incl. batching)")
     print(f"recall@{args.k} of the perturbed source doc: {recall:.3f}")
-    print(f"server stats: {server.stats}")
+    print(f"server stats: {server.stats_snapshot()}")
+    if args.metrics:
+        print(server.obs.render_prometheus(), end="")
     assert recall > 0.9, "serving quality regression"
 
 

@@ -21,6 +21,7 @@ makes the `pod` axis safe for DCN-speed links.
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple
 
 import jax
@@ -30,6 +31,7 @@ from jax.sharding import PartitionSpec as P
 import numpy as np
 
 from repro.compat import shard_map as compat_shard_map
+from repro.obs import sentinel as _sentinel
 from repro.core.distances import dists, safe_sqrt, sq_dists
 from repro.core.topk import (
     StreamingTopK,
@@ -52,6 +54,10 @@ _INF = 3.4e38
 # arguments (including the live-row mask) — lets same-shaped corpora share
 # one trace: multi-tenant engine caches hit this instead of XLA.
 _STEP_CACHE: dict = {}
+
+#: Count of engine-less `build_serve_step` calls (sentinel key suffix —
+#: each such build mints fresh jit objects that cannot share traces).
+_ENGINELESS_BUILDS = 0
 
 
 def _mesh_key(mesh) -> tuple:
@@ -157,6 +163,7 @@ def build_serve_step(
     streaming: bool | None = None,
     row_block: int = 128,
     psum_batch: int = 8,
+    obs=None,
 ):
     """Returns jit'd ``serve(resident, queries, emb) -> ServeResult``.
 
@@ -249,6 +256,13 @@ def build_serve_step(
     tier 2 answers from a WCD centroid shortlist via a module-level
     ``(k, self_exclude)``-keyed jit cache.  ``ServeResult.tier`` records
     the tier a batch was served at.
+
+    ``obs``: an optional :class:`repro.obs.Observability` bundle.  The
+    engine-path callables then record per-flush serve-step host time
+    (``serve_step_host_seconds`` histogram) and, once per build, the
+    step's mesh-collective counts from jaxpr inspection
+    (``serve_step_collectives_*`` gauges) — so a collective-schedule
+    regression shows up in a metrics diff, not a profiler session.
     """
     batch_axes = _batch_axes(mesh)
     n_batch_shards = 1
@@ -276,7 +290,7 @@ def build_serve_step(
             phase1_full_mesh=phase1_full_mesh, batch_axes=batch_axes,
             n_batch_shards=n_batch_shards, n_model=n_model,
             rerank_wmd=rerank_wmd, wmd_kw=wmd_kw, self_exclude=self_exclude,
-            row_block=row_block, psum_batch=psum_batch,
+            row_block=row_block, psum_batch=psum_batch, obs=obs,
         )
     if engine is not None:
         return _build_engine_serve_step(
@@ -285,7 +299,7 @@ def build_serve_step(
             n_batch_shards=n_batch_shards, n_model=n_model,
             rerank_wmd=rerank_wmd, wmd_kw=wmd_kw, self_exclude=self_exclude,
             streaming=streaming if streaming is not None else True,
-            row_block=row_block, psum_batch=psum_batch,
+            row_block=row_block, psum_batch=psum_batch, obs=obs,
         )
     if self_exclude:
         raise ValueError("self_exclude requires an engine-backed serve step")
@@ -362,7 +376,13 @@ def build_serve_step(
             tk = _wmd_rerank(resident, queries, emb, tk, k, wmd_kw)
         return ServeResult(topk=tk, d_local=d_local)
 
-    return serve
+    # Engine-less builds mint a FRESH jit object each call, so traces can
+    # never be shared across builds — meter each under its own key (a
+    # re-trace of a seen signature within one build is still the bug).
+    global _ENGINELESS_BUILDS
+    _ENGINELESS_BUILDS += 1
+    return _sentinel.wrap(
+        f"serve_step.engineless#{_ENGINELESS_BUILDS}", serve)
 
 
 def _engine_step(
@@ -486,14 +506,59 @@ def _engine_step(
                 rids, rw, r_live, t_q, q_valid, q_gid, emb_s)
             return TopK(tk_d, tk_i), d_local
 
+    # Sentinel-metered: the WHOLE point of this cache is that same-shaped
+    # serves reuse one trace — a re-trace here is the PR 5 bug class.
+    step = _sentinel.wrap(f"step_cache.mono[kc={kc}]", step)
     _STEP_CACHE[key] = step
     return step
+
+
+def _obs_step_instrument(obs, variant):
+    """Resolve per-build serve-step observability handles.
+
+    Returns ``(hist, probe)``: ``hist`` observes host wall time of each
+    compiled-step call (``serve_step_host_seconds{variant=...}``), and
+    ``probe(step, args)`` — called lazily on the FIRST step invocation of
+    this build — records the step's structural collective counts
+    (``serve_step_collectives_*`` gauges) from its jaxpr, so e.g. the
+    psum-batching win of PR 7 is a visible metric instead of profiler
+    archaeology.  Both are ``None`` when ``obs`` is absent.
+    """
+    if obs is None or getattr(obs, "metrics", None) is None:
+        return None, None
+    hist = obs.metrics.histogram(
+        "serve_step_host_seconds",
+        "Host wall time of one compiled serve-step call (async dispatch "
+        "returns futures; device time lands in device_compute spans).",
+        labels={"variant": variant})
+    done = [False]
+
+    def probe(step, args):
+        if done[0] or not obs.metrics.enabled:
+            return
+        done[0] = True  # never retried, even on failure
+        try:
+            from repro.obs import jaxpr_collective_counts
+            with _sentinel.expect("jaxpr collective inspection"):
+                counts = jaxpr_collective_counts(
+                    getattr(step, "__wrapped__", step), *args)
+            for cname, n in counts.items():
+                obs.metrics.gauge(
+                    f"serve_step_collectives_{cname}",
+                    "Collective ops issued per serve-step call "
+                    "(structural jaxpr count; scan bodies multiplied "
+                    "by trip count).",
+                    labels={"variant": variant}).set(n)
+        except Exception:
+            pass  # inspection is best-effort; serving must not care
+    return hist, probe
 
 
 def _build_engine_serve_step(
     mesh, engine, *, k, kc, refine, bf16_matmul, phase1_full_mesh,
     batch_axes, n_batch_shards, n_model, rerank_wmd=False, wmd_kw=None,
     self_exclude=False, streaming=True, row_block=128, psum_batch=8,
+    obs=None,
 ):
     """Engine-backed serve step: resident state prepped + placed at build.
 
@@ -547,6 +612,8 @@ def _build_engine_serve_step(
         "nh,nhm->nm", engine.resident.weights,
         engine._t_r.reshape(n_docs, h1_r, -1))
 
+    _m_step, _probe = _obs_step_instrument(obs, "mono")
+
     def serve(queries: DocSet, query_ids=None, *, tier: int = 0) -> ServeResult:
         """Tiered serve: ``tier`` walks the degradation ladder (see
         :class:`repro.core.pipeline.QualityTier`).  Tier 0 is the full
@@ -565,7 +632,13 @@ def _build_engine_serve_step(
                                 queries.weights, q_gid)
             return ServeResult(topk=tk, d_local=None, pruned_exact=None,
                                tier=tier)
-        tk, d_local = step(r_ids, r_w, r_live, t_q, q_valid, q_gid, emb_r)
+        step_args = (r_ids, r_w, r_live, t_q, q_valid, q_gid, emb_r)
+        if _probe is not None:
+            _probe(step, step_args)
+        _t_step = time.perf_counter()
+        tk, d_local = step(*step_args)
+        if _m_step is not None:
+            _m_step.observe(time.perf_counter() - _t_step)
         if tier >= 1:  # QualityTier.LCRWMD: candidates ARE the answer
             tk = TopK(tk.dists[:, :k], tk.indices[:, :k])
             return ServeResult(
@@ -696,6 +769,8 @@ def _segmented_step(
                               t_q, q_valid, q_gid, seg_embs)
         return TopK(tk_d, tk_i)
 
+    step = _sentinel.wrap(
+        f"step_cache.seg[kc={kc},segs={n_segments}]", step)
     _STEP_CACHE[key] = step
     return step
 
@@ -703,7 +778,7 @@ def _segmented_step(
 def _build_segmented_serve_step(
     mesh, engine, *, k, kc, refine, bf16_matmul, phase1_full_mesh,
     batch_axes, n_batch_shards, n_model, rerank_wmd=False, wmd_kw=None,
-    self_exclude=False, row_block=128, psum_batch=8,
+    self_exclude=False, row_block=128, psum_batch=8, obs=None,
 ):
     """Serve step over a :class:`~repro.core.lc_rwmd.SegmentedEngine`.
 
@@ -722,6 +797,7 @@ def _build_segmented_serve_step(
              else P(MODEL_AXIS, None))
     emb_shards = n_model * (n_batch_shards if phase1_full_mesh else 1)
     state: dict = {"version": None}
+    _m_step, _probe = _obs_step_instrument(obs, "seg")
 
     def _refresh():
         if state["version"] == engine.version:
@@ -787,8 +863,14 @@ def _build_segmented_serve_step(
                                 queries.weights, q_gid)
             return ServeResult(topk=tk, d_local=None, pruned_exact=None,
                                tier=tier)
-        tk = state["step"](state["rids"], state["rw"], state["live"],
-                           state["offs"], t_q, q_valid, q_gid, state["embs"])
+        step_args = (state["rids"], state["rw"], state["live"],
+                     state["offs"], t_q, q_valid, q_gid, state["embs"])
+        if _probe is not None:
+            _probe(state["step"], step_args)
+        _t_step = time.perf_counter()
+        tk = state["step"](*step_args)
+        if _m_step is not None:
+            _m_step.observe(time.perf_counter() - _t_step)
         if tier >= 1:  # QualityTier.LCRWMD: candidates ARE the answer
             return ServeResult(
                 topk=TopK(tk.dists[:, :k], tk.indices[:, :k]),
@@ -836,6 +918,12 @@ def _symmetric_refine(
     return jax.vmap(per_query)(queries.ids, queries.weights, tk.indices, tk.dists)
 
 
+# Module-level jit caches: the PR 5 fix made these trace once per shape —
+# the sentinel keeps them honest.
+_symmetric_refine = _sentinel.wrap(
+    "lcrwmd_dist._symmetric_refine", _symmetric_refine)
+
+
 def _wmd_rerank(
     resident: DocSet, queries: DocSet, emb: Array, tk: TopK, k: int,
     wmd_kw: dict | None,
@@ -871,6 +959,10 @@ def _wcd_topk_step(
     return topk_smallest_cols(d, k)
 
 
+_wcd_topk_step = _sentinel.wrap(
+    "lcrwmd_dist._wcd_topk_step", _wcd_topk_step)
+
+
 @functools.partial(jax.jit, static_argnums=(4, 5))
 def _wmd_rerank_jit(
     resident: DocSet, queries: DocSet, emb: Array, tk: TopK, k: int,
@@ -886,6 +978,10 @@ def _wmd_rerank_jit(
         **dict(kw_items),
     )
     return topk_from_candidates(vals, tk.indices, k)
+
+
+_wmd_rerank_jit = _sentinel.wrap(
+    "lcrwmd_dist._wmd_rerank_jit", _wmd_rerank_jit)
 
 
 def build_allpairs_d1(

@@ -1,0 +1,254 @@
+"""Compile/re-trace sentinel for the module-level jit caches.
+
+PR 5's worst bug was invisible: serve-step helpers silently re-traced on
+every flush (~100 ms host each) and nothing in the system could say so —
+it was found with a stopwatch.  This module makes that class of bug a
+*reported condition*: every cached jit callable in the serve path is
+wrapped with :func:`wrap`, which reads the function's trace-cache size
+(``fn._cache_size()``) around each call and classifies growth.
+
+Two regimes, because "new trace" is only sometimes a bug:
+
+* **Unarmed** (default, warm-up): a first trace for a *new* argument
+  signature is legitimate (new batch shape, new tier, new corpus).  Only
+  a re-trace of an ALREADY-SEEN signature is unexpected — that is
+  exactly the PR 5 failure (same shapes, fresh trace every call, usually
+  a non-hashable static or an identity-keyed closure rebuilt per flush).
+  Zero false positives by construction.
+* **Armed** (:func:`arm`, after warm-up): the trace set is frozen — ANY
+  new trace is unexpected unless inside an :func:`expect` scope.  Tests
+  warm the server, arm the sentinel, then assert the steady state stays
+  compile-free.
+
+``strict=True`` (or env ``LCRWMD_SENTINEL_STRICT=1``, read at import —
+how CI runs the fault suite) raises :class:`RetraceError` at the
+violating call; otherwise violations accumulate in ``unexpected`` for
+:func:`check` / :func:`snapshot`.
+
+The sentinel is a process-wide singleton because the jit caches it
+watches (``_STEP_CACHE`` et al.) are process-wide too.  Disabled cost:
+one attribute check per call.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Any, Callable, Iterator
+
+import contextlib
+
+
+class RetraceError(RuntimeError):
+    """An unexpected jit re-trace was detected in strict mode."""
+
+
+def _signature(args: tuple, kwargs: dict) -> tuple:
+    """Hashable abstract signature of a call: (shape, dtype) for array
+    leaves, (type, short repr) for everything else."""
+    import jax
+
+    leaves = jax.tree_util.tree_leaves((args, kwargs))
+    sig = []
+    for leaf in leaves:
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        if shape is not None and dtype is not None:
+            # weak_type participates in jit cache keys: a weak->strong
+            # flip is a REAL new trace, not the re-trace bug class.
+            sig.append((tuple(shape), str(dtype),
+                        bool(getattr(leaf, "weak_type", False))))
+        else:
+            sig.append((type(leaf).__name__, repr(leaf)[:64]))
+    return tuple(sig)
+
+
+class _Sentinel:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.enabled = True
+        self.strict = os.environ.get("LCRWMD_SENTINEL_STRICT", "") not in (
+            "", "0", "false")
+        self.armed = False
+        #: key -> total traces observed through the wrapper
+        self.counts: dict[str, int] = {}
+        #: key -> set of signatures that have already traced
+        self.seen: dict[str, set] = {}
+        #: accumulated violations (dicts; see _flag)
+        self.unexpected: list[dict] = []
+        self._local = threading.local()
+
+    # -- expectation scopes ------------------------------------------------
+    @contextlib.contextmanager
+    def expect(self, reason: str = "") -> Iterator[None]:
+        """Mark a region where new traces are legitimate even when armed
+        (e.g. a budget rebuild deliberately building a new step)."""
+        depth = getattr(self._local, "depth", 0)
+        self._local.depth = depth + 1
+        try:
+            yield
+        finally:
+            self._local.depth = depth
+
+    def _expected(self) -> bool:
+        return getattr(self._local, "depth", 0) > 0
+
+    # -- lifecycle ---------------------------------------------------------
+    def arm(self) -> None:
+        """Freeze the trace set: from now on any new trace is a violation
+        (outside ``expect`` scopes)."""
+        with self._lock:
+            self.armed = True
+
+    def disarm(self) -> None:
+        with self._lock:
+            self.armed = False
+
+    def reset(self) -> None:
+        """Forget all observations (counts, signatures, violations) and
+        disarm.  Tests call this to isolate from prior process state."""
+        with self._lock:
+            self.armed = False
+            self.counts.clear()
+            self.seen.clear()
+            self.unexpected.clear()
+
+    # -- classification ----------------------------------------------------
+    def _flag(self, key: str, kind: str, sig: tuple) -> None:
+        record = {"key": key, "kind": kind,
+                  "signature": repr(sig)[:256],
+                  "armed": self.armed,
+                  "count": self.counts.get(key, 0)}
+        with self._lock:
+            self.unexpected.append(record)
+        if self.strict:
+            raise RetraceError(
+                f"unexpected jit re-trace: key={key!r} kind={kind} "
+                f"(trace #{record['count']} for this key). "
+                f"Signature: {record['signature']}")
+
+    def record(self, key: str, grew_by: int, sig: tuple) -> None:
+        """Classify ``grew_by`` new cache entries observed for ``key``."""
+        with self._lock:
+            self.counts[key] = self.counts.get(key, 0) + grew_by
+            seen = self.seen.setdefault(key, set())
+            was_seen = sig in seen
+            seen.add(sig)
+            armed = self.armed
+        if armed and not self._expected():
+            self._flag(key, "retrace-while-armed", sig)
+        elif was_seen:
+            # The PR 5 bug class: same abstract signature, fresh trace.
+            self._flag(key, "retrace-of-seen-signature", sig)
+
+    def note_seen(self, key: str, sig: tuple) -> None:
+        """Record a cache *hit* signature (so a later re-trace of it is
+        recognized as the seen-signature bug class)."""
+        with self._lock:
+            self.seen.setdefault(key, set()).add(sig)
+
+    # -- export ------------------------------------------------------------
+    def check(self) -> None:
+        """Raise if any violations accumulated (for non-strict runs that
+        want an end-of-test assertion)."""
+        with self._lock:
+            bad = list(self.unexpected)
+        if bad:
+            raise RetraceError(
+                f"{len(bad)} unexpected jit re-trace(s): "
+                + "; ".join(f"{b['key']}[{b['kind']}]" for b in bad[:8]))
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "enabled": self.enabled,
+                "strict": self.strict,
+                "armed": self.armed,
+                "traces": dict(self.counts),
+                "signatures": {k: len(v) for k, v in self.seen.items()},
+                "unexpected": [dict(u) for u in self.unexpected],
+            }
+
+
+#: Process-wide singleton — mirrors the process-wide jit caches it guards.
+_SENTINEL = _Sentinel()
+
+
+def get_sentinel() -> _Sentinel:
+    return _SENTINEL
+
+
+def arm() -> None:
+    _SENTINEL.arm()
+
+
+def disarm() -> None:
+    _SENTINEL.disarm()
+
+
+def reset() -> None:
+    _SENTINEL.reset()
+
+
+def check() -> None:
+    _SENTINEL.check()
+
+
+def expect(reason: str = ""):
+    return _SENTINEL.expect(reason)
+
+
+def snapshot() -> dict:
+    return _SENTINEL.snapshot()
+
+
+class _Watched:
+    """Callable proxy around a jit function that meters its trace cache.
+
+    Attribute access falls through to the wrapped function, so jit
+    introspection (``.lower``, ``._cache_size``, …) keeps working on the
+    wrapped object.
+    """
+
+    __slots__ = ("_fn", "_key")
+
+    def __init__(self, fn: Callable, key: str):
+        self._fn = fn
+        self._key = key
+
+    def __call__(self, *args, **kwargs) -> Any:
+        s = _SENTINEL
+        fn = self._fn
+        if not s.enabled:
+            return fn(*args, **kwargs)
+        size_fn = getattr(fn, "_cache_size", None)
+        if size_fn is None:  # not a jit object; nothing to meter
+            return fn(*args, **kwargs)
+        before = size_fn()
+        out = fn(*args, **kwargs)
+        after = size_fn()
+        sig = _signature(args, kwargs)
+        if after > before:
+            s.record(self._key, after - before, sig)
+        else:
+            s.note_seen(self._key, sig)
+        return out
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._fn, name)
+
+    @property
+    def __wrapped__(self) -> Callable:
+        return self._fn
+
+
+def wrap(key: str, fn: Callable) -> Callable:
+    """Wrap a jit callable so every call meters its trace cache under
+    ``key``.  Idempotent: wrapping a ``_Watched`` returns it unchanged."""
+    if isinstance(fn, _Watched):
+        return fn
+    return _Watched(fn, key)
+
+
+__all__ = ["RetraceError", "arm", "check", "disarm", "expect",
+           "get_sentinel", "reset", "snapshot", "wrap"]

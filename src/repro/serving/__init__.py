@@ -7,7 +7,15 @@
 modes for the degradation tiers, the typed error contract
 (:mod:`repro.serving.errors`), and the worker supervisor lifecycle.
 Deterministic fault injection lives in :mod:`repro.serving.faults`.
+
+Observability (``docs/ARCHITECTURE.md`` §Observability): every server
+owns a :class:`repro.obs.Observability` bundle — metrics registry,
+request tracer, event log — exported via ``server.metrics_snapshot()``
+(JSON) and ``server.obs.render_prometheus()`` (text exposition); the
+process-wide re-trace sentinel lives in :mod:`repro.obs.sentinel`.
 """
+
+from repro.obs import Observability, render_prometheus
 
 from repro.serving.corpus_manager import (
     DEFAULT_CORPUS,
@@ -36,7 +44,7 @@ __all__ = [
     "ALL", "Answer", "AsyncQueryServer", "CorpusManager", "CorpusState",
     "DEFAULT_CORPUS", "DeadlineExceeded",
     "DegradationController", "FaultInjector", "FaultPlan",
-    "InjectedWorkerCrash", "PoisonQuery", "QueryRejected", "QueryServer",
-    "ServeFuture", "ServerClosed", "ServerConfig", "ServingError",
-    "WorkerCrashed",
+    "InjectedWorkerCrash", "Observability", "PoisonQuery", "QueryRejected",
+    "QueryServer", "ServeFuture", "ServerClosed", "ServerConfig",
+    "ServingError", "WorkerCrashed", "render_prometheus",
 ]

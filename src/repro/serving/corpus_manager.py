@@ -106,7 +106,8 @@ class CorpusManager:
                  make_budget: Callable[[SegmentedEngine],
                                        AdaptiveRefineBudget | None]
                  | None = None,
-                 dedup_threshold: float | None = None):
+                 dedup_threshold: float | None = None,
+                 obs=None):
         self.emb = jnp.asarray(emb)
         self.cache_bytes = cache_bytes
         self.dedup_threshold = dedup_threshold
@@ -120,6 +121,30 @@ class CorpusManager:
         self.lock = threading.RLock()
         self.stats = {"hits": 0, "misses": 0, "evictions": 0,
                       "readmissions": 0, "deduped_docs": 0}
+        self.obs = obs
+        if obs is not None:
+            m = obs.metrics
+            self._m_hits = m.counter(
+                "corpus_cache_hits_total", "Resident-corpus checkouts.")
+            self._m_misses = m.counter(
+                "corpus_cache_misses_total",
+                "Checkouts that had to readmit an evicted corpus.")
+            self._m_evict = m.counter(
+                "corpus_evictions_total", "LRU corpus evictions to host.")
+            self._m_readmit = m.counter(
+                "corpus_readmissions_total",
+                "Evicted corpora rebuilt on checkout.")
+            self._m_resident = m.gauge(
+                "corpus_resident_bytes",
+                "Device bytes pinned by resident corpora.")
+        else:
+            self._m_hits = self._m_misses = None
+            self._m_evict = self._m_readmit = self._m_resident = None
+
+    def _set_resident_gauge_locked(self) -> None:
+        if self._m_resident is not None:
+            self._m_resident.set(
+                sum(st.nbytes for st in self._states.values()))
 
     # -- views -------------------------------------------------------------
     @property
@@ -175,6 +200,7 @@ class CorpusManager:
             st = CorpusState(corpus_id, engine, budget)
             self._states[corpus_id] = st
             self._enforce_budget(keep=corpus_id)
+            self._set_resident_gauge_locked()
             return st
 
     def checkout(self, corpus_id: str = DEFAULT_CORPUS) -> CorpusState:
@@ -186,6 +212,8 @@ class CorpusManager:
             st = self._states.get(corpus_id)
             if st is not None:
                 self.stats["hits"] += 1
+                if self._m_hits is not None:
+                    self._m_hits.inc()
                 self._states.move_to_end(corpus_id)
                 return st
             snap = self._evicted.pop(corpus_id, None)
@@ -193,9 +221,16 @@ class CorpusManager:
                 raise KeyError(f"unknown corpus {corpus_id!r}")
             self.stats["misses"] += 1
             self.stats["readmissions"] += 1
+            if self._m_misses is not None:
+                self._m_misses.inc()
+                self._m_readmit.inc()
             st = self._readmit(corpus_id, snap)
             self._states[corpus_id] = st
+            if self.obs is not None:
+                from repro.obs import CorpusReadmitted
+                self.obs.events.append(CorpusReadmitted(corpus_id=corpus_id))
             self._enforce_budget(keep=corpus_id)
+            self._set_resident_gauge_locked()
             return st
 
     def _readmit(self, corpus_id: str, snap: _Evicted) -> CorpusState:
@@ -229,10 +264,18 @@ class CorpusManager:
             st = self._states.pop(corpus_id)
             eng = st.engine
             res = eng.resident
+            nbytes = st.nbytes
             self._evicted[corpus_id] = _Evicted(
                 ids=np.asarray(res.ids), weights=np.asarray(res.weights),
                 live=eng.live_mask(), budget=st.budget)
             self.stats["evictions"] += 1
+            if self._m_evict is not None:
+                self._m_evict.inc()
+            if self.obs is not None:
+                from repro.obs import CorpusEvicted
+                self.obs.events.append(
+                    CorpusEvicted(corpus_id=corpus_id, nbytes=nbytes))
+            self._set_resident_gauge_locked()
             # st drops out of scope: the engine's segment tensors and the
             # serve closure's mesh-placed copies are freed with it.
 
@@ -266,6 +309,7 @@ class CorpusManager:
             if st.budget is not None:
                 st.budget.on_corpus_change(max(1, st.engine.n_live))
             self._enforce_budget(keep=corpus_id)
+            self._set_resident_gauge_locked()
             return gids, keep
 
     def delete_docs(self, corpus_id: str, doc_ids) -> int:

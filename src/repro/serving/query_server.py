@@ -77,6 +77,15 @@ from repro.core.lc_rwmd import SegmentedEngine
 from repro.core.pipeline import AdaptiveRefineBudget
 from repro.data.docs import DocSet, make_docset
 from repro.distributed.lcrwmd_dist import ServeResult, build_serve_step
+from repro.obs import (
+    COUNT_BUCKETS,
+    BudgetRebuild,
+    Observability,
+    QueryQuarantined,
+    TierTransition,
+    WorkerRestart,
+    sentinel,
+)
 from repro.serving.corpus_manager import (
     DEFAULT_CORPUS,
     CorpusManager,
@@ -99,6 +108,9 @@ class Answer(tuple):
     attribute: ``tier`` — the degradation tier the answer was served at
     (0 = full cascade, 1 = LC-RWMD only, 2 = WCD shortlist).
     """
+
+    #: Completed :class:`repro.obs.QueryTrace` (None when tracing is off).
+    trace = None
 
     def __new__(cls, ids: np.ndarray, dists: np.ndarray, tier: int = 0):
         self = super().__new__(cls, (ids, dists))
@@ -144,6 +156,11 @@ class ServerConfig:
     delta_pad: int | None = 64         # round ingest deltas for trace reuse
     vocab_pad: int | None = None       # round per-segment v_e for trace reuse
     dedup_threshold: float | None = None  # default near-dup ingest gate
+    # Observability (repro.obs):
+    observability: bool = True         # metrics registry + event log
+    tracing: bool = True               # per-query span timelines
+    obs: Any = None                    # share an Observability bundle; None
+    #                                    = each server owns a fresh one
 
 
 @dataclasses.dataclass
@@ -166,6 +183,7 @@ class DegradationController:
     fail_streak_down: int = 2
     tier: int = 0
     transitions: list = dataclasses.field(default_factory=list)
+    obs: Any = dataclasses.field(default=None, repr=False, compare=False)
     _healthy: int = dataclasses.field(default=0, init=False, repr=False)
     _fail_streak: int = dataclasses.field(default=0, init=False, repr=False)
 
@@ -199,12 +217,21 @@ class DegradationController:
         if self.tier < self.max_tier:
             self.tier += 1
             self.transitions.append({"tier": self.tier, "reason": reason})
+            self._emit(reason)
 
     def _up(self, reason: str) -> None:
         self._healthy = 0
         if self.tier > 0:
             self.tier -= 1
             self.transitions.append({"tier": self.tier, "reason": reason})
+            self._emit(reason)
+
+    def _emit(self, reason: str) -> None:
+        if self.obs is not None:
+            self.obs.events.append(TierTransition(tier=self.tier,
+                                                  reason=reason))
+            self.obs.metrics.gauge(
+                "serving_tier", "current degradation tier").set(self.tier)
 
 
 class ServeFuture(concurrent.futures.Future):
@@ -216,6 +243,11 @@ class ServeFuture(concurrent.futures.Future):
     future can be ``await``-ed directly.  Resolution order across futures
     equals submission order (the pipeline collects batches FIFO).
     """
+
+    #: Completed :class:`repro.obs.QueryTrace` of this request, set at
+    #: resolution time (None when tracing is off or the request failed
+    #: with a shared, non-per-query error instance).
+    trace = None
 
     def __await__(self):
         return asyncio.wrap_future(self).__await__()
@@ -231,6 +263,8 @@ class _InFlight(NamedTuple):
     tier: int = 0        # degradation tier the batch was served at
     t0: float = 0.0      # dispatch wall-clock (latency EWMA)
     state: Any = None    # CorpusState the batch was served against
+    traces: tuple = ()   # per-query QueryTraces (aligned with qs; may be empty)
+    btrace: Any = None   # shared BatchTrace (None when tracing is off)
 
 
 def _check_query(ids, weights) -> None:
@@ -281,6 +315,38 @@ class _ServeCore:
             from repro.serving.faults import FaultInjector
             faults = FaultInjector(faults)
         self.faults = faults
+        self.obs = cfg.obs if cfg.obs is not None else Observability(
+            metrics_enabled=cfg.observability, tracing_enabled=cfg.tracing)
+        # Metric handles are resolved once here; the per-flush cost of a
+        # disabled registry is one attribute check per record call.
+        m = self.obs.metrics
+        self._m_queries = m.counter(
+            "serving_queries_total", "queries dispatched to the device")
+        self._m_batches = m.counter(
+            "serving_batches_total", "batches dispatched")
+        self._m_batch_size = m.histogram(
+            "serving_batch_size", "real queries per dispatched batch",
+            buckets=COUNT_BUCKETS)
+        self._m_dispatch = m.histogram(
+            "serving_dispatch_host_seconds",
+            "host time in dispatch (pad + serve-step launch)")
+        self._m_collect = m.histogram(
+            "serving_device_collect_seconds",
+            "block_until_ready readback time at collect")
+        self._m_e2e = m.histogram(
+            "serving_e2e_latency_seconds",
+            "dispatch-to-answers wall time per batch")
+        self._m_queue_wait = m.histogram(
+            "serving_queue_wait_seconds",
+            "admission-to-dequeue wait per query")
+        self._m_queue_depth = m.gauge(
+            "serving_queue_depth", "pending queries at dispatch")
+        self._m_ewma = m.gauge(
+            "serving_ewma_latency_seconds",
+            "EWMA batch latency driving deadline rush-dispatch "
+            "(0 until seeded by the first collected batch)")
+        self._m_budget = m.gauge(
+            "serving_rerank_budget", "current adaptive rerank budget")
         # All resident-side prep (vocab restriction, padding, placement on
         # the mesh, resident-embedding gathers) happens ONCE per corpus
         # (and once per ingested delta SEGMENT — O(delta), not O(corpus));
@@ -294,10 +360,19 @@ class _ServeCore:
             self.emb, cache_bytes=cfg.cache_bytes,
             engine_kw=dict(delta_pad=cfg.delta_pad, vocab_pad=cfg.vocab_pad),
             make_budget=self._make_budget,
-            dedup_threshold=cfg.dedup_threshold)
+            dedup_threshold=cfg.dedup_threshold, obs=self.obs)
         self._active = self.manager.add_corpus(DEFAULT_CORPUS, resident)
         self._serve = self._build_serve(
             self.budget.budget if self.budget else 2 * cfg.k)
+        # Guards `stats` mutations so `stats_snapshot()` returns one
+        # consistent view; held only around python dict updates — never
+        # across dispatch or device work (the PR 7 lock-free-producer
+        # constraint applies to `manager.lock`, which this never nests
+        # inside).
+        self._stats_lock = threading.Lock()
+        # EWMA serve latency: None until the first real batch collects —
+        # `stats["ewma_latency_s"]` mirrors it (0.0 pre-seed, back-compat).
+        self._ewma: float | None = None
         self.stats = {"queries": 0, "batches": 0, "wmd_reranks": 0,
                       "budget_rebuilds": 0, "budget_trajectory": [],
                       "tier_counts": [0] * 3, "degraded_batches": 0,
@@ -316,12 +391,47 @@ class _ServeCore:
             self.controller = DegradationController(
                 shed_queue_depth=cfg.shed_queue_depth or 2 * cfg.max_batch,
                 max_tier=cfg.max_tier, recover_after=cfg.recover_after,
-                fail_streak_down=cfg.fail_streak_down)
+                fail_streak_down=cfg.fail_streak_down, obs=self.obs)
             self.stats["tier_transitions"] = self.controller.transitions
         self._seq = 0
         # Diagnostic hook: set to a list to record ("dispatch"|"collect", seq)
         # events — the overlap tests assert dispatch(i+1) precedes collect(i).
         self.trace: list[tuple[str, int]] | None = None
+
+    # -- stats (torn-read-safe) --------------------------------------------
+    def bump(self, key: str, n: int = 1) -> int:
+        """Increment one stats counter under the stats lock."""
+        with self._stats_lock:
+            v = self.stats[key] + n
+            self.stats[key] = v
+            return v
+
+    def stats_snapshot(self) -> dict:
+        """One CONSISTENT copy of ``stats``: every counter in the returned
+        dict comes from the same instant (the live ``stats`` dict is
+        mutated by the worker thread, so reading it field-by-field can
+        tear).  Mutable members are copied so the snapshot never changes
+        under the caller."""
+        with self._stats_lock:
+            snap = dict(self.stats)
+            snap["budget_trajectory"] = list(snap["budget_trajectory"])
+            snap["tier_counts"] = list(snap["tier_counts"])
+            snap["tier_transitions"] = [dict(t)
+                                        for t in snap["tier_transitions"]]
+            snap["cache"] = dict(snap["cache"])
+        return snap
+
+    def metrics_snapshot(self) -> dict:
+        """Full JSON-able telemetry export: server stats + metrics +
+        events + tracer counters + process-wide sentinel state."""
+        snap = self.obs.snapshot()
+        snap["stats"] = self.stats_snapshot()
+        return snap
+
+    @property
+    def ewma_latency(self) -> float | None:
+        """Observed EWMA batch latency; None until the first real batch."""
+        return self._ewma
 
     # -- active-corpus views -----------------------------------------------
     @property
@@ -349,7 +459,7 @@ class _ServeCore:
         if cfg.rerank_wmd and cfg.adaptive_budget:
             return AdaptiveRefineBudget(
                 k=cfg.k, n_resident=max(1, engine.n_live), init=2 * cfg.k,
-                decay_after=cfg.budget_decay_after)
+                decay_after=cfg.budget_decay_after, obs=self.obs)
         return None
 
     def _build_serve(self, rerank_budget: int):
@@ -361,14 +471,14 @@ class _ServeCore:
             self._mesh, k=cfg.k, refine=cfg.refine_symmetric,
             bf16_matmul=False, engine=self.engine, rerank_wmd=cfg.rerank_wmd,
             rerank_budget=rerank_budget, wmd_kw=cfg.wmd_kw,
-            streaming=True)
+            streaming=True, obs=self.obs)
 
     def _activate(self, corpus_id: str | None) -> CorpusState:
         """Check out (readmitting if evicted) and make a corpus active."""
         st = self.manager.checkout(corpus_id or DEFAULT_CORPUS)
         if st is not self._active:
             self._active = st
-            self.stats["corpus_switches"] += 1
+            self.bump("corpus_switches")
         return st
 
     # -- corpus lifecycle (admissible between batches; manager-locked) -----
@@ -401,27 +511,37 @@ class _ServeCore:
         return make_docset(np.where(w > 0, ids, -1), w)
 
     def _raw_serve(self, qs: Sequence[tuple[np.ndarray, np.ndarray]],
-                   tier: int, batch_seq: int | None) -> ServeResult:
+                   tier: int, batch_seq: int | None,
+                   btrace=None) -> ServeResult:
         """Pad + serve one chunk at `tier`, with fault hooks applied.
 
         ``batch_seq=None`` marks a validation RETRY: dispatch-time faults
         (latency, crashes, transient NaNs) are skipped — only sticky
         query-keyed poison re-applies — so bisection converges.
         """
+        if btrace is not None:
+            btrace.begin("batch_formation")
         queries = self.pad_batch(qs)
+        if btrace is not None:
+            btrace.end("batch_formation")
         if self.faults is not None and batch_seq is not None:
             self.faults.on_dispatch(batch_seq)
         # Tier 0 calls the step with its default signature so test spies /
         # wrappers that only accept (queries,) keep working.
+        if btrace is not None:
+            btrace.begin("dispatch")
         res = self._serve(queries) if tier == 0 else \
             self._serve(queries, tier=tier)
+        if btrace is not None:
+            btrace.end("dispatch")
         if self.faults is not None:
             res = self.faults.poison_result(batch_seq, res, qs)
         return res
 
     def dispatch(self, qs: Sequence[tuple[np.ndarray, np.ndarray]], *,
                  queue_depth: int = 0,
-                 corpus_id: str | None = None) -> _InFlight:
+                 corpus_id: str | None = None,
+                 traces: Sequence = ()) -> _InFlight:
         """Host-prep one ≤max_batch chunk and launch it on the device.
 
         Returns immediately with device handles (JAX async dispatch): the
@@ -441,19 +561,41 @@ class _ServeCore:
         seq, self._seq = self._seq, self._seq + 1
         if self.trace is not None:
             self.trace.append(("dispatch", seq))
+        bt = self.obs.tracer.batch(seq)
+        if bt is not None:
+            bt.tier = tier
+            t_dequeue = time.perf_counter()
+            for tr in traces:
+                if tr is not None:
+                    tr.joined_batch(bt, t_dequeue)
         t0 = time.perf_counter()
         with self.manager.lock:
             state = self._activate(corpus_id)
-            res = self._raw_serve(qs, tier, seq)
-        self.stats["queries"] += len(qs)
-        self.stats["batches"] += 1
-        self.stats["tier_counts"][min(tier, 2)] += 1
-        if tier:
-            self.stats["degraded_batches"] += 1
-        if self.cfg.rerank_wmd and tier == 0:
-            self.stats["wmd_reranks"] += len(qs)
+            res = self._raw_serve(qs, tier, seq, btrace=bt)
+        if bt is not None:
+            # Device span: opens when the async-dispatched step returns,
+            # closes at collect's block_until_ready readback.
+            bt.begin("device_compute")
+        with self._stats_lock:
+            self.stats["queries"] += len(qs)
+            self.stats["batches"] += 1
+            self.stats["tier_counts"][min(tier, 2)] += 1
+            if tier:
+                self.stats["degraded_batches"] += 1
+            if self.cfg.rerank_wmd and tier == 0:
+                self.stats["wmd_reranks"] += len(qs)
+        if self.obs.metrics.enabled:
+            self._m_queries.inc(len(qs))
+            self._m_batches.inc()
+            self._m_batch_size.observe(len(qs))
+            self._m_queue_depth.set(queue_depth)
+            self._m_dispatch.observe(time.perf_counter() - t0)
+            for tr in traces:
+                if tr is not None:
+                    self._m_queue_wait.observe(t0 - tr.t_admit)
         return _InFlight(result=res, n_real=len(qs), seq=seq,
-                         qs=tuple(qs), tier=tier, t0=t0, state=state)
+                         qs=tuple(qs), tier=tier, t0=t0, state=state,
+                         traces=tuple(traces), btrace=bt)
 
     def collect(self, inflight: _InFlight) -> list:
         """Block for one dispatched batch; validate + deliver answers.
@@ -473,15 +615,23 @@ class _ServeCore:
         a :class:`ServingError` instance (quarantined poison).
         """
         res, n_real, tier = inflight.result, inflight.n_real, inflight.tier
+        bt = inflight.btrace
         if inflight.state is not None:
             # Budget feedback, rebuilds, and validation retries must hit the
             # corpus this batch was served against, not whichever corpus a
             # later pipelined dispatch activated.
             self._active = inflight.state
+        t_read0 = time.perf_counter()
         tk_i = np.asarray(res.topk.indices)   # blocks on the device result
         tk_d = np.asarray(res.topk.dists)
+        if bt is not None:
+            bt.end("device_compute")
+        if self.obs.metrics.enabled:
+            self._m_collect.observe(time.perf_counter() - t_read0)
         if self.trace is not None:
             self.trace.append(("collect", inflight.seq))
+        if bt is not None:
+            bt.begin("validation")
         finite = np.isfinite(tk_d[:n_real]).all(axis=1)
         if self.cfg.validate_results and not finite.all():
             answers = self._validated_answers(inflight, tk_i, tk_d, finite)
@@ -495,16 +645,43 @@ class _ServeCore:
                 old = self.budget.budget
                 new = self.budget.update(np.asarray(res.pruned_exact)[:n_real])
                 if new != old:
-                    self._serve = self._build_serve(new)
-                    self.stats["budget_rebuilds"] += 1
-                    self.stats["budget_trajectory"].append(new)
+                    # A budget change legitimately builds (and traces) a
+                    # new serve step — tell the armed sentinel so.
+                    with sentinel.expect("adaptive budget rebuild"):
+                        self._serve = self._build_serve(new)
+                    with self._stats_lock:
+                        self.stats["budget_rebuilds"] += 1
+                        self.stats["budget_trajectory"].append(new)
+                    self.obs.events.append(BudgetRebuild(
+                        corpus_id=self._active.corpus_id,
+                        old_budget=old, new_budget=new))
+                    self._m_budget.set(new)
             answers = [Answer(tk_i[j], tk_d[j], tier=tier)
                        for j in range(n_real)]
+        if bt is not None:
+            bt.end("validation")
         if inflight.t0:
             dt = time.perf_counter() - inflight.t0
-            prev = self.stats["ewma_latency_s"]
-            self.stats["ewma_latency_s"] = dt if not prev else \
-                0.8 * prev + 0.2 * dt
+            prev = self._ewma
+            self._ewma = dt if prev is None else 0.8 * prev + 0.2 * dt
+            with self._stats_lock:
+                self.stats["ewma_latency_s"] = self._ewma
+            if self.obs.metrics.enabled:
+                self._m_e2e.observe(dt)
+                self._m_ewma.set(self._ewma)
+        # Attach completed traces: batch-mates share `bt`; each healthy
+        # answer (or per-query error) carries its own QueryTrace.
+        if inflight.traces:
+            for j, tr in enumerate(inflight.traces):
+                if tr is None or j >= len(answers):
+                    continue
+                tr.finish()
+                ans = answers[j]
+                if ans is not None:
+                    try:
+                        ans.trace = tr
+                    except (AttributeError, TypeError):
+                        pass  # exotic answer type without a __dict__
         return answers
 
     def _validated_answers(self, inflight: _InFlight, tk_i, tk_d,
@@ -520,7 +697,7 @@ class _ServeCore:
         p poison queries — never fails the other ``max_batch - p``.
         """
         n_real, tier = inflight.n_real, inflight.tier
-        self.stats["validation_failures"] += 1
+        self.bump("validation_failures")
         if self.controller is not None:
             self.controller.note_stage_failure()
         out: list = [None] * n_real
@@ -530,7 +707,7 @@ class _ServeCore:
 
         def solve(idx: list[int]) -> None:
             res = self._raw_serve([inflight.qs[i] for i in idx], tier, None)
-            self.stats["validation_retries"] += 1
+            self.bump("validation_retries")
             d = np.asarray(res.topk.dists)
             i_ = np.asarray(res.topk.indices)
             ok = np.isfinite(d[:len(idx)]).all(axis=1)
@@ -544,7 +721,9 @@ class _ServeCore:
                 return
             if len(idx) == 1:
                 q = idx[0]
-                self.stats["poisoned_queries"] += 1
+                self.bump("poisoned_queries")
+                self.obs.events.append(QueryQuarantined(
+                    batch_seq=inflight.seq, slot=q))
                 out[q] = PoisonQuery(
                     f"non-finite distances isolated to one query by "
                     f"bisection (batch #{inflight.seq}, slot {q})")
@@ -579,9 +758,10 @@ class QueryServer:
                  faults=None):
         self._core = _ServeCore(resident, emb, mesh, cfg, faults=faults)
         self._preprocess = preprocess
-        # Pending entries: (ids, weights, absolute deadline|None, corpus_id).
+        # Pending entries:
+        # (ids, weights, absolute deadline|None, corpus_id, QueryTrace|None).
         self._pending: list[
-            tuple[np.ndarray, np.ndarray, float | None, str]] = []
+            tuple[np.ndarray, np.ndarray, float | None, str, Any]] = []
 
     # -- shared-core views (kept as attributes of record for tests/tools) --
     @property
@@ -607,6 +787,19 @@ class QueryServer:
     @property
     def stats(self) -> dict:
         return self._core.stats
+
+    @property
+    def obs(self):
+        """This server's :class:`repro.obs.Observability` bundle."""
+        return self._core.obs
+
+    def stats_snapshot(self) -> dict:
+        """One consistent copy of ``stats`` (see `_ServeCore.stats_snapshot`)."""
+        return self._core.stats_snapshot()
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-able telemetry: stats + metrics + events + sentinel."""
+        return self._core.metrics_snapshot()
 
     @property
     def _serve(self):
@@ -681,7 +874,8 @@ class QueryServer:
             if self.cfg.admission_control and float(deadline) <= 0:
                 raise QueryRejected(
                     f"deadline {deadline!r}s already expired at submit")
-        self._pending.append((ids, weights, abs_deadline, cid))
+        self._pending.append((ids, weights, abs_deadline, cid,
+                              self._core.obs.tracer.admit()))
 
     def _flush_chunk(self, qs: list, corpus_id: str):
         """Serve one ≤max_batch same-corpus chunk at the FIXED
@@ -695,16 +889,22 @@ class QueryServer:
         dead = [j for j in range(len(qs)) if j not in set(live)]
         out: list = [None] * len(qs)
         for j in dead:
-            self._core.stats["deadline_misses"] += 1
+            self._core.bump("deadline_misses")
             if self._core.controller is not None:
                 self._core.controller.note_deadline_miss()
-            out[j] = DeadlineExceeded(
+            err = DeadlineExceeded(
                 "deadline expired before the batch was dispatched")
+            tr = qs[j][4]
+            if tr is not None:
+                tr.finish()
+                err.trace = tr
+            out[j] = err
         if live:
             answers = self._core.collect(
                 self._core.dispatch([qs[j][:2] for j in live],
                                     queue_depth=len(self._pending),
-                                    corpus_id=corpus_id))
+                                    corpus_id=corpus_id,
+                                    traces=[qs[j][4] for j in live]))
             for j, a in zip(live, answers):
                 out[j] = a
         return out
@@ -759,12 +959,12 @@ class QueryServer:
                 # Producer died: drain what was accepted, then re-raise.
                 # (Exception, not BaseException: a KeyboardInterrupt must
                 # propagate immediately, not run device flushes first.)
-                self._core.stats["stream_failures"] += 1
+                self._core.bump("stream_failures")
                 n_at_risk = len(self._pending)
                 try:
                     yield from self.flush()
                 except Exception:
-                    self._core.stats["dropped_queries"] += n_at_risk
+                    self._core.bump("dropped_queries", n_at_risk)
                     raise
                 raise
             if not self._pending:
@@ -840,10 +1040,10 @@ class AsyncQueryServer:
         self._not_full = threading.Condition(self._lock)   # submit backpressure
         self._work = threading.Condition(self._lock)       # worker wake-up
         self._idle = threading.Condition(self._lock)       # drain wait
-        # Queue entries:
-        # (payload, future, absolute monotonic deadline|None, corpus_id).
+        # Queue entries: (payload, future, absolute monotonic deadline|None,
+        # corpus_id, QueryTrace|None).
         self._queue: deque[
-            tuple[QueryLike, ServeFuture, float | None, str]] = deque()
+            tuple[QueryLike, ServeFuture, float | None, str, Any]] = deque()
         self._inflight: deque = deque()  # (_InFlight, futures, deadlines)
         self._batch_t0: float | None = None  # arrival of oldest pending query
         self._flush_requested = False
@@ -876,6 +1076,19 @@ class AsyncQueryServer:
     @property
     def stats(self) -> dict:
         return self._core.stats
+
+    @property
+    def obs(self):
+        """This server's :class:`repro.obs.Observability` bundle."""
+        return self._core.obs
+
+    def stats_snapshot(self) -> dict:
+        """One consistent copy of ``stats`` (see `_ServeCore.stats_snapshot`)."""
+        return self._core.stats_snapshot()
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-able telemetry: stats + metrics + events + sentinel."""
+        return self._core.metrics_snapshot()
 
     @property
     def _serve(self):
@@ -942,6 +1155,7 @@ class AsyncQueryServer:
             abs_deadline = time.monotonic() + float(deadline)
         payload: QueryLike = (ids, weights)
         fut = ServeFuture()
+        tr = self._core.obs.tracer.admit()
         with self._lock:
             if self._closed:
                 raise ServerClosed("submit() on a closed AsyncQueryServer")
@@ -965,7 +1179,7 @@ class AsyncQueryServer:
                 raise ServerClosed("submit() on a closed AsyncQueryServer")
             if not self._queue:
                 self._batch_t0 = time.perf_counter()
-            self._queue.append((payload, fut, abs_deadline, cid))
+            self._queue.append((payload, fut, abs_deadline, cid, tr))
             self._n_unanswered += 1
             self._work.notify_all()
         return fut
@@ -1015,8 +1229,16 @@ class AsyncQueryServer:
             self._fail_unresolved(ServerClosed("server closed"))
 
     def health(self) -> dict:
-        """O(1) liveness/pressure snapshot for operators and supervisors."""
-        s = self._core.stats
+        """Liveness/pressure snapshot for operators and supervisors.
+
+        Every stats-derived field comes from ONE consistent
+        ``stats_snapshot()`` — the worker mutates the live dict while this
+        runs, so field-by-field reads of ``self.stats`` can tear.  The
+        ``metrics`` key carries the latest registry snapshot (empty dict
+        when metrics are disabled).
+        """
+        s = self._core.stats_snapshot()
+        m = self._core.obs.metrics
         with self._lock:
             return {
                 "queue_depth": len(self._queue),
@@ -1035,6 +1257,7 @@ class AsyncQueryServer:
                 "ewma_latency_s": s["ewma_latency_s"],
                 "corpus_switches": s["corpus_switches"],
                 "cache": self._core.manager.snapshot(),
+                "metrics": m.snapshot() if m.enabled else {},
             }
 
     def __enter__(self) -> "AsyncQueryServer":
@@ -1053,8 +1276,21 @@ class AsyncQueryServer:
 
     def _rush_margin(self) -> float:
         """How early (seconds) to dispatch ahead of the earliest pending
-        deadline: the observed serve latency, floored at 1 ms."""
-        return max(0.001, float(self._core.stats["ewma_latency_s"]))
+        deadline: the observed serve latency, floored at 1 ms.
+
+        Until the FIRST real batch seeds the EWMA there is no latency
+        observation at all — a cold 0.0 would mean "dispatch with 1 ms to
+        spare", which a first (compile-including) batch can never make.
+        Pre-seed, assume one full batching window (``max_wait_s``) so
+        early deadline-carrying queries rush conservatively; post-seed the
+        margin tracks measured latency (exported as the
+        ``serving_ewma_latency_seconds`` gauge, so every rush decision is
+        explainable from a snapshot).
+        """
+        ewma = self._core.ewma_latency
+        if ewma is None:
+            return max(0.001, float(self._core.cfg.max_wait_s))
+        return max(0.001, float(ewma))
 
     def _sweep_expired_locked(self) -> list[ServeFuture]:
         """Drop queued entries whose deadline already passed; lock held."""
@@ -1062,13 +1298,16 @@ class AsyncQueryServer:
             return []
         now = time.monotonic()
         if not any(d is not None and d <= now
-                   for _p, _f, d, _c in self._queue):
+                   for _p, _f, d, _c, _t in self._queue):
             return []
         keep: deque = deque()
         expired = []
         for entry in self._queue:
-            _p, fut, dl, _c = entry
+            _p, fut, dl, _c, tr = entry
             if dl is not None and dl <= now:
+                if tr is not None:
+                    tr.finish()
+                    fut.trace = tr
                 expired.append(fut)
             else:
                 keep.append(entry)
@@ -1097,7 +1336,7 @@ class AsyncQueryServer:
                     mono = time.monotonic()
                     stale = (self._batch_t0 is not None
                              and now - self._batch_t0 >= cfg.max_wait_s)
-                    dls = [d for _p, _f, d, _c in self._queue
+                    dls = [d for _p, _f, d, _c, _t in self._queue
                            if d is not None]
                     # Rush: dispatch the partial batch early when the
                     # earliest deadline is one serve-latency away.
@@ -1151,6 +1390,9 @@ class AsyncQueryServer:
         try:
             for fut, ans in zip(futures, answers):
                 try:
+                    tr = getattr(ans, "trace", None)
+                    if tr is not None:
+                        fut.trace = tr
                     if isinstance(ans, BaseException):
                         fut.set_exception(ans)
                     else:
@@ -1167,7 +1409,7 @@ class AsyncQueryServer:
                     self._idle.notify_all()
 
     def _expire(self, futures: list[ServeFuture]) -> None:
-        self._core.stats["deadline_misses"] += len(futures)
+        self._core.bump("deadline_misses", len(futures))
         if self._core.controller is not None:
             for _ in futures:
                 self._core.controller.note_deadline_miss()
@@ -1180,29 +1422,36 @@ class AsyncQueryServer:
 
         A preprocess failure (or poison screen) fails only that query's
         future with a typed :class:`PoisonQuery` — its batch-mates proceed.
-        Returns (qs, futures, deadlines) for the healthy queries.
+        Returns (qs, futures, deadlines, traces) for the healthy queries.
         """
-        qs, futs, dls, errs = [], [], [], []
-        for payload, fut, dl, _c in entries:
+        qs, futs, dls, trs, errs = [], [], [], [], []
+        for payload, fut, dl, _c, tr in entries:
             idx, self._prep_idx = self._prep_idx, self._prep_idx + 1
             try:
                 if self._core.faults is not None:
                     self._core.faults.on_prep(idx)
                 q = self._prep(payload)
             except ServingError as e:
+                if tr is not None:
+                    tr.finish()
+                    e.trace = tr
                 errs.append((fut, e))
             except Exception as e:
                 pe = PoisonQuery(f"preprocess failed: {e}")
                 pe.__cause__ = e
+                if tr is not None:
+                    tr.finish()
+                    pe.trace = tr
                 errs.append((fut, pe))
             else:
                 qs.append(q)
                 futs.append(fut)
                 dls.append(dl)
+                trs.append(tr)
         if errs:
             bad_futs, bad_errs = zip(*errs)
             self._resolve(list(bad_futs), list(bad_errs))
-        return qs, futs, dls
+        return qs, futs, dls, trs
 
     def _collect_one(self) -> None:
         with self._lock:
@@ -1222,11 +1471,15 @@ class AsyncQueryServer:
         out = []
         for a, dl in zip(answers, deadlines):
             if dl is not None and now > dl:
-                self._core.stats["deadline_misses"] += 1
+                self._core.bump("deadline_misses")
                 if self._core.controller is not None:
                     self._core.controller.note_deadline_miss()
-                out.append(DeadlineExceeded(
-                    f"answer ready {now - dl:.3f}s past the deadline"))
+                err = DeadlineExceeded(
+                    f"answer ready {now - dl:.3f}s past the deadline")
+                tr = getattr(a, "trace", None)
+                if tr is not None:
+                    err.trace = tr
+                out.append(err)
             else:
                 out.append(a)
         self._crash_victims = []
@@ -1248,14 +1501,15 @@ class AsyncQueryServer:
                 self._expire(expired)
                 continue
             if batch is not None:
-                qs, futures, deadlines = self._prep_entries(batch)
+                qs, futures, deadlines, traces = self._prep_entries(batch)
                 if qs:
                     with self._lock:
                         depth = len(self._queue)
                     self._crash_victims = futures
                     try:
                         handle = self._core.dispatch(
-                            qs, queue_depth=depth, corpus_id=batch[0][3])
+                            qs, queue_depth=depth, corpus_id=batch[0][3],
+                            traces=traces)
                     except Exception as e:  # typed forwarding; crashes escape
                         err = _as_serving_error(e, "batch dispatch failed")
                         self._crash_victims = []
@@ -1306,7 +1560,8 @@ class AsyncQueryServer:
                 self._crash_victims = []
                 for _h, futs, _d in dead:
                     victims.extend(futs)
-                self._core.stats["worker_restarts"] += 1
+                n_restarts = self._core.bump("worker_restarts")
+                self._core.obs.events.append(WorkerRestart(count=n_restarts))
                 if self._core.controller is not None:
                     self._core.controller.note_crash()
                 wc = WorkerCrashed(
@@ -1314,7 +1569,7 @@ class AsyncQueryServer:
                 wc.__cause__ = e
                 if victims:
                     self._resolve(victims, [wc] * len(victims))
-                restarts = self._core.stats["worker_restarts"]
+                restarts = n_restarts
                 if restarts > self._core.cfg.max_worker_restarts:
                     with self._lock:
                         self._closed = True
@@ -1341,6 +1596,6 @@ class AsyncQueryServer:
         futs: list[ServeFuture] = list(self._crash_victims)
         for _h, bfuts, _d in dead:          # then in-flight (older first)...
             futs.extend(bfuts)
-        futs.extend(f for _p, f, _d, _c in queued)  # ...then the queue
+        futs.extend(f for _p, f, _d, _c, _t in queued)  # ...then the queue
         if futs:
             self._resolve(futs, [exc] * len(futs))
