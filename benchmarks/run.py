@@ -45,6 +45,7 @@ def main() -> None:
         fig10_11_overlap,
         fig12_13_runtime,
         fig14_precision,
+        index_bench,
         kernels_bench,
         lifecycle_bench,
         obs_overhead_bench,
@@ -65,6 +66,7 @@ def main() -> None:
         "kernels_bench": kernels_bench,
         "scaling_analysis": scaling_analysis,
         "serving_bench": serving_bench,
+        "index_bench": index_bench,
         "lifecycle_bench": lifecycle_bench,
         "obs_bench": obs_overhead_bench,
         "robustness_bench": robustness_bench,

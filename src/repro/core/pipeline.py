@@ -124,6 +124,8 @@ def pruned_wmd_topk(
     engine: LCRWMDEngine | None = None,
     use_kernel: bool | None = None,
     interpret: bool = False,
+    index=None,
+    top_p: int | None = None,
 ) -> PrunedWMDResult:
     """Top-k WMD per query via the RWMD pruning cascade. jit-compatible.
 
@@ -150,6 +152,17 @@ def pruned_wmd_topk(
     GEMM-shaped.  ``use_kernel`` routes it through the fused Pallas kernel
     (cost tiles built in VMEM, see kernels/sinkhorn_wmd.py); defaults to the
     engine's ``use_kernel`` flag when an engine is given.
+
+    ``index``: a :class:`repro.index.ClusterIndex` — inserts the
+    centroid/triangle-bound stage BEFORE phase 1, making the full cascade
+    WCD routing → centroid/triangle bound → LC-RWMD → Sinkhorn rerank:
+    queries route to their ``top_p`` nearest cells (index default when
+    None), the triangle bound drops routed cells that provably cannot hold
+    a competitive match, and stage 1's streaming selection scans ONLY the
+    surviving cells.  ``pruned_exact`` then certifies exactness *relative
+    to the routed cells* — with ``top_p = index.num_cells`` and the bound
+    disabled that is the full corpus again (bit-identical to the unrouted
+    cascade, see tests/test_index.py).
     """
     sinkhorn_kw = sinkhorn_kw or {}
     n = resident.n_docs
@@ -158,12 +171,23 @@ def pruned_wmd_topk(
     if use_kernel is None:
         use_kernel = engine is not None and engine.use_kernel
 
-    # Stage 1: LC-RWMD lower bounds + candidate selection.  With an engine,
-    # selection happens INSIDE the streaming phase-2 pass (StreamingTopK
-    # carry) — the (n, B) RWMD matrix never reaches HBM; the engine-less
-    # fallback keeps the materialized reference path.  Both orders are
-    # identical, ties included (shared lexicographic tie-break).
-    if engine is not None:
+    # Stage 0 (optional): cell routing + centroid/triangle bound — whole
+    # cells leave the cascade before any phase-1 work.  Stage 1: LC-RWMD
+    # lower bounds + candidate selection.  With an engine, selection
+    # happens INSIDE the streaming phase-2 pass (StreamingTopK carry) — the
+    # (n, B) RWMD matrix never reaches HBM; the engine-less fallback keeps
+    # the materialized reference path.  Both orders are identical, ties
+    # included (shared lexicographic tie-break).
+    if index is not None:
+        route = index.route(queries, top_p=top_p)
+        if route.n_docs_pruned and index.obs is not None \
+                and index.obs.metrics.enabled:
+            index.obs.metrics.counter(
+                "cascade_bound_pruned_docs_total",
+                "Docs excluded from phase 1 by the cascade's "
+                "centroid/triangle bound stage.").inc(route.n_docs_pruned)
+        cand = index.routed_topk(queries, budget, route=route)  # (B, budget)
+    elif engine is not None:
         cand = engine.symmetric_topk_streaming(queries, budget)  # (B, budget)
     else:
         d_rwmd = lc_rwmd_symmetric(resident, queries, emb)  # (n, B)
@@ -203,7 +227,11 @@ def pruned_wmd_topk(
     # result is unconditionally exact regardless of the cutoff test.
     exact = cand.dists[:, -1] >= cutoff
     if budget == n:
-        exact = jnp.ones_like(exact)
+        # Routed cascades only get the unconditional certificate when the
+        # routing provably covered every cell for every query.
+        if index is None or (route.keep.all()
+                             and route.cells.shape[1] == index.num_cells):
+            exact = jnp.ones_like(exact)
     topk = topk_lib.topk_from_candidates(wmd_vals, cand.indices, k)
     return PrunedWMDResult(
         topk=topk, rwmd_topk=rwmd_topk, n_refined=n_refined,

@@ -164,6 +164,7 @@ def build_serve_step(
     row_block: int = 128,
     psum_batch: int = 8,
     obs=None,
+    index=None,
 ):
     """Returns jit'd ``serve(resident, queries, emb) -> ServeResult``.
 
@@ -263,6 +264,17 @@ def build_serve_step(
     step's mesh-collective counts from jaxpr inspection
     (``serve_step_collectives_*`` gauges) — so a collective-schedule
     regression shows up in a metrics diff, not a profiler session.
+
+    ``index``: a :class:`repro.index.ClusterIndex` over the (segmented)
+    ``engine``.  The serve step then ROUTES each batch: the index's host
+    routing stage picks the batch's probed cells (top-p by centroid
+    distance, triangle-bound pruned), and the compiled step scans ONLY
+    those cells through ``index.probe_cap`` jit-static probe slots —
+    phase 1 runs per probed cell against that cell's restricted vocab and
+    phase 2 streams only routed rows, so per-query work drops from O(n)
+    to O(n/cells · p).  Batches with different probed-cell SETS reuse one
+    trace (slots are sliced dynamically from the stacked cell tensors);
+    only a cell-shape change (index rebuild/growth) compiles a new step.
     """
     batch_axes = _batch_axes(mesh)
     n_batch_shards = 1
@@ -280,6 +292,23 @@ def build_serve_step(
         kc = min(kc, engine.n_docs if hasattr(engine, "segments")
                  else engine.resident.n_docs)
 
+    if index is not None:
+        if engine is None or not hasattr(engine, "segments"):
+            raise ValueError(
+                "a ClusterIndex serve step needs a SegmentedEngine "
+                "(the index's cells are engine segments)")
+        if streaming is False:
+            raise ValueError(
+                "the routed serve step is streaming-only (d_local "
+                "diagnostics are a monolithic-engine feature)")
+        return _build_routed_serve_step(
+            mesh, engine, index, k=k, kc=kc, refine=refine,
+            bf16_matmul=bf16_matmul, phase1_full_mesh=phase1_full_mesh,
+            batch_axes=batch_axes, n_batch_shards=n_batch_shards,
+            n_model=n_model, rerank_wmd=rerank_wmd, wmd_kw=wmd_kw,
+            self_exclude=self_exclude, row_block=row_block,
+            psum_batch=psum_batch, obs=obs,
+        )
     if engine is not None and hasattr(engine, "segments"):
         if streaming is False:
             raise ValueError(
@@ -885,6 +914,285 @@ def _build_segmented_serve_step(
                                     sinkhorn_kw=wmd_kw)
             exact = cand_max_rwmd >= tk.dists[:, -1]
             if kc >= engine.n_live:  # candidates cover every live doc
+                exact = jnp.ones_like(exact)
+        return ServeResult(topk=tk, d_local=None, pruned_exact=exact)
+
+    return serve
+
+
+def _routed_step(
+    mesh, *, kc, p_max, rb, g, n_cells, self_exclude, bf16_matmul,
+    phase1_full_mesh,
+):
+    """Compiled cluster-routed shard step (one per cell-shape signature).
+
+    Cell tensors arrive STACKED on a leading (replicated) cell axis —
+    (n_cells, rows_pad, ...) with rows sharded over the batch axes — and
+    the batch's probed cells arrive as ``p_max`` jit-STATIC probe slots:
+    ``probed`` (p_max,) int32 cell ids (-1 pads) plus ``q_route``
+    (B, p_max) per-query slot masks.  Each slot dynamic-slices its cell
+    out of the stack, phase-1s against that cell's restricted vocab
+    shard, and streams phase-2 slabs masked by live ∧ routed into ONE
+    shared :class:`~repro.core.topk.StreamingTopK` carry keyed by the
+    cell's per-row GLOBAL ids — then one cross-shard top-k merges shard
+    partials, exactly like the segmented step.  Because slot→cell binding
+    is a traced VALUE, batches probing different cell subsets reuse this
+    trace; pad slots are fully masked (their sliced compute is dead
+    work bounded by p_max, never a correctness hazard).
+
+    Structurally, phase-2 contractions only ever see (slab, ...) operands
+    from the p_max sliced cells — nothing in the jaxpr touches all
+    n_cells · rows_pad rows at once (tests/test_index.py asserts this),
+    which is the O(n) → O(n/cells · p) claim in compiled form.
+    """
+    key = ("routed", _mesh_key(mesh), kc, p_max, rb, g, n_cells,
+           self_exclude, bf16_matmul, phase1_full_mesh)
+    step = _STEP_CACHE.get(key)
+    if step is not None:
+        return step
+
+    batch_axes = _batch_axes(mesh)
+    n_batch_shards = 1
+    for a in batch_axes:
+        n_batch_shards *= mesh.shape[a]
+
+    def _z_and_span(t_q, q_valid, emb_local):
+        v_local = emb_local.shape[0]
+        z_local = _z_from_t(emb_local, t_q, q_valid, bf16_matmul=bf16_matmul)
+        if phase1_full_mesh:
+            for a in reversed(batch_axes):
+                z_local = jax.lax.all_gather(z_local, a, axis=0, tiled=True)
+            return z_local, v_local * n_batch_shards
+        return z_local, v_local
+
+    def kernel(c_rids, c_rw, c_live, c_gids, probed, q_route, t_q, q_valid,
+               q_gid, c_embs):
+        b = t_q.shape[0]
+        rows_local = c_rids.shape[1]
+        h1 = c_rids.shape[2]
+        stk = StreamingTopK(min(kc, p_max * rows_local))
+        carry = stk.init(b)
+        blk = rb * g
+        nb = rows_local // blk
+        for s in range(p_max):
+            # Pad slots (probed = -1) clip to cell 0; their q_route column
+            # is all-False, so every row they contribute is masked +inf.
+            cid = jnp.clip(probed[s], 0, n_cells - 1)
+            rids = jax.lax.dynamic_index_in_dim(c_rids, cid, 0, False)
+            rw = jax.lax.dynamic_index_in_dim(c_rw, cid, 0, False)
+            live = jax.lax.dynamic_index_in_dim(c_live, cid, 0, False)
+            gids = jax.lax.dynamic_index_in_dim(c_gids, cid, 0, False)
+            emb_c = jax.lax.dynamic_index_in_dim(c_embs, cid, 0, False)
+            z_local, v_span = _z_and_span(t_q, q_valid, emb_c)
+            ids_b = rids.reshape(nb, blk, h1)
+            w_b = rw.reshape(nb, blk, h1)
+            live_b = live.reshape(nb, blk)
+            gid_b = gids.reshape(nb, blk)
+            route_s = q_route[:, s]  # (B,) this slot's per-query mask
+
+            def body(carry, xs, z_local=z_local, v_span=v_span,
+                     route_s=route_s):
+                ids_blk, w_blk, live_blk, gid_blk = xs
+                partial = _phase2_partial(ids_blk, w_blk, z_local, v_span)
+                d_blk = jax.lax.psum(partial, MODEL_AXIS)    # (g·rb, B)
+                d_blk = jnp.where(
+                    live_blk[:, None] & route_s[None, :], d_blk, _INF)
+                if self_exclude:
+                    d_blk = jnp.where(
+                        gid_blk[:, None] == q_gid[None, :], _INF, d_blk)
+                return stk.update_cols(carry, d_blk, gid_blk), None
+
+            carry, _ = jax.lax.scan(
+                body, carry, (ids_b, w_b, live_b, gid_b))
+        tk = crossshard_topk(carry, kc, axis_names=batch_axes)
+        return tk.dists, tk.indices
+
+    bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    rspec = P(None, bspec, None)       # (cells, rows, h) — rows sharded
+    lspec = P(None, bspec)             # (cells, rows)
+    espec = (P(None, (MODEL_AXIS,) + batch_axes, None) if phase1_full_mesh
+             else P(None, MODEL_AXIS, None))
+    shmapped = compat_shard_map(
+        kernel, mesh=mesh,
+        in_specs=(rspec, rspec, lspec, lspec, P(None), P(None, None),
+                  P(None, None, None), P(None, None), P(None), espec),
+        out_specs=(P(None, None), P(None, None)),
+    )
+
+    @jax.jit
+    def step(c_rids, c_rw, c_live, c_gids, probed, q_route, t_q, q_valid,
+             q_gid, c_embs):
+        tk_d, tk_i = shmapped(c_rids, c_rw, c_live, c_gids, probed,
+                              q_route, t_q, q_valid, q_gid, c_embs)
+        return TopK(tk_d, tk_i)
+
+    step = _sentinel.wrap(
+        f"step_cache.routed[kc={kc},p={p_max},cells={n_cells}]", step)
+    _STEP_CACHE[key] = step
+    return step
+
+
+def _build_routed_serve_step(
+    mesh, engine, index, *, k, kc, refine, bf16_matmul, phase1_full_mesh,
+    batch_axes, n_batch_shards, n_model, rerank_wmd=False, wmd_kw=None,
+    self_exclude=False, row_block=128, psum_batch=8, obs=None,
+):
+    """Serve step routed through a :class:`repro.index.ClusterIndex`.
+
+    Host side per batch: ``index.route`` picks each query's top-p cells
+    (triangle-bound pruned), the batch's probed-cell UNION is packed into
+    ``index.probe_cap`` static slots (overflow drops the least-requested
+    cells, counted in ``index_probe_overflow_total``), and the compiled
+    step scans only those slots.  Device state — per-cell row tensors,
+    global-id maps, live masks, restricted embedding shards — is stacked
+    on a leading cell axis and re-placed whenever ``engine.version`` OR
+    ``index.version`` moves, so ingest (``index.add``), deletes (no index
+    call at all), and compaction (``index.rebuild``) are all admissible
+    between batches; only a cell-SHAPE change re-traces.
+    """
+    from jax.sharding import NamedSharding
+
+    p_max = index.probe_cap
+    bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    emb_shards = n_model * (n_batch_shards if phase1_full_mesh else 1)
+    state: dict = {"key": None}
+    _m_step, _probe = _obs_step_instrument(obs, "routed")
+
+    def _refresh():
+        index._sync_live()  # raises if engine grew without index.add
+        key = (engine.version, index.version)
+        if state["key"] == key:
+            return
+        rows_cap = index.rows_cap
+        rb, g, row_mult = _slab_geometry(
+            rows_cap, n_batch_shards, row_block, psum_batch, True)
+        live = engine.live_mask()
+        rids, rw, lv, gids, embs = [], [], [], [], []
+        for cell in index.cells:
+            t = cell.segment.tensors
+            rids.append(_pad_rows_mult(t.r_ids, row_mult))
+            rw.append(_pad_rows_mult(t.r_w, row_mult))
+            lv_np = np.zeros(rids[-1].shape[0], dtype=bool)
+            if len(cell.members):
+                lv_np[:len(cell.members)] = live[cell.members]
+            lv.append(jnp.asarray(lv_np))
+            gids.append(_pad_rows_mult(cell.gids_dev, row_mult, value=-1))
+            embs.append(_pad_rows_mult(t.emb_r, emb_shards))
+        rows_pad = int(rids[0].shape[0])
+        if p_max * rows_pad < k:
+            raise ValueError(
+                f"probe_cap={p_max} × padded cell rows {rows_pad} cannot "
+                f"yield k={k} candidates; raise probe_cap or num_cells")
+        state["kc"] = min(kc, p_max * rows_pad)
+        state["rids"] = jax.device_put(
+            jnp.stack(rids), NamedSharding(mesh, P(None, bspec, None)))
+        state["rw"] = jax.device_put(
+            jnp.stack(rw), NamedSharding(mesh, P(None, bspec, None)))
+        state["live"] = jax.device_put(
+            jnp.stack(lv), NamedSharding(mesh, P(None, bspec)))
+        state["gids"] = jax.device_put(
+            jnp.stack(gids), NamedSharding(mesh, P(None, bspec)))
+        state["embs"] = jax.device_put(
+            jnp.stack(embs), NamedSharding(
+                mesh, P(None, (MODEL_AXIS,) + batch_axes, None)
+                if phase1_full_mesh else P(None, MODEL_AXIS, None)))
+        step = _routed_step(
+            mesh, kc=state["kc"], p_max=p_max, rb=rb, g=g,
+            n_cells=index.num_cells, self_exclude=self_exclude,
+            bf16_matmul=bf16_matmul, phase1_full_mesh=phase1_full_mesh)
+        # A DIFFERENT compiled step (first build, or a cell-shape change
+        # from index growth/rebuild) legitimately traces on its next call;
+        # tell the armed sentinel so.  Same-shape refreshes (deletes, live
+        # churn, value-only re-placement) keep the old step — no scope.
+        state["fresh"] = step is not state.get("step")
+        state["step"] = step
+        # Tier-2 WCD shortlist over the ENGINE's flat resident order (the
+        # degradation ladder bypasses routing entirely).
+        cents = []
+        for seg in engine.segments:
+            n_rows, h1 = seg.docs.ids.shape
+            c = jnp.einsum("nh,nhm->nm", seg.docs.weights,
+                           seg.tensors.t_r.reshape(n_rows, h1, -1))
+            cents.append(c[:seg.n_real])
+        cent = jnp.concatenate(cents, axis=0)
+        state["cent"] = jnp.where(
+            engine.live_mask_device()[:, None], cent, 1e18)
+        state["key"] = key
+
+    def _pack_slots(route, b):
+        """Probed-cell union → (probed (p_max,), q_route (B, p_max))."""
+        probed = route.probed
+        keep = route.keep
+        if len(probed) > p_max:
+            # Slot overflow: keep the cells the most queries asked for.
+            req = np.zeros(index.num_cells, dtype=np.int64)
+            np.add.at(req, route.cells[keep].reshape(-1), 1)
+            order = np.argsort(-req[probed], kind="stable")
+            dropped = probed[order[p_max:]]
+            probed = np.sort(probed[order[:p_max]])
+            keep = keep & ~np.isin(route.cells, dropped)
+            if (index.obs is not None
+                    and getattr(index.obs.metrics, "enabled", False)):
+                index.obs.metrics.counter(
+                    "index_probe_overflow_total",
+                    "Probed cells dropped because a batch's routed-cell "
+                    "union exceeded probe_cap slots.").inc(len(dropped))
+        slots = np.full(p_max, -1, dtype=np.int32)
+        slots[:len(probed)] = probed
+        q_route = np.zeros((b, p_max), dtype=bool)
+        for s, c in enumerate(probed):
+            q_route[:, s] = ((route.cells == c) & keep).any(axis=1)
+        return jnp.asarray(slots), jnp.asarray(q_route)
+
+    def serve(queries: DocSet, query_ids=None, *, tier: int = 0) -> ServeResult:
+        """Tiered routed serve (same ladder as the segmented step)."""
+        if self_exclude and query_ids is None:
+            raise ValueError("self_exclude serve step needs query_ids (B,)")
+        tier = int(tier)
+        _refresh()
+        t_q = engine.gather_queries(queries.ids)
+        q_valid = (queries.weights > 0).astype(jnp.float32)
+        q_gid = (jnp.asarray(query_ids, jnp.int32) if self_exclude
+                 else jnp.full((queries.n_docs,), -1, jnp.int32))
+        if tier >= 2:  # QualityTier.WCD — no routing on the last rung
+            tk = _wcd_topk_step(k, self_exclude, state["cent"], t_q,
+                                queries.weights, q_gid)
+            return ServeResult(topk=tk, d_local=None, pruned_exact=None,
+                               tier=tier)
+        route = index.route(queries)
+        slots, q_route = _pack_slots(route, queries.n_docs)
+        step_args = (state["rids"], state["rw"], state["live"],
+                     state["gids"], slots, q_route, t_q, q_valid, q_gid,
+                     state["embs"])
+        if _probe is not None:
+            _probe(state["step"], step_args)
+        _t_step = time.perf_counter()
+        if state.pop("fresh", False):
+            with _sentinel.expect("routed index cell-shape change"):
+                tk = state["step"](*step_args)
+        else:
+            tk = state["step"](*step_args)
+        if _m_step is not None:
+            _m_step.observe(time.perf_counter() - _t_step)
+        if tier >= 1:  # QualityTier.LCRWMD: candidates ARE the answer
+            return ServeResult(
+                topk=TopK(tk.dists[:, :k], tk.indices[:, :k]),
+                d_local=None, pruned_exact=None, tier=tier)
+        cand_max_rwmd = tk.dists[:, -1]
+        exact = None
+        if refine:
+            tk = _symmetric_refine(
+                engine.resident, queries, engine.emb_full, tk)
+        if rerank_wmd:
+            tk = engine.rerank_topk(queries, tk.indices, k,
+                                    sinkhorn_kw=wmd_kw)
+            # Exactness is RELATIVE TO THE ROUTED CELLS (the pipeline's
+            # index-stage contract); promote to a corpus-wide certificate
+            # only when routing provably covered every live doc.
+            exact = cand_max_rwmd >= tk.dists[:, -1]
+            if (state["kc"] >= engine.n_live
+                    and route.cells.shape[1] == index.num_cells
+                    and bool(route.keep.all())):
                 exact = jnp.ones_like(exact)
         return ServeResult(topk=tk, d_local=None, pruned_exact=exact)
 

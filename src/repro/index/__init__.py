@@ -1,0 +1,28 @@
+"""`repro.index` — IVF-style cluster-routed serving index (ROADMAP item 1).
+
+A flat scan of the resident corpus is linear in corpus size per query —
+the wrong asymptotic for millions of docs.  :class:`ClusterIndex`
+partitions a :class:`~repro.core.lc_rwmd.SegmentedEngine`'s corpus into
+``num_cells`` cells with the existing k-centers/k-medoids machinery
+(:mod:`repro.workloads.clustering`), materializes each cell as its own
+:class:`~repro.core.lc_rwmd.EngineSegment` (per-cell v_e restriction,
+uniform padded shapes so every cell shares ONE jit trace), and routes each
+query to its ``top_p`` nearest cells by WCD centroid distance — the
+streaming O(k·B) phase-2 then runs only over routed cells, changing the
+serve asymptotic from O(n) to O(n/cells · p) per query.
+
+A centroid/triangle-inequality bound (Werner & Laber, arXiv 1912.00509)
+optionally prunes routed cells that provably cannot contain a competitive
+match before any phase-1/phase-2 work; the same bound powers the new
+pre-phase-1 cascade stage in :func:`repro.core.pipeline.pruned_wmd_topk`.
+
+Exhaustive routing (``top_p = num_cells``, bound disabled) is
+*bit-identical* — distances AND indices, ties included — to the flat
+segmented scan: per-cell folds reuse the exact streaming fold and
+lexicographic (distance, global id) tie order of the engine
+(tests/test_index.py).
+"""
+
+from repro.index.cluster_index import ClusterIndex, IndexConfig, RouteResult
+
+__all__ = ["ClusterIndex", "IndexConfig", "RouteResult"]

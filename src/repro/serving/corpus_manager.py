@@ -67,6 +67,10 @@ class CorpusState:
 
     __slots__ = ("corpus_id", "engine", "budget", "serve")
 
+    #: Routed-serving index; always None on the plain state (the serving
+    #: core reads ``st.index`` uniformly).
+    index = None
+
     def __init__(self, corpus_id: str, engine: SegmentedEngine,
                  budget: AdaptiveRefineBudget | None = None):
         self.corpus_id = corpus_id
@@ -78,6 +82,33 @@ class CorpusState:
     def nbytes(self) -> int:
         """Device bytes this corpus pins (the eviction accounting unit)."""
         return self.engine.nbytes
+
+
+class IndexedCorpusState(CorpusState):
+    """A corpus state that carries a :class:`repro.index.ClusterIndex`.
+
+    The index's per-cell tensors and centroids are device-resident beside
+    the engine's, so they COUNT toward the manager's byte accounting (an
+    indexed corpus is roughly twice the eviction weight).  Lifecycle
+    coupling lives in the manager: ingest appends to the nearest cell
+    (:meth:`ClusterIndex.add`), deletes need nothing (live masks re-derive
+    from the engine), and compaction re-partitions deterministically
+    (:meth:`ClusterIndex.rebuild` — same seed, same cells).
+    """
+
+    __slots__ = ("index",)
+
+    def __init__(self, corpus_id: str, engine: SegmentedEngine,
+                 budget: AdaptiveRefineBudget | None = None, index=None):
+        super().__init__(corpus_id, engine, budget)
+        self.index = index
+
+    @property
+    def nbytes(self) -> int:
+        n = self.engine.nbytes
+        if self.index is not None:
+            n += self.index.nbytes
+        return n
 
 
 class _Evicted(NamedTuple):
@@ -106,6 +137,7 @@ class CorpusManager:
                  make_budget: Callable[[SegmentedEngine],
                                        AdaptiveRefineBudget | None]
                  | None = None,
+                 make_index: Callable[[SegmentedEngine], object] | None = None,
                  dedup_threshold: float | None = None,
                  obs=None):
         self.emb = jnp.asarray(emb)
@@ -113,6 +145,7 @@ class CorpusManager:
         self.dedup_threshold = dedup_threshold
         self._engine_kw = dict(engine_kw or {})
         self._make_budget = make_budget
+        self._make_index = make_index
         self._states: OrderedDict[str, CorpusState] = OrderedDict()
         self._evicted: dict[str, _Evicted] = {}
         # Shared with the serving core: held across checkout+dispatch and
@@ -197,7 +230,7 @@ class CorpusManager:
                 raise ValueError(f"corpus {corpus_id!r} already exists")
             engine = SegmentedEngine(docs, self.emb, **self._engine_kw)
             budget = self._make_budget(engine) if self._make_budget else None
-            st = CorpusState(corpus_id, engine, budget)
+            st = self._new_state(corpus_id, engine, budget)
             self._states[corpus_id] = st
             self._enforce_budget(keep=corpus_id)
             self._set_resident_gauge_locked()
@@ -233,6 +266,14 @@ class CorpusManager:
             self._set_resident_gauge_locked()
             return st
 
+    def _new_state(self, corpus_id: str, engine: SegmentedEngine,
+                   budget) -> CorpusState:
+        """Plain or indexed state, depending on the ``make_index`` hook."""
+        index = self._make_index(engine) if self._make_index else None
+        if index is None:
+            return CorpusState(corpus_id, engine, budget)
+        return IndexedCorpusState(corpus_id, engine, budget, index)
+
     def _readmit(self, corpus_id: str, snap: _Evicted) -> CorpusState:
         docs = DocSet(ids=jnp.asarray(snap.ids),
                       weights=jnp.asarray(snap.weights))
@@ -244,7 +285,9 @@ class CorpusManager:
             # The decay floor was measured pre-eviction; the rebuilt step
             # must be allowed to re-probe it (satellite: stale-floor reset).
             snap.budget.reset_decay_floor()
-        return CorpusState(corpus_id, engine, snap.budget)
+        # The index is NOT spilled: readmission re-partitions with the
+        # same seed over the same docs, so the cells come back identical.
+        return self._new_state(corpus_id, engine, snap.budget)
 
     # -- eviction ----------------------------------------------------------
     def _enforce_budget(self, keep: str) -> None:
@@ -306,6 +349,9 @@ class CorpusManager:
                     sel = np.nonzero(keep)[0]
                     docs = DocSet(ids=docs.ids[sel], weights=docs.weights[sel])
             gids = st.engine.append(docs)
+            if st.index is not None and len(gids):
+                # Nearest-cell assignment; O(touched cells), not O(corpus).
+                st.index.add(gids, docs)
             if st.budget is not None:
                 st.budget.on_corpus_change(max(1, st.engine.n_live))
             self._enforce_budget(keep=corpus_id)
@@ -326,6 +372,12 @@ class CorpusManager:
         with self.lock:
             st = self.checkout(corpus_id)
             st.engine.compact()
+            if st.index is not None:
+                # Deterministic re-partition (same seed): tombstones are
+                # gone from the merged base, so cells shrink back to the
+                # live set and radii tighten.
+                st.index.rebuild()
 
 
-__all__ = ["DEFAULT_CORPUS", "CorpusManager", "CorpusState"]
+__all__ = ["DEFAULT_CORPUS", "CorpusManager", "CorpusState",
+           "IndexedCorpusState"]

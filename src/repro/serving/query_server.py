@@ -151,6 +151,10 @@ class ServerConfig:
     fail_streak_down: int = 2          # consecutive stage failures before down-step
     max_tier: int = 2                  # deepest shed (2 = WCD shortlist)
     max_worker_restarts: int = 3       # supervisor gives up past this
+    # Cluster-routed serving (repro.index): an IndexConfig builds one
+    # ClusterIndex per corpus — serve batches route to top-p cells instead
+    # of scanning the whole corpus (O(n) → O(n/cells · p) per query).
+    index: Any = None                  # repro.index.IndexConfig | None
     # Corpus lifecycle / multi-tenancy (CorpusManager):
     cache_bytes: int | None = None     # device-byte LRU budget; None = no evict
     delta_pad: int | None = 64         # round ingest deltas for trace reuse
@@ -360,6 +364,7 @@ class _ServeCore:
             self.emb, cache_bytes=cfg.cache_bytes,
             engine_kw=dict(delta_pad=cfg.delta_pad, vocab_pad=cfg.vocab_pad),
             make_budget=self._make_budget,
+            make_index=self._make_index if cfg.index is not None else None,
             dedup_threshold=cfg.dedup_threshold, obs=self.obs)
         self._active = self.manager.add_corpus(DEFAULT_CORPUS, resident)
         self._serve = self._build_serve(
@@ -462,6 +467,15 @@ class _ServeCore:
                 decay_after=cfg.budget_decay_after, obs=self.obs)
         return None
 
+    def _make_index(self, engine):
+        """Per-corpus ClusterIndex from ``cfg.index`` (an IndexConfig)."""
+        icfg = self.cfg.index
+        from repro.index import ClusterIndex
+        return ClusterIndex(
+            engine, num_cells=min(icfg.num_cells, max(1, engine.n_docs)),
+            seed=icfg.seed, top_p=icfg.top_p, bound_slack=icfg.bound_slack,
+            probe_cap=icfg.probe_cap, method=icfg.method, obs=self.obs)
+
     def _build_serve(self, rerank_budget: int):
         # The segmented serve step is streaming-only, so the serving path
         # always fuses selection (cfg.streaming_topk remains a knob for the
@@ -471,7 +485,7 @@ class _ServeCore:
             self._mesh, k=cfg.k, refine=cfg.refine_symmetric,
             bf16_matmul=False, engine=self.engine, rerank_wmd=cfg.rerank_wmd,
             rerank_budget=rerank_budget, wmd_kw=cfg.wmd_kw,
-            streaming=True, obs=self.obs)
+            streaming=True, obs=self.obs, index=self._active.index)
 
     def _activate(self, corpus_id: str | None) -> CorpusState:
         """Check out (readmitting if evicted) and make a corpus active."""

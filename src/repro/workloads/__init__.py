@@ -35,6 +35,7 @@ from repro.workloads.corpus_distance import (
     corpus_vs_corpus_topk,
 )
 from repro.workloads.neighbors import (
+    DUPLICATE_SCORE_FLOOR,
     NeighborGraph,
     connected_components,
     duplicate_groups,
@@ -49,6 +50,7 @@ __all__ = [
     "CorpusTopKResult", "SelfPairScheduler", "TileBlock",
     "corpus_self_topk", "corpus_self_topk_distributed",
     "corpus_vs_corpus_topk",
-    "NeighborGraph", "connected_components", "duplicate_groups",
-    "ingest_dedup_mask", "knn_graph", "near_duplicate_graph",
+    "DUPLICATE_SCORE_FLOOR", "NeighborGraph", "connected_components",
+    "duplicate_groups", "ingest_dedup_mask", "knn_graph",
+    "near_duplicate_graph",
 ]

@@ -52,17 +52,26 @@ class ClusterResult(NamedTuple):
 
 
 def kcenters(
-    engine: LCRWMDEngine, n_clusters: int, *, first: int = 0
+    engine: LCRWMDEngine, n_clusters: int, *, first: int | None = 0,
+    seed: int | None = None,
 ) -> np.ndarray:
     """Greedy k-centers (farthest-first) seeding over the resident corpus.
 
     Returns (n_clusters,) int32 doc ids.  Each step adds the doc farthest
     (symmetric LC-RWMD) from the chosen set — the classic 2-approximation,
     and the standard k-medoids initializer.
+
+    The traversal is deterministic given its starting doc: pass ``seed`` to
+    derive ``first`` from an explicit PRNG (``first=None`` or ``seed``
+    given), so index partitions rebuilt from the same corpus + seed land on
+    identical centers — rebuild/compaction paths rely on this.
     """
     n = engine.resident.n_docs
     if not 1 <= n_clusters <= n:
         raise ValueError(f"need 1 <= n_clusters <= {n}, got {n_clusters}")
+    if seed is not None or first is None:
+        first = int(np.random.default_rng(0 if seed is None else seed)
+                    .integers(0, n))
     centers = [int(first)]
     mind = np.full(n, np.inf, dtype=np.float32)
     for _ in range(n_clusters - 1):
@@ -104,6 +113,18 @@ def _assign_prefiltered(
     return labels.astype(jnp.int32), dist
 
 
+def _resident_t(engine, docs) -> Array:
+    """(n*h, m) resident word embeddings for any engine flavor.
+
+    The flat engine pre-gathers this as ``_t_r``; segmented engines keep
+    embeddings per segment, so gather from the full table on demand.
+    """
+    t_r = getattr(engine, "_t_r", None)
+    if t_r is None:
+        t_r = engine.emb_full[docs.ids.reshape(-1)]
+    return t_r
+
+
 @jax.jit
 def _assign_full(d_block: Array):
     """(n, k) engine block → (labels, dist)."""
@@ -135,6 +156,7 @@ def kmedoids(
     sinkhorn_kw: dict | None = None,
     medoid_candidates: int = 4,
     init: np.ndarray | None = None,
+    seed: int | None = None,
 ) -> ClusterResult:
     """k-medoids over the engine's resident corpus (see module docstring).
 
@@ -155,6 +177,10 @@ def kmedoids(
     of the RWMD bound (requires ``prefilter``); ``sinkhorn_kw`` forwards
     solver knobs.
     ``medoid_candidates``: shortlist size for the medoid-update stage.
+    ``seed``: explicit PRNG seed forwarded to the :func:`kcenters`
+    initializer (ignored when ``init`` is given).  Every downstream stage
+    is deterministic given the init, so a fixed seed makes the whole
+    clustering reproducible across rebuilds of the same corpus.
     """
     n = engine.resident.n_docs
     if rerank_wmd and prefilter is None:
@@ -163,12 +189,13 @@ def kmedoids(
         prefilter = max(1, min(prefilter, n_clusters))
     docs = engine.resident
     n_h = docs.ids.shape[1]
-    t_r = engine._t_r.reshape(n, n_h, -1)  # pre-gathered doc word embeddings
+    t_r = _resident_t(engine, docs).reshape(n, n_h, -1)
     cen = centroids_from_t(docs.weights, t_r)  # WCD centroids, gather-free
     sink_items = tuple(sorted((sinkhorn_kw or {}).items()))
 
     medoids = np.asarray(
-        kcenters(engine, n_clusters) if init is None else init, dtype=np.int32)
+        kcenters(engine, n_clusters, seed=seed) if init is None else init,
+        dtype=np.int32)
     labels = np.zeros(n, dtype=np.int32)
     obj = float("inf")
     it = 0
@@ -231,7 +258,7 @@ def kmedoids_wcd_baseline(
     """
     n = engine.resident.n_docs
     docs = engine.resident
-    t_r = engine._t_r.reshape(n, docs.ids.shape[1], -1)
+    t_r = _resident_t(engine, docs).reshape(n, docs.ids.shape[1], -1)
     cen = np.asarray(centroids_from_t(docs.weights, t_r))
 
     # Farthest-first on WCD for seeding (mirrors kcenters).

@@ -19,6 +19,7 @@ true WMD near-duplicates at the same threshold (no false dismissals).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -27,6 +28,30 @@ import numpy as np
 
 from repro.core.lc_rwmd import LCRWMDEngine
 from repro.workloads.corpus_distance import SelfPairScheduler, corpus_self_topk
+
+#: Numeric noise floor of the symmetric LC-RWMD score for EXACT copies.
+#: Phase-1 distances come from the matmul form ``||a||² + ||b||² − 2ab``
+#: whose cancellation error survives the sqrt, so identical docs score
+#: ~7e-4 — NOT 0.  Thresholds below this floor silently miss exact
+#: duplicates; :func:`near_duplicate_graph` and :func:`ingest_dedup_mask`
+#: clamp up to it (with a warning) instead of failing silently.
+DUPLICATE_SCORE_FLOOR: float = 1e-2
+
+
+def _floor_threshold(threshold: float, caller: str) -> float:
+    """Validate/clamp a near-duplicate threshold against the noise floor."""
+    if not threshold > 0.0:
+        raise ValueError(
+            f"{caller}: threshold must be > 0, got {threshold!r}")
+    if threshold < DUPLICATE_SCORE_FLOOR:
+        warnings.warn(
+            f"{caller}: threshold {threshold:g} is below the symmetric "
+            f"LC-RWMD numeric noise floor ({DUPLICATE_SCORE_FLOOR:g}); "
+            f"exact duplicates score ~7e-4, not 0, so this threshold would "
+            f"silently miss them.  Clamping to {DUPLICATE_SCORE_FLOOR:g}.",
+            stacklevel=3)
+        return DUPLICATE_SCORE_FLOOR
+    return threshold
 
 
 class NeighborGraph(NamedTuple):
@@ -90,6 +115,7 @@ def near_duplicate_graph(
     survivor count overflows the cap falls back to a host-side
     ``np.nonzero`` of that one block.
     """
+    threshold = _floor_threshold(threshold, "near_duplicate_graph")
     n = engine.resident.n_docs
     sched = SelfPairScheduler(engine, tile=tile)
     cap = block_edge_cap or 4 * sched.tile
@@ -175,9 +201,11 @@ def ingest_dedup_mask(
     Pick ``threshold`` above the numeric noise floor: EXACT copies score
     ~1e-3 (not 0) because phase-1 distances come from the matmul-form
     ``||a||² + ||b||² − 2ab`` whose cancellation error survives the sqrt
-    (see the streaming-symmetric note in tests/test_streaming_topk.py);
-    thresholds ≥ 1e-2 are safely above it on real embeddings.
+    (see the streaming-topk note in tests/test_streaming_topk.py);
+    thresholds below :data:`DUPLICATE_SCORE_FLOOR` (1e-2) would silently
+    admit exact copies, so they are clamped up to it with a warning.
     """
+    threshold = _floor_threshold(threshold, "ingest_dedup_mask")
     b = docs.n_docs
     keep = np.ones(b, dtype=bool)
     if getattr(engine, "n_live", engine.resident.n_docs if engine else 0):

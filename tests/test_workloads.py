@@ -234,3 +234,33 @@ def test_knn_graph_mutual_subset_of_union(small_corpus, engine):
     for i in range(mutual.n_docs):
         for j in mutual.indices[mutual.indptr[i]:mutual.indptr[i + 1]]:
             assert (i, int(j)) in ue
+
+
+def test_near_duplicate_threshold_floor_warns_and_clamps(small_corpus,
+                                                         dup_corpus):
+    """A threshold below the numeric noise floor is clamped up with a
+    warning — and the planted exact copies are still caught."""
+    from repro.workloads import DUPLICATE_SCORE_FLOOR
+
+    eng = LCRWMDEngine(dup_corpus, jnp.asarray(small_corpus.emb))
+    with pytest.warns(UserWarning, match="noise floor"):
+        g = near_duplicate_graph(eng, DUPLICATE_SCORE_FLOOR / 100, tile=40)
+    groups = [sorted(gr.tolist()) for gr in duplicate_groups(g)]
+    assert [5, 50, 77] in groups
+    assert [7, 90] in groups
+
+
+def test_kcenters_seed_reproducible(engine):
+    a = kcenters(engine, 5, seed=42)
+    b = kcenters(engine, 5, seed=42)
+    np.testing.assert_array_equal(a, b)
+    c = kcenters(engine, 5, seed=43)
+    d = kcenters(engine, 5, first=None, seed=43)
+    np.testing.assert_array_equal(c, d)   # seed wins over default first
+
+
+def test_kmedoids_seed_reproducible(engine):
+    a = kmedoids(engine, 4, seed=9, n_iters=3)
+    b = kmedoids(engine, 4, seed=9, n_iters=3)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(a.medoids, b.medoids)
