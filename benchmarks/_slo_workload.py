@@ -1,0 +1,88 @@
+"""Numpy-only workload pieces for the open-loop SLO harness.
+
+Separate from ``serving_bench`` on purpose, twice over:
+
+* :class:`BenchVectorizer` must be spawn-picklable BY REFERENCE — each
+  ingest worker re-imports its defining module, and ``serving_bench``
+  (via ``benchmarks.common``) drags the full jax import into every
+  child.  This module imports numpy only.
+* The latency estimators are unit-tested against numpy oracles in
+  ``tests/test_async_serving.py`` without paying the bench's jax/corpus
+  setup at collection time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BenchVectorizer:
+    """payload (int seed) -> deterministic (ids, weights) histogram.
+
+    A pure function of ``(payload, vocab, h_max, tokens)``: parent and
+    worker processes produce bit-identical histograms, so the pooled and
+    in-thread servers stay answer-compatible.  ``tokens`` sets the host
+    cost (draw + bincount + top-k — the real tokenizer's shape of work);
+    ``spin`` adds extra bit-preserving busy-work on top.
+    """
+
+    vocab: int = 2048
+    h_max: int = 16
+    tokens: int = 8000
+    spin: int = 0
+
+    def __call__(self, payload) -> tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng(int(payload))
+        toks = rng.integers(0, self.vocab, size=self.tokens)
+        counts = np.bincount(toks, minlength=self.vocab)
+        top = np.argpartition(counts, -self.h_max)[-self.h_max:]
+        top = top[counts[top] > 0]
+        top = top[np.argsort(-counts[top], kind="stable")]
+        ids = top.astype(np.int32)
+        w = counts[top].astype(np.float32)
+        for _ in range(self.spin):
+            w = np.sqrt(w * w)
+        return ids, w
+
+
+def poisson_schedule(rate_qps: float, n: int, seed: int) -> np.ndarray:
+    """Seeded OPEN-LOOP arrival offsets (seconds from t0), sorted.
+
+    Inter-arrival gaps are iid Exp(1/rate) — a Poisson process at
+    ``rate_qps`` — so the offered load never adapts to server progress.
+    Same ``(rate, n, seed)`` -> bit-identical schedule (the benchmark's
+    reproducibility contract).
+    """
+    if rate_qps <= 0:
+        raise ValueError(f"rate_qps must be positive, got {rate_qps}")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_qps, size=int(n)))
+
+
+def percentile_sorted(sorted_vals, q: float) -> float:
+    """Linear-interpolation percentile of a PRE-SORTED 1-D array.
+
+    Matches ``np.percentile(..., method="linear")`` exactly (the unit
+    test pins the parity); kept handwritten so the harness's latency
+    math is self-contained and O(1) once the run's latencies are sorted.
+    """
+    a = np.asarray(sorted_vals, dtype=np.float64)
+    if a.ndim != 1 or len(a) == 0:
+        raise ValueError("percentile_sorted needs a non-empty 1-D array")
+    if not 0 <= q <= 100:
+        raise ValueError(f"q must be in [0, 100], got {q}")
+    pos = (len(a) - 1) * (q / 100.0)
+    lo = int(np.floor(pos))
+    hi = min(lo + 1, len(a) - 1)
+    frac = pos - lo
+    return float(a[lo] * (1.0 - frac) + a[hi] * frac)
+
+
+def slo_violations(latencies_s, slo_ms: float) -> int:
+    """Queries whose end-to-end latency (from SCHEDULED arrival — queueing
+    delay included, no coordinated omission) exceeded the SLO."""
+    lat = np.asarray(latencies_s, dtype=np.float64)
+    return int(np.sum(lat > slo_ms / 1e3))

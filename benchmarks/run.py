@@ -53,6 +53,7 @@ def main() -> None:
         robustness_bench,
         scaling_analysis,
         serving_bench,
+        slo_bench,
         table3_complexity,
         workloads_bench,
     )
@@ -66,6 +67,7 @@ def main() -> None:
         "kernels_bench": kernels_bench,
         "scaling_analysis": scaling_analysis,
         "serving_bench": serving_bench,
+        "slo_bench": slo_bench,
         "index_bench": index_bench,
         "lifecycle_bench": lifecycle_bench,
         "obs_bench": obs_overhead_bench,

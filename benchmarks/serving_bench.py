@@ -221,3 +221,178 @@ def run():
 if __name__ == "__main__":
     for r in run():
         print(r.csv())
+
+
+# ---------------------------------------------------------------------------
+# Open-loop SLO harness (host-plane scale-out PR).
+#
+# The bench above answers "how fast can the pipeline go" (closed loop: the
+# next submit waits for backpressure).  Production SLOs are about OPEN loop:
+# queries arrive on a Poisson clock that does not care whether the server is
+# keeping up, and latency is measured from the SCHEDULED arrival — so the
+# queueing delay of a saturated server counts in full (no coordinated
+# omission).  The sweep drives offered load past saturation for the
+# single-thread host plane (`ingest_workers=0`) and the multi-process one
+# (`ingest_workers=2`), and the acceptance number is the KNEE ratio: the
+# highest offered load each mode sustains (achieved >= 0.9x offered, p99 <=
+# SLO) must grow >= 1.5x with the pool.  Persisted as BENCH_slo.json via
+# `benchmarks.slo_bench`; recorded in EXPERIMENTS.md §Serving SLO.
+# ---------------------------------------------------------------------------
+
+SLO_MS = 200.0
+SLO_SWEEP = (0.5, 0.8, 1.1, 1.5, 2.0)
+# Enough queries per sweep point that the last-batch flush tail (~one
+# max_wait + serve) amortizes under the 10% sustainment slack — with too
+# few, even a half-loaded server "misses" its offered rate on the tail.
+SLO_QUERIES = 320
+SLO_KNEE_RATIO = 1.5
+SLO_H_MAX = 16
+# Host-dominated operating point: a deliberately heavy vectorizer (~0.7 ms/
+# query, >= 2x the per-query device cost at batch 64) against a small
+# corpus, so the ingest pool has host work to absorb.
+SLO_TOKENS = 120000
+
+
+def _slo_server(corpus, mesh, workers: int):
+    from repro.serving import AsyncQueryServer, ServerConfig
+
+    from benchmarks._slo_workload import BenchVectorizer
+
+    cfg = ServerConfig(
+        k=8, max_batch=64, h_max=SLO_H_MAX, max_wait_s=0.01,
+        queue_capacity=4096, ingest_workers=workers,
+        staging_slots=256 if workers else None)
+    vec = BenchVectorizer(vocab=2048, h_max=SLO_H_MAX, tokens=SLO_TOKENS)
+    return AsyncQueryServer(corpus.docs, corpus.emb, mesh, cfg,
+                            preprocess=vec), vec
+
+
+def run_open_loop(server, payloads, schedule, *, timeout_s: float = 180.0):
+    """Drive one open-loop run; returns (latencies_s, errors, achieved_qps).
+
+    Submissions happen at their schedule offsets regardless of completions;
+    each query's latency clock starts at its SCHEDULED arrival, so time a
+    late submit spends waiting on backpressure is charged to the server.
+    """
+    n = len(payloads)
+    lat = np.full(n, np.nan)
+    t0 = time.perf_counter()
+    futs = []
+    for i, (p, off) in enumerate(zip(payloads, schedule)):
+        delay = t0 + off - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        f = server.submit(p)
+        f.add_done_callback(
+            lambda _f, i=i, off=off: lat.__setitem__(
+                i, time.perf_counter() - t0 - off))
+        futs.append(f)
+    server.drain()
+    errors = 0
+    for f in futs:
+        try:
+            f.result(timeout=timeout_s)
+        except Exception:
+            errors += 1
+    wall = max(time.perf_counter() - t0, 1e-9)
+    return lat, errors, (n - errors) / wall
+
+
+def _closed_loop_qps(server, payloads) -> float:
+    t0 = time.perf_counter()
+    futs = [server.submit(*p) if isinstance(p, tuple) else server.submit(p)
+            for p in payloads]
+    server.drain()
+    for f in futs:
+        f.result(timeout=180)
+    return len(payloads) / (time.perf_counter() - t0)
+
+
+def run_slo():
+    from repro.launch.mesh import make_host_mesh
+
+    from benchmarks._slo_workload import (
+        percentile_sorted, poisson_schedule, slo_violations)
+
+    corpus = cached_corpus(
+        n_docs=512, vocab_size=2048, emb_dim=32, h_max=SLO_H_MAX,
+        mean_h=10.0, n_classes=4, seed=13)
+    mesh = make_host_mesh()
+    payloads = list(range(SLO_QUERIES))
+    results = []
+
+    # -- capacity probes (closed loop) ------------------------------------
+    with _slo_server(corpus, mesh, 0)[0] as server:
+        vec = server._preprocess
+        for p in payloads[:64]:          # compile + warm-up, untimed
+            server.submit(p)
+        server.drain()
+        c_base = _closed_loop_qps(server, payloads)
+        # Device-side ceiling: pre-vectorized histograms skip host prep.
+        hists = [vec(p) for p in payloads]
+        c_dev = _closed_loop_qps(server, hists)
+    t0 = time.perf_counter()
+    for p in payloads:
+        vec(p)
+    c_host = len(payloads) / (time.perf_counter() - t0)
+
+    # -- offered-load sweep, both host-plane modes ------------------------
+    knees = {}
+    for mode, workers in (("base", 0), ("pool", 2)):
+        knee = 0.0
+        with _slo_server(corpus, mesh, workers)[0] as server:
+            for p in payloads[:64]:      # warm-up: compile + worker spawn
+                server.submit(p)
+            server.drain()
+            for frac in SLO_SWEEP:
+                offered = frac * c_base
+                sched = poisson_schedule(
+                    offered, SLO_QUERIES, seed=int(frac * 10))
+                lat, errors, achieved = run_open_loop(
+                    server, payloads, sched)
+                ok = np.sort(lat[np.isfinite(lat)])
+                p50 = 1e3 * percentile_sorted(ok, 50)
+                p99 = 1e3 * percentile_sorted(ok, 99)
+                viol = slo_violations(ok, SLO_MS)
+                if (errors == 0 and achieved >= 0.9 * offered
+                        and p99 <= SLO_MS):
+                    knee = max(knee, offered)
+                results.append(BenchResult(
+                    f"slo_{mode}_x{frac}", 1e3 * p50,
+                    derived={"offered_qps": round(offered, 1),
+                             "achieved_qps": round(achieved, 1),
+                             "p50_ms": round(p50, 2),
+                             "p99_ms": round(p99, 2),
+                             "slo_violations": viol,
+                             "errors": errors,
+                             "ingest_workers": workers}))
+        knees[mode] = knee
+
+    ratio = knees["pool"] / knees["base"] if knees["base"] else float("nan")
+    # Which side of the house saturates at the pooled knee: if the device
+    # ceiling is comfortably above it, scaling stopped on the HOST side.
+    saturated = "host" if c_dev > 1.2 * knees["pool"] else "device"
+    results.append(BenchResult(
+        "slo_knee", 1e6 / max(c_base, 1e-9),
+        derived={"knee_base_qps": round(knees["base"], 1),
+                 "knee_pool_qps": round(knees["pool"], 1),
+                 "knee_ratio": round(ratio, 3),
+                 "capacity_base_qps": round(c_base, 1),
+                 "device_qps": round(c_dev, 1),
+                 "host_qps_1thread": round(c_host, 1),
+                 "slo_ms": SLO_MS,
+                 "saturated": saturated}))
+
+    # Acceptance: the multi-process host plane must move the knee >= 1.5x
+    # at max_batch 64.  Wall-clock + multicore-dependent, so shared or
+    # single-core runners demote it to a loud warning via SLO_BENCH_SOFT=1
+    # (numbers still land in BENCH_slo.json); enforce on a quiet multicore
+    # machine.
+    msg = (f"ingest-pool knee gain {ratio:.2f}x < {SLO_KNEE_RATIO}x "
+           f"(knees: {knees}, device ceiling {c_dev:.0f} qps)")
+    if not ratio >= SLO_KNEE_RATIO:
+        if os.environ.get("SLO_BENCH_SOFT"):
+            print(f"# WARNING (soft mode): {msg}", flush=True)
+        else:
+            raise AssertionError(msg)
+    return results

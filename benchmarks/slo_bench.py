@@ -1,0 +1,15 @@
+"""Open-loop SLO sweep: offered load vs p50/p99, knee, saturation side.
+
+A registration shim: the harness lives next to the closed-loop pipeline
+bench in :mod:`benchmarks.serving_bench` (they share the serving setup),
+but persists separately as ``BENCH_slo.json`` so the latency-contract
+trajectory accumulates independently of the throughput one.
+"""
+
+from benchmarks.serving_bench import run_slo as run
+
+__all__ = ["run"]
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

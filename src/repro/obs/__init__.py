@@ -26,7 +26,7 @@ from __future__ import annotations
 from repro.obs import sentinel
 from repro.obs.events import (
     BudgetRebuild, CorpusEvicted, CorpusReadmitted, Event, EventLog,
-    QueryQuarantined, TierTransition, WorkerRestart,
+    IngestCrash, QueryQuarantined, TierTransition, WorkerRestart,
 )
 from repro.obs.metrics import (
     COUNT_BUCKETS, Counter, DEFAULT_BUCKETS, Gauge, Histogram,
@@ -131,7 +131,8 @@ def jaxpr_collective_counts(fn, *args, **kwargs) -> dict[str, int]:
 __all__ = [
     "BatchTrace", "BudgetRebuild", "COLLECTIVE_PRIMS", "COUNT_BUCKETS",
     "CorpusEvicted", "CorpusReadmitted", "Counter", "DEFAULT_BUCKETS",
-    "Event", "EventLog", "Gauge", "Histogram", "MetricsRegistry",
+    "Event", "EventLog", "Gauge", "Histogram", "IngestCrash",
+    "MetricsRegistry",
     "Observability", "QueryQuarantined", "QueryTrace", "RetraceError",
     "STAGES", "TierTransition", "Tracer", "WorkerRestart",
     "get_default", "jaxpr_collective_counts", "profiler_session",

@@ -57,6 +57,17 @@ class QueryQuarantined(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class IngestCrash(Event):
+    """An ingest-pool worker process died; a replacement was spawned
+    (or the pool gave up, when ``restarts`` exceeded the cap)."""
+
+    worker: int      # pool worker index
+    ticket: int      # claimed ticket at death (-1 = none attributable)
+    exit_code: int
+    restarts: int    # cumulative pool restarts including this death
+
+
+@dataclasses.dataclass(frozen=True)
 class CorpusEvicted(Event):
     """CorpusManager pushed an engine's resident tensors back to host."""
 
@@ -111,5 +122,6 @@ class EventLog:
 
 __all__ = [
     "BudgetRebuild", "CorpusEvicted", "CorpusReadmitted", "Event",
-    "EventLog", "QueryQuarantined", "TierTransition", "WorkerRestart",
+    "EventLog", "IngestCrash", "QueryQuarantined", "TierTransition",
+    "WorkerRestart",
 ]

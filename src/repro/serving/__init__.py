@@ -3,48 +3,70 @@
 :class:`QueryServer` is the synchronous reference server;
 :class:`AsyncQueryServer` is the double-buffered pipeline (``submit`` →
 :class:`ServeFuture`, host batching overlapped with device serve).  See
-``docs/ARCHITECTURE.md`` §Serving for the pipeline diagram and §Failure
-modes for the degradation tiers, the typed error contract
-(:mod:`repro.serving.errors`), and the worker supervisor lifecycle.
-Deterministic fault injection lives in :mod:`repro.serving.faults`.
+``docs/ARCHITECTURE.md`` §Serving for the pipeline diagram, §Host plane
+for the multi-process ingest pool (:class:`IngestPool` + the zero-copy
+:class:`StagingRing`), and §Failure modes for the degradation tiers, the
+typed error contract (:mod:`repro.serving.errors`), and the worker
+supervisor lifecycle.  Deterministic fault injection lives in
+:mod:`repro.serving.faults`.
 
 Observability (``docs/ARCHITECTURE.md`` §Observability): every server
 owns a :class:`repro.obs.Observability` bundle — metrics registry,
 request tracer, event log — exported via ``server.metrics_snapshot()``
 (JSON) and ``server.obs.render_prometheus()`` (text exposition); the
 process-wide re-trace sentinel lives in :mod:`repro.obs.sentinel`.
+
+Exports resolve LAZILY (PEP 562): spawned ingest-pool workers import
+``repro.serving.ingest_pool``, which triggers this package ``__init__`` —
+eager re-exports of the jax-backed server modules would make every child
+pay the full jax import before vectorizing its first query.  Only the
+numpy-only modules (``errors``, ``faults``, ``staging``, ``ingest_pool``)
+load in the children; ``query_server``/``corpus_manager``/``repro.obs``
+load on first attribute access in the parent.
 """
 
-from repro.obs import Observability, render_prometheus
+_EXPORTS = {
+    # numpy-only (safe in spawn children):
+    "DeadlineExceeded": "repro.serving.errors",
+    "IngestCrashed": "repro.serving.errors",
+    "PoisonQuery": "repro.serving.errors",
+    "QueryRejected": "repro.serving.errors",
+    "ServerClosed": "repro.serving.errors",
+    "ServingError": "repro.serving.errors",
+    "WorkerCrashed": "repro.serving.errors",
+    "ALL": "repro.serving.faults",
+    "FaultInjector": "repro.serving.faults",
+    "FaultPlan": "repro.serving.faults",
+    "InjectedWorkerCrash": "repro.serving.faults",
+    "StagingRing": "repro.serving.staging",
+    "IngestPool": "repro.serving.ingest_pool",
+    # jax-backed (parent only):
+    "DEFAULT_CORPUS": "repro.serving.corpus_manager",
+    "CorpusManager": "repro.serving.corpus_manager",
+    "CorpusState": "repro.serving.corpus_manager",
+    "Answer": "repro.serving.query_server",
+    "AsyncQueryServer": "repro.serving.query_server",
+    "DegradationController": "repro.serving.query_server",
+    "QueryServer": "repro.serving.query_server",
+    "ServeFuture": "repro.serving.query_server",
+    "ServerConfig": "repro.serving.query_server",
+    "Observability": "repro.obs",
+    "render_prometheus": "repro.obs",
+}
 
-from repro.serving.corpus_manager import (
-    DEFAULT_CORPUS,
-    CorpusManager,
-    CorpusState,
-)
-from repro.serving.errors import (
-    DeadlineExceeded,
-    PoisonQuery,
-    QueryRejected,
-    ServerClosed,
-    ServingError,
-    WorkerCrashed,
-)
-from repro.serving.faults import ALL, FaultInjector, FaultPlan, InjectedWorkerCrash
-from repro.serving.query_server import (
-    Answer,
-    AsyncQueryServer,
-    DegradationController,
-    QueryServer,
-    ServeFuture,
-    ServerConfig,
-)
+__all__ = sorted(_EXPORTS)
 
-__all__ = [
-    "ALL", "Answer", "AsyncQueryServer", "CorpusManager", "CorpusState",
-    "DEFAULT_CORPUS", "DeadlineExceeded",
-    "DegradationController", "FaultInjector", "FaultPlan",
-    "InjectedWorkerCrash", "Observability", "PoisonQuery", "QueryRejected",
-    "QueryServer", "ServeFuture", "ServerClosed", "ServerConfig",
-    "ServingError", "WorkerCrashed", "render_prometheus",
-]
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.serving' has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value   # cache: subsequent lookups skip this hook
+    return value
+
+
+def __dir__():
+    return __all__

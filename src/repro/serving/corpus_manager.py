@@ -148,6 +148,11 @@ class CorpusManager:
         self._make_index = make_index
         self._states: OrderedDict[str, CorpusState] = OrderedDict()
         self._evicted: dict[str, _Evicted] = {}
+        # Per-corpus query vectorizers (preprocess hooks).  Routed to the
+        # ingest pool when one is configured — pool workers are separate
+        # PROCESSES, so these must be picklable (dataclass vectorizers
+        # like repro.data.vectorizer.* qualify; closures do not).
+        self.vectorizers: dict[str, Callable] = {}
         # Shared with the serving core: held across checkout+dispatch and
         # every lifecycle mutation, so ingest/delete/compact from another
         # thread land BETWEEN batches, never mid-dispatch.
@@ -222,12 +227,28 @@ class CorpusManager:
             "cache_bytes": self.cache_bytes,
         }
 
+    def vectorizer_for(self, corpus_id: str) -> Callable | None:
+        """This corpus's query vectorizer, or None (server default applies).
+
+        Lock-free like :meth:`has_corpus` — the ingest path must never
+        serialize behind an in-progress dispatch.
+        """
+        return self.vectorizers.get(corpus_id)
+
     # -- admission ---------------------------------------------------------
-    def add_corpus(self, corpus_id: str, docs: DocSet) -> CorpusState:
-        """Build and admit a new corpus; errors on a duplicate id."""
+    def add_corpus(self, corpus_id: str, docs: DocSet,
+                   vectorizer: Callable | None = None) -> CorpusState:
+        """Build and admit a new corpus; errors on a duplicate id.
+
+        ``vectorizer`` (optional) becomes this corpus's query preprocess
+        hook; servers route it to their ingest pool so raw payloads for
+        this tenant vectorize against the right vocabulary.
+        """
         with self.lock:
             if corpus_id in self._states or corpus_id in self._evicted:
                 raise ValueError(f"corpus {corpus_id!r} already exists")
+            if vectorizer is not None:
+                self.vectorizers[corpus_id] = vectorizer
             engine = SegmentedEngine(docs, self.emb, **self._engine_kw)
             budget = self._make_budget(engine) if self._make_budget else None
             st = self._new_state(corpus_id, engine, budget)

@@ -18,8 +18,12 @@ The hierarchy::
     ├── ServerClosed                 (also a RuntimeError) the server shut
     │                                down before this query was answered
     └── WorkerCrashed                the serve worker died mid-batch; the
-                                     supervisor failed this future and
-                                     restarted the worker
+        │                            supervisor failed this future and
+        │                            restarted the worker
+        └── IngestCrashed            an ingest-pool worker PROCESS died
+                                     while vectorizing this query; only
+                                     this query fails, a replacement
+                                     process takes over the queue
 
 This module is intentionally dependency-free: lower layers (e.g.
 ``repro.data.vectorizer``) may raise :class:`PoisonQuery` without importing
@@ -72,4 +76,15 @@ class WorkerCrashed(ServingError):
 
     The supervisor fails affected futures with this error, restarts the
     worker, and preserves submission order for still-queued requests.
+    """
+
+
+class IngestCrashed(WorkerCrashed):
+    """An ingest-pool worker process died while vectorizing this query.
+
+    Subclasses :class:`WorkerCrashed` so callers handling crash-class
+    failures need no new clause.  The blast radius is ONE query: the
+    crash is attributed through the staging ring's claim word, queued
+    tickets survive on the dead worker's queue, and a replacement process
+    resumes them in FIFO order.
     """

@@ -71,9 +71,16 @@ class FaultPlan:
       poison_whole_batch: whether a sticky poison query corrupts all rows of
         any batch containing it (models fused device kernels where one bad
         query wrecks the batch) or only its own row.
+      ingest_crash: pool tickets at which the ingest worker PROCESS
+        handling that ticket dies (``os._exit`` — no cleanup, like a
+        segfaulting vectorizer extension).  Applied inside the child by
+        :mod:`repro.serving.ingest_pool`; with the in-thread prep path
+        this field is inert.  Pool tickets are assigned in submission
+        order, so the index is as deterministic as ``preprocess_errors``.
     """
 
     preprocess_errors: tuple[int, ...] = ()
+    ingest_crash: tuple[int, ...] = ()
     latency_s: Mapping[int, float] = dataclasses.field(default_factory=dict)
     crash_batches: tuple[int, ...] = ()
     nan_batches: Mapping[int, object] = dataclasses.field(default_factory=dict)

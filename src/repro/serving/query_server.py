@@ -75,7 +75,7 @@ import jax.numpy as jnp
 
 from repro.core.lc_rwmd import SegmentedEngine
 from repro.core.pipeline import AdaptiveRefineBudget
-from repro.data.docs import DocSet, make_docset
+from repro.data.docs import DocSet
 from repro.distributed.lcrwmd_dist import ServeResult, build_serve_step
 from repro.obs import (
     COUNT_BUCKETS,
@@ -99,6 +99,7 @@ from repro.serving.errors import (
     ServingError,
     WorkerCrashed,
 )
+from repro.serving.staging import pad_batch
 
 
 class Answer(tuple):
@@ -142,6 +143,15 @@ class ServerConfig:
     # Async pipeline knobs (AsyncQueryServer only):
     queue_capacity: int | None = None  # pending-query bound; default 4*max_batch
     pipeline_depth: int = 2            # device batches in flight (2 = double buffer)
+    # Multi-process host plane (AsyncQueryServer only): with N > 0, raw
+    # payloads vectorize in N spawned ingest worker PROCESSES feeding the
+    # dispatcher through a zero-copy shared-memory staging ring.  Requires
+    # a picklable ``preprocess`` hook (spawn re-imports its module in each
+    # child — dataclass vectorizers qualify, closures don't).  0 keeps the
+    # in-thread prep path (and is what the sync server always uses).
+    ingest_workers: int = 0
+    staging_slots: int | None = None   # ring slots; default 4*max_batch
+    ingest_timeout_s: float = 30.0     # per-ticket staging-ring wait bound
     # Fault tolerance:
     admission_control: bool = True     # reject at submit when deadline unmeetable
     validate_results: bool = True      # non-finite check + bisection quarantine
@@ -269,6 +279,13 @@ class _InFlight(NamedTuple):
     state: Any = None    # CorpusState the batch was served against
     traces: tuple = ()   # per-query QueryTraces (aligned with qs; may be empty)
     btrace: Any = None   # shared BatchTrace (None when tracing is off)
+
+
+class _Staged(NamedTuple):
+    """Queue payload marker: this query's raw payload went to the ingest
+    pool; its vectorized histogram arrives via staging-ring ``ticket``."""
+
+    ticket: int
 
 
 def _check_query(ids, weights) -> None:
@@ -496,8 +513,9 @@ class _ServeCore:
         return st
 
     # -- corpus lifecycle (admissible between batches; manager-locked) -----
-    def add_corpus(self, corpus_id: str, docs: DocSet) -> None:
-        self.manager.add_corpus(corpus_id, docs)
+    def add_corpus(self, corpus_id: str, docs: DocSet,
+                   vectorizer: Callable | None = None) -> None:
+        self.manager.add_corpus(corpus_id, docs, vectorizer=vectorizer)
 
     def ingest(self, docs: DocSet, *, corpus_id: str | None = None,
                dedup_threshold: float | None = None):
@@ -513,31 +531,32 @@ class _ServeCore:
     def pad_batch(self, qs: Sequence[tuple[np.ndarray, np.ndarray]]) -> DocSet:
         """Host prep: pad ≤max_batch histograms to the FIXED (max_batch, h)
         shape so the engine serve step compiles once; padding queries carry
-        weight 0 everywhere and are sliced off at collect time."""
-        h = self.cfg.h_max
-        b = self.cfg.max_batch
-        ids = np.zeros((b, h), np.int32)
-        w = np.zeros((b, h), np.float32)
-        for i, (qi, qw) in enumerate(qs):
-            n = min(len(qi), h)
-            ids[i, :n] = qi[:n]
-            w[i, :n] = qw[:n]
-        return make_docset(np.where(w > 0, ids, -1), w)
+        weight 0 everywhere and are sliced off at collect time.
+
+        Delegates to the module-level :func:`repro.serving.staging.pad_batch`
+        (idempotent — the zero-copy staging path relies on that)."""
+        return pad_batch(qs, self.cfg.max_batch, self.cfg.h_max)
 
     def _raw_serve(self, qs: Sequence[tuple[np.ndarray, np.ndarray]],
                    tier: int, batch_seq: int | None,
-                   btrace=None) -> ServeResult:
+                   btrace=None, t_prep0: float | None = None) -> ServeResult:
         """Pad + serve one chunk at `tier`, with fault hooks applied.
 
         ``batch_seq=None`` marks a validation RETRY: dispatch-time faults
         (latency, crashes, transient NaNs) are skipped — only sticky
         query-keyed poison re-applies — so bisection converges.
         """
-        if btrace is not None:
-            btrace.begin("batch_formation")
+        t_pad0 = time.perf_counter()
         queries = self.pad_batch(qs)
         if btrace is not None:
-            btrace.end("batch_formation")
+            # batch_formation covers ALL host prep of this batch: the
+            # pipeline's vectorize/collect stage (from ``t_prep0``, when
+            # the caller timed it) plus the pad — NOT just the pad.  The
+            # prep half used to be misattributed to queue_wait, hiding
+            # exactly the cost the ingest pool removes.
+            btrace.span("batch_formation",
+                        t_pad0 if t_prep0 is None else t_prep0,
+                        time.perf_counter())
         if self.faults is not None and batch_seq is not None:
             self.faults.on_dispatch(batch_seq)
         # Tier 0 calls the step with its default signature so test spies /
@@ -555,7 +574,9 @@ class _ServeCore:
     def dispatch(self, qs: Sequence[tuple[np.ndarray, np.ndarray]], *,
                  queue_depth: int = 0,
                  corpus_id: str | None = None,
-                 traces: Sequence = ()) -> _InFlight:
+                 traces: Sequence = (),
+                 t_dequeue: float | None = None,
+                 t_prep0: float | None = None) -> _InFlight:
         """Host-prep one ≤max_batch chunk and launch it on the device.
 
         Returns immediately with device handles (JAX async dispatch): the
@@ -568,6 +589,13 @@ class _ServeCore:
         manager lock is held across activation + serve-step launch so a
         concurrent ingest/delete/compact lands between batches, never
         mid-dispatch.
+
+        ``t_dequeue``/``t_prep0`` let a pipelined caller pin the trace
+        boundaries to when the batch actually LEFT the queue and when its
+        host prep started: queue_wait ends at ``t_dequeue`` and
+        batch_formation starts at ``t_prep0``, so preprocess time lands in
+        batch_formation, not queue_wait.  Defaults (None) keep the
+        lock-step behavior: both stamped here, at dispatch entry.
         """
         tier = 0
         if self.controller is not None:
@@ -575,17 +603,18 @@ class _ServeCore:
         seq, self._seq = self._seq, self._seq + 1
         if self.trace is not None:
             self.trace.append(("dispatch", seq))
+        if t_dequeue is None:
+            t_dequeue = time.perf_counter()
         bt = self.obs.tracer.batch(seq)
         if bt is not None:
             bt.tier = tier
-            t_dequeue = time.perf_counter()
             for tr in traces:
                 if tr is not None:
                     tr.joined_batch(bt, t_dequeue)
         t0 = time.perf_counter()
         with self.manager.lock:
             state = self._activate(corpus_id)
-            res = self._raw_serve(qs, tier, seq, btrace=bt)
+            res = self._raw_serve(qs, tier, seq, btrace=bt, t_prep0=t_prep0)
         if bt is not None:
             # Device span: opens when the async-dispatched step returns,
             # closes at collect's block_until_ready readback.
@@ -606,7 +635,7 @@ class _ServeCore:
             self._m_dispatch.observe(time.perf_counter() - t0)
             for tr in traces:
                 if tr is not None:
-                    self._m_queue_wait.observe(t0 - tr.t_admit)
+                    self._m_queue_wait.observe(t_dequeue - tr.t_admit)
         return _InFlight(result=res, n_real=len(qs), seq=seq,
                          qs=tuple(qs), tier=tier, t0=t0, state=state,
                          traces=tuple(traces), btrace=bt)
@@ -828,9 +857,13 @@ class QueryServer:
         return self._core._build_serve(rerank_budget)
 
     # -- corpus lifecycle --------------------------------------------------
-    def add_corpus(self, corpus_id: str, docs: DocSet) -> None:
-        """Admit a new tenant corpus under ``corpus_id``."""
-        self._core.add_corpus(corpus_id, docs)
+    def add_corpus(self, corpus_id: str, docs: DocSet,
+                   vectorizer: Callable | None = None) -> None:
+        """Admit a new tenant corpus under ``corpus_id``.
+
+        ``vectorizer`` (optional) becomes this corpus's query preprocess
+        hook for raw-payload submissions."""
+        self._core.add_corpus(corpus_id, docs, vectorizer=vectorizer)
 
     def ingest(self, docs: DocSet, *, corpus_id: str | None = None,
                dedup_threshold: float | None = None):
@@ -868,8 +901,10 @@ class QueryServer:
         unknown id raises :class:`QueryRejected` at submit.
         """
         if self._preprocess is not None and weights is None:
+            vec = (self._core.manager.vectorizer_for(corpus_id)
+                   if corpus_id else None) or self._preprocess
             try:
-                ids, weights = self._preprocess(ids)
+                ids, weights = vec(ids)
             except ServingError:
                 raise
             except Exception as e:
@@ -1050,6 +1085,26 @@ class AsyncQueryServer:
         self._preprocess = preprocess
         self._capacity = cfg.queue_capacity or 4 * cfg.max_batch
         self._depth = max(1, cfg.pipeline_depth)
+        # Multi-process host plane: raw payloads vectorize in spawned
+        # worker processes; the dispatcher reads histograms zero-copy from
+        # the staging ring.  Direct (ids, weights) submissions bypass it.
+        self._pool = None
+        if cfg.ingest_workers > 0:
+            if preprocess is None:
+                raise ValueError(
+                    "ServerConfig(ingest_workers>0) needs a preprocess "
+                    "hook — the pool exists to parallelize raw-payload "
+                    "vectorization (and it must be spawn-picklable)")
+            from repro.serving.ingest_pool import IngestPool
+            self._pool = IngestPool(
+                cfg.ingest_workers, cfg.h_max,
+                slots=cfg.staging_slots or 4 * cfg.max_batch,
+                default_preprocess=preprocess,
+                vectorizers=self._core.manager.vectorizers,
+                faults_plan=(self._core.faults.plan
+                             if self._core.faults is not None else None),
+                max_restarts=cfg.max_worker_restarts,
+                timeout_s=cfg.ingest_timeout_s, obs=self._core.obs)
         self._lock = threading.Lock()
         self._not_full = threading.Condition(self._lock)   # submit backpressure
         self._work = threading.Condition(self._lock)       # worker wake-up
@@ -1113,9 +1168,18 @@ class AsyncQueryServer:
         self._core._serve = fn
 
     # -- corpus lifecycle (admissible between batches) ---------------------
-    def add_corpus(self, corpus_id: str, docs: DocSet) -> None:
-        """Admit a new tenant corpus under ``corpus_id``."""
-        self._core.add_corpus(corpus_id, docs)
+    def add_corpus(self, corpus_id: str, docs: DocSet,
+                   vectorizer: Callable | None = None) -> None:
+        """Admit a new tenant corpus under ``corpus_id``.
+
+        ``vectorizer`` (optional, picklable) becomes this corpus's query
+        preprocess hook; with an ingest pool it is installed on every
+        worker process so raw payloads for this tenant vectorize against
+        the right vocabulary.
+        """
+        self._core.add_corpus(corpus_id, docs, vectorizer=vectorizer)
+        if self._pool is not None and vectorizer is not None:
+            self._pool.add_vectorizer(corpus_id, vectorizer)
 
     def ingest(self, docs: DocSet, *, corpus_id: str | None = None,
                dedup_threshold: float | None = None):
@@ -1191,6 +1255,13 @@ class AsyncQueryServer:
                     self._not_full.wait()
             if self._closed:
                 raise ServerClosed("submit() on a closed AsyncQueryServer")
+            if self._pool is not None and weights is None:
+                # Raw payload with an ingest pool: hand it to a worker
+                # process NOW (the ticket is assigned under this lock, so
+                # queue order == ticket order == collection order) and
+                # queue only the ticket marker — the histogram itself
+                # comes back through the staging ring, never pickled.
+                payload = _Staged(self._pool.submit(ids, cid))
             if not self._queue:
                 self._batch_t0 = time.perf_counter()
             self._queue.append((payload, fut, abs_deadline, cid, tr))
@@ -1241,6 +1312,8 @@ class AsyncQueryServer:
         else:
             # Worker exited cleanly; sweep any straggler that raced in.
             self._fail_unresolved(ServerClosed("server closed"))
+        if self._pool is not None:
+            self._pool.close()
 
     def health(self) -> dict:
         """Liveness/pressure snapshot for operators and supervisors.
@@ -1271,6 +1344,8 @@ class AsyncQueryServer:
                 "ewma_latency_s": s["ewma_latency_s"],
                 "corpus_switches": s["corpus_switches"],
                 "cache": self._core.manager.snapshot(),
+                "ingest_pool": (self._pool.snapshot()
+                                if self._pool is not None else None),
                 "metrics": m.snapshot() if m.enabled else {},
             }
 
@@ -1281,10 +1356,13 @@ class AsyncQueryServer:
         self.close()
 
     # -- pipeline (worker thread) ------------------------------------------
-    def _prep(self, payload: QueryLike) -> tuple[np.ndarray, np.ndarray]:
+    def _prep(self, payload: QueryLike,
+              corpus_id: str | None = None) -> tuple[np.ndarray, np.ndarray]:
         ids, w = payload
         if self._preprocess is not None and w is None:
-            ids, w = self._preprocess(ids)
+            vec = (self._core.manager.vectorizer_for(corpus_id)
+                   if corpus_id else None) or self._preprocess
+            ids, w = vec(ids)
             _check_query(ids, w)  # hook output screened like direct submits
         return ids, w
 
@@ -1319,6 +1397,10 @@ class AsyncQueryServer:
         for entry in self._queue:
             _p, fut, dl, _c, tr = entry
             if dl is not None and dl <= now:
+                if isinstance(_p, _Staged):
+                    # Never collected: the pool discards the ticket's slot
+                    # in order so strictly-FIFO ring consumption survives.
+                    self._pool.skip(_p.ticket)
                 if tr is not None:
                     tr.finish()
                     fut.trace = tr
@@ -1436,15 +1518,27 @@ class AsyncQueryServer:
 
         A preprocess failure (or poison screen) fails only that query's
         future with a typed :class:`PoisonQuery` — its batch-mates proceed.
-        Returns (qs, futures, deadlines, traces) for the healthy queries.
+        Pooled entries (:class:`_Staged`) COLLECT their histogram from the
+        staging ring instead of vectorizing here; an ingest-process death
+        surfaces as that query's :class:`~repro.serving.errors
+        .IngestCrashed` with the same containment.  Returns
+        (qs, futures, deadlines, traces) for the healthy queries.
         """
         qs, futs, dls, trs, errs = [], [], [], [], []
-        for payload, fut, dl, _c, tr in entries:
-            idx, self._prep_idx = self._prep_idx, self._prep_idx + 1
+        for payload, fut, dl, cid, tr in entries:
             try:
-                if self._core.faults is not None:
-                    self._core.faults.on_prep(idx)
-                q = self._prep(payload)
+                if isinstance(payload, _Staged):
+                    # Fault hooks (crash/preprocess) already ran in the
+                    # child, keyed by this ticket — don't re-key them on
+                    # the in-thread counter.
+                    q = self._pool.collect(payload.ticket)
+                    _check_query(*q)
+                else:
+                    idx = self._prep_idx
+                    self._prep_idx = idx + 1
+                    if self._core.faults is not None:
+                        self._core.faults.on_prep(idx)
+                    q = self._prep(payload, cid)
             except ServingError as e:
                 if tr is not None:
                     tr.finish()
@@ -1515,6 +1609,11 @@ class AsyncQueryServer:
                 self._expire(expired)
                 continue
             if batch is not None:
+                # The batch leaves the queue HERE: queue_wait ends and
+                # host prep (batch_formation) starts now, not after
+                # _prep_entries — otherwise vectorize time (the very cost
+                # the ingest pool removes) hides inside queue_wait.
+                t_pop = time.perf_counter()
                 qs, futures, deadlines, traces = self._prep_entries(batch)
                 if qs:
                     with self._lock:
@@ -1523,7 +1622,7 @@ class AsyncQueryServer:
                     try:
                         handle = self._core.dispatch(
                             qs, queue_depth=depth, corpus_id=batch[0][3],
-                            traces=traces)
+                            traces=traces, t_dequeue=t_pop, t_prep0=t_pop)
                     except Exception as e:  # typed forwarding; crashes escape
                         err = _as_serving_error(e, "batch dispatch failed")
                         self._crash_victims = []
@@ -1611,5 +1710,9 @@ class AsyncQueryServer:
         for _h, bfuts, _d in dead:          # then in-flight (older first)...
             futs.extend(bfuts)
         futs.extend(f for _p, f, _d, _c, _t in queued)  # ...then the queue
+        if self._pool is not None:
+            for _p, _f, _d, _c, _t in queued:
+                if isinstance(_p, _Staged):
+                    self._pool.skip(_p.ticket)
         if futs:
             self._resolve(futs, [exc] * len(futs))

@@ -1,0 +1,62 @@
+"""Spawn-picklable query vectorizers for the ingest-pool tests.
+
+Defined in a module of their own (not in a test file, not as closures)
+because ``multiprocessing`` spawn pickles the callable BY REFERENCE and
+re-imports its defining module in each child: a closure would fail to
+pickle, and a vectorizer defined in a jax-importing module would make
+every worker pay the full jax import.  These are numpy-only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SeededHistogramVectorizer:
+    """payload (an int seed) -> deterministic (ids, weights) histogram.
+
+    Pure function of (payload, vocab, h_max): the same payload vectorizes
+    bit-identically in any process, which is what the pool-vs-in-thread
+    parity tests pin down.  ``spin`` adds busy-work so benchmarks can dial
+    the host cost up to vectorizer-like levels.
+    """
+
+    vocab: int = 512
+    h_max: int = 16
+    spin: int = 0
+
+    def __call__(self, payload) -> tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng(int(payload))
+        n = int(rng.integers(1, self.h_max + 1))
+        ids = rng.choice(self.vocab, size=n, replace=False).astype(np.int32)
+        w = rng.random(n).astype(np.float32) + np.float32(0.1)
+        for _ in range(self.spin):
+            w = np.sqrt(w * w)  # keeps values/bits, burns host cycles
+        return ids, w
+
+
+@dataclasses.dataclass
+class ShiftedVectorizer(SeededHistogramVectorizer):
+    """Same histograms, ids shifted — a distinguishable per-corpus
+    vectorizer for the routing tests."""
+
+    shift: int = 1
+
+    def __call__(self, payload):
+        ids, w = super().__call__(payload)
+        return (ids + self.shift) % self.vocab, w
+
+
+@dataclasses.dataclass
+class FlakyVectorizer(SeededHistogramVectorizer):
+    """Raises on chosen payloads (typed poison containment tests)."""
+
+    bad: tuple = ()
+
+    def __call__(self, payload):
+        if int(payload) in self.bad:
+            raise ValueError(f"flaky vectorizer rejects payload {payload}")
+        return super().__call__(payload)

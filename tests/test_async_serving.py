@@ -279,3 +279,105 @@ def test_submit_after_close_raises(corpus):
     server.close()
     with pytest.raises(RuntimeError, match="closed"):
         server.submit(np.zeros(12, np.int32), np.zeros(12, np.float32))
+
+
+# -- open-loop SLO harness (host-plane scale-out PR) -----------------------
+
+def test_poisson_schedule_seeded_reproducible():
+    """Same (rate, n, seed) -> bit-identical arrival schedule; the SLO
+    sweep's load points must be replayable run-to-run."""
+    from benchmarks._slo_workload import poisson_schedule
+
+    a = poisson_schedule(200.0, 500, seed=42)
+    b = poisson_schedule(200.0, 500, seed=42)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, poisson_schedule(200.0, 500, seed=43))
+    # A valid open-loop schedule: strictly increasing offsets whose span
+    # matches the offered rate (5-sigma band of the Erlang sum).
+    assert (np.diff(a) > 0).all() and a[0] > 0
+    expect, sigma = 500 / 200.0, np.sqrt(500) / 200.0
+    assert abs(a[-1] - expect) < 5 * sigma
+    with pytest.raises(ValueError):
+        poisson_schedule(0.0, 10, seed=0)
+
+
+def test_percentile_estimator_matches_numpy_oracle():
+    """The harness's O(1)-per-quantile estimator must agree with
+    np.percentile's linear interpolation on arbitrary samples."""
+    from benchmarks._slo_workload import percentile_sorted
+
+    rng = np.random.default_rng(9)
+    for n in (1, 2, 3, 7, 50, 999):
+        x = rng.random(n) * rng.choice([1e-3, 1.0, 1e3])
+        xs = np.sort(x)
+        for q in (0.0, 25.0, 50.0, 90.0, 99.0, 100.0,
+                  float(rng.uniform(0, 100))):
+            np.testing.assert_allclose(
+                percentile_sorted(xs, q), np.percentile(x, q),
+                rtol=1e-12, atol=0)
+    with pytest.raises(ValueError):
+        percentile_sorted(np.array([]), 50.0)
+    with pytest.raises(ValueError):
+        percentile_sorted(np.array([1.0]), 101.0)
+
+
+def test_slo_violation_counter_under_injected_latency(corpus):
+    """Inject a per-batch latency fault (slowed serve step) into an
+    open-loop run: every query's latency — measured from its SCHEDULED
+    arrival — must exceed the injected floor, and the violation counter
+    must see exactly that."""
+    from benchmarks._slo_workload import slo_violations
+    from benchmarks.serving_bench import run_open_loop
+
+    ids_np = np.asarray(corpus.docs.ids)
+    w_np = np.asarray(corpus.docs.weights)
+
+    def vec(payload):
+        return ids_np[int(payload) % 8], w_np[int(payload) % 8]
+
+    cfg = ServerConfig(k=4, max_batch=4, h_max=12, max_wait_s=0.01,
+                       queue_capacity=256)
+    n = 12
+    with AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(), cfg,
+                          preprocess=vec) as server:
+        for p in range(4):
+            server.submit(p)
+        server.drain()                       # compile outside the fault
+        inner = server._serve
+        server._serve = lambda queries: (time.sleep(0.05), inner(queries))[1]
+        sched = np.linspace(0.001, 0.02, n)  # burst: all arrive up front
+        lat, errors, achieved = run_open_loop(
+            server, list(range(n)), sched)
+    assert errors == 0
+    assert np.isfinite(lat).all()
+    assert (lat > 0.05).all(), "latency fault must show up end-to-end"
+    assert slo_violations(lat, 40.0) == n        # SLO below the fault floor
+    assert slo_violations(lat, 60_000.0) == 0    # generous SLO: none
+    assert achieved > 0
+
+
+def test_trace_attributes_preprocess_to_batch_formation(corpus):
+    """Regression for the span-accounting fix: host vectorize time belongs
+    to batch_formation, NOT queue_wait.  With a slow preprocess hook the
+    batch_formation span must absorb the sleep while queue_wait stays at
+    the batching window."""
+    delay = 0.06
+    ids_np = np.asarray(corpus.docs.ids)
+    w_np = np.asarray(corpus.docs.weights)
+
+    def slow_vec(payload):
+        time.sleep(delay)
+        return ids_np[int(payload) % 8], w_np[int(payload) % 8]
+
+    cfg = ServerConfig(k=4, max_batch=3, h_max=12, max_wait_s=0.01)
+    with AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(), cfg,
+                          preprocess=slow_vec) as server:
+        futs = [server.submit(p) for p in range(3)]
+        server.drain()
+        answers = [f.result(timeout=60) for f in futs]
+    for a in answers:
+        assert a.trace is not None and a.trace.done
+        spans = {name: t1 - t0 for name, t0, t1 in a.trace.timeline()}
+        # One batch of 3, each query sleeping `delay` in host prep.
+        assert spans["batch_formation"] >= 3 * delay * 0.9, spans
+        assert spans["queue_wait"] < 3 * delay * 0.5, spans

@@ -1,0 +1,358 @@
+"""Multi-process ingest pool: zero-copy staging, crash containment, FIFO.
+
+Tentpole tests for the host plane (`repro.serving.ingest_pool` +
+`repro.serving.staging`).  The crash tests inject a worker death with
+``FaultPlan(ingest_crash=...)`` — the fault fires INSIDE the spawned
+child via ``os._exit``, so these exercise the real supervision path
+(waitpid, claim forensics, replacement spawn), not a simulation.
+
+Vectorizers live in ``tests/_ingest_vectorizers.py`` because spawn
+pickles callables by reference; closures and test-file classes would
+fail (or drag jax into every child).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _ingest_vectorizers import FlakyVectorizer, SeededHistogramVectorizer, \
+    ShiftedVectorizer
+from repro.data.synth import CorpusSpec, make_corpus
+from repro.launch.mesh import make_host_mesh
+from repro.serving import (
+    AsyncQueryServer, FaultPlan, IngestCrashed, IngestPool, PoisonQuery,
+    ServerConfig, StagingRing, WorkerCrashed,
+)
+
+H_MAX = 12
+VEC = SeededHistogramVectorizer(vocab=1024, h_max=H_MAX)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(CorpusSpec(
+        n_docs=256, vocab_size=1024, emb_dim=32, h_max=H_MAX, mean_h=8.0,
+        n_classes=4, seed=11))
+
+
+def _cfg(**kw):
+    base = dict(k=5, max_batch=8, h_max=H_MAX, max_wait_s=0.05)
+    base.update(kw)
+    return ServerConfig(**base)
+
+
+# -- staging ring: zero-copy structure ------------------------------------
+
+def test_staging_poll_returns_zero_copy_views():
+    """poll() hands back views INTO the shared block — no pickling, no
+    copies on the consumer's hot path (the structural zero-copy check)."""
+    ring = StagingRing.create(nslots=4, h_max=H_MAX)
+    try:
+        ids, w = VEC(123)
+        ring.write(0, ids, w)
+        res = ring.poll(0)
+        assert res is not None and res[0] == "ok"
+        _, ids_view, w_view, n = res
+        assert n == len(ids)
+        # Views are backed by the shm mapping, not owned arrays.
+        assert ids_view.base is not None and w_view.base is not None
+        np.testing.assert_array_equal(ids_view, ids)
+        np.testing.assert_array_equal(w_view, w)
+        # Mutating the slot through a second attach is visible through the
+        # view — proof both alias the same physical buffer.
+        peer = StagingRing.attach(ring.spec)
+        peer._ids[0][0] = -7
+        assert ids_view[0] == -7
+        peer.close()
+        del res, ids_view, w_view   # views pin the mmap; drop before close
+    finally:
+        ring.close()
+
+
+def test_staging_wraparound_reuses_slots():
+    """Tickets beyond nslots wrap onto consumed slots; an unconsumed ring
+    blocks the writer (bounded memory) until consume() frees a slot."""
+    ring = StagingRing.create(nslots=2, h_max=H_MAX)
+    try:
+        for t in range(2):
+            ring.write(t, *VEC(t))
+        assert ring.occupancy() == 2
+        with pytest.raises(TimeoutError):
+            ring.write(2, *VEC(2), timeout=0.05)
+        ring.consume(1)                      # frees ticket 0's slot
+        ring.write(2, *VEC(2), timeout=1.0)  # wraps onto slot 0
+        res = ring.poll(2)
+        assert res is not None and res[0] == "ok"
+        np.testing.assert_array_equal(res[1], VEC(2)[0])
+        # Ticket 0's data is gone (slot reused) — poll must NOT serve the
+        # stale generation.
+        assert ring.poll(0) is None
+        del res                     # views pin the mmap; drop before close
+    finally:
+        ring.close()
+
+
+def test_pool_rejects_prevectorized_payloads():
+    """Arrays travel through the staging ring only.  An ndarray payload in
+    submit() means someone is about to pickle histograms through the task
+    queue — the zero-copy contract makes that a loud TypeError."""
+    pool = IngestPool(1, H_MAX, slots=4, default_preprocess=VEC)
+    try:
+        with pytest.raises(TypeError, match="zero-copy"):
+            pool.submit(np.arange(4, dtype=np.int32), "default")
+    finally:
+        pool.close()
+
+
+# -- pool round-trips ------------------------------------------------------
+
+def test_pool_roundtrip_bit_parity_with_in_thread():
+    """A pool of 1 must reproduce the in-thread vectorizer BIT-exactly:
+    same ids, same float32 weights, in ticket order."""
+    payloads = list(range(40, 60))
+    pool = IngestPool(1, H_MAX, slots=4, default_preprocess=VEC)
+    try:
+        tickets = [pool.submit(p, "default") for p in payloads]
+        for t, p in zip(tickets, payloads):
+            ids, w = pool.collect(t)
+            ref_ids, ref_w = VEC(p)
+            np.testing.assert_array_equal(ids, ref_ids)
+            np.testing.assert_array_equal(w, ref_w)   # bitwise, not close
+        snap = pool.snapshot()
+        assert snap["collected"] == len(payloads)
+        assert snap["restarts"] == 0 and not snap["dead"]
+    finally:
+        pool.close()
+
+
+def test_pool_per_corpus_vectorizer_routing():
+    """add_vectorizer() installs a tenant vectorizer on the live workers;
+    tickets for that corpus use it, others keep the default."""
+    pool = IngestPool(2, H_MAX, slots=8, default_preprocess=VEC)
+    try:
+        shifted = ShiftedVectorizer(vocab=1024, h_max=H_MAX, shift=3)
+        pool.add_vectorizer("tenant", shifted)
+        t_def = pool.submit(7, "default")
+        t_ten = pool.submit(7, "tenant")
+        np.testing.assert_array_equal(pool.collect(t_def)[0], VEC(7)[0])
+        np.testing.assert_array_equal(pool.collect(t_ten)[0], shifted(7)[0])
+    finally:
+        pool.close()
+
+
+def test_pool_vectorizer_exception_is_typed_poison():
+    """A vectorizer raise in the CHILD comes back as PoisonQuery for that
+    ticket only — neighbours on the same worker are unaffected."""
+    vec = FlakyVectorizer(vocab=1024, h_max=H_MAX, bad=(5,))
+    pool = IngestPool(1, H_MAX, slots=4, default_preprocess=vec)
+    try:
+        tickets = [pool.submit(p, "default") for p in (4, 5, 6)]
+        np.testing.assert_array_equal(
+            pool.collect(tickets[0])[0], vec(4)[0])
+        with pytest.raises(PoisonQuery, match="rejects payload 5"):
+            pool.collect(tickets[1])
+        np.testing.assert_array_equal(
+            pool.collect(tickets[2])[0], vec(6)[0])
+    finally:
+        pool.close()
+
+
+# -- crash containment -----------------------------------------------------
+
+def test_pool_worker_crash_fails_only_its_ticket():
+    """Kill one worker mid-batch (os._exit in the child): the claimed
+    ticket fails typed as IngestCrashed, every other ticket — including
+    later ones routed to the REPLACEMENT worker — collects bit-exactly."""
+    plan = FaultPlan(ingest_crash=(3,))
+    pool = IngestPool(2, H_MAX, slots=8, default_preprocess=VEC,
+                      faults_plan=plan)
+    try:
+        tickets = [pool.submit(p, "default") for p in range(10)]
+        for t in tickets:
+            if t == 3:
+                with pytest.raises(IngestCrashed) as ei:
+                    pool.collect(t)
+                assert isinstance(ei.value, WorkerCrashed)
+                assert "exit code" in str(ei.value)
+            else:
+                np.testing.assert_array_equal(
+                    pool.collect(t)[0], VEC(t)[0])
+        snap = pool.snapshot()
+        assert snap["restarts"] == 1
+        assert snap["alive"] == 2 and not snap["dead"]
+    finally:
+        pool.close()
+
+
+def test_pool_gives_up_after_max_restarts():
+    """Repeated crashes exhaust the restart budget; the pool declares
+    itself dead and refuses new work instead of crash-looping."""
+    plan = FaultPlan(ingest_crash=(0, 1))
+    pool = IngestPool(1, H_MAX, slots=4, default_preprocess=VEC,
+                      faults_plan=plan, max_restarts=1)
+    try:
+        t0 = pool.submit(0, "default")
+        t1 = pool.submit(1, "default")
+        with pytest.raises(IngestCrashed):
+            pool.collect(t0)
+        with pytest.raises(IngestCrashed):
+            pool.collect(t1)
+        deadline = time.monotonic() + 10
+        while not pool.snapshot()["dead"] and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert pool.snapshot()["dead"]
+        with pytest.raises(IngestCrashed, match="gave up"):
+            pool.submit(2, "default")
+    finally:
+        pool.close()
+
+
+# -- server integration ----------------------------------------------------
+
+def test_server_pool_bit_parity_and_fifo(corpus):
+    """ingest_workers=2 vs the in-thread path on identical raw payloads:
+    answers must match BITWISE and futures resolve in submission order."""
+    payloads = list(range(100, 124))
+    mesh = make_host_mesh()
+
+    def run(workers):
+        cfg = _cfg(ingest_workers=workers, staging_slots=16)
+        done = []
+        with AsyncQueryServer(corpus.docs, corpus.emb, mesh, cfg,
+                              preprocess=VEC) as server:
+            futs = []
+            for i, p in enumerate(payloads):
+                f = server.submit(p)
+                f.add_done_callback(lambda _f, i=i: done.append(i))
+                futs.append(f)
+            server.drain()
+            out = [f.result(timeout=60) for f in futs]
+            health = server.health()
+        return out, done, health
+
+    pooled, done_p, health = run(2)
+    inthread, done_t, _ = run(0)
+    assert done_p == list(range(len(payloads)))
+    assert done_t == list(range(len(payloads)))
+    for (pi, pd), (ti, td) in zip(pooled, inthread):
+        np.testing.assert_array_equal(pi, ti)
+        np.testing.assert_array_equal(pd, td)
+    pool_h = health["ingest_pool"]
+    assert pool_h["workers"] == 2 and pool_h["alive"] == 2
+    assert pool_h["submitted"] == len(payloads)
+    assert pool_h["collected"] == len(payloads)
+    assert pool_h["ring_occupancy"] == 0
+
+
+def test_server_ingest_crash_contained_batch_mates_survive(corpus):
+    """Through the full server: worker killed while vectorizing ticket 3 —
+    ONLY that future fails (typed WorkerCrashed), its batch-mates return
+    answers bit-identical to a clean run, and delivery stays FIFO."""
+    payloads = list(range(200, 216))
+    mesh = make_host_mesh()
+
+    def run(plan):
+        cfg = _cfg(ingest_workers=2, staging_slots=16, max_wait_s=0.5)
+        done = []
+        with AsyncQueryServer(corpus.docs, corpus.emb, mesh, cfg,
+                              preprocess=VEC, faults=plan) as server:
+            futs = []
+            for i, p in enumerate(payloads):
+                f = server.submit(p)
+                f.add_done_callback(lambda _f, i=i: done.append(i))
+                futs.append(f)
+            server.drain()
+            out = []
+            for f in futs:
+                try:
+                    out.append(f.result(timeout=60))
+                except Exception as e:
+                    out.append(e)
+            health = server.health()
+        return out, done, health
+
+    clean, _, _ = run(None)
+    faulty, done, health = run(FaultPlan(ingest_crash=(3,)))
+
+    assert isinstance(faulty[3], IngestCrashed)
+    assert isinstance(faulty[3], WorkerCrashed)   # typed-contract subclass
+    for i, (got, want) in enumerate(zip(faulty, clean)):
+        if i == 3:
+            continue
+        assert not isinstance(got, Exception), f"query {i} failed: {got!r}"
+        np.testing.assert_array_equal(got[0], want[0])
+        np.testing.assert_array_equal(got[1], want[1])
+    # FIFO survives the crash: every HEALTHY future resolves in submission
+    # order.  The victim fails fast at batch formation (same containment
+    # as poison queries) — before its batch-mates' device round-trip, so
+    # never later than its submission slot.
+    healthy = [i for i in done if i != 3]
+    assert healthy == [i for i in range(len(payloads)) if i != 3]
+    assert done.index(3) <= 3
+    assert health["ingest_pool"]["restarts"] == 1
+    assert health["ingest_pool"]["alive"] == 2
+
+
+def test_server_staging_backpressure_under_gated_dispatcher(corpus):
+    """Gate the serve step so the dispatcher can't consume: the staging
+    ring fills to its slot count (bounded memory — occupancy gauge at
+    capacity), ingest workers block, and everything drains once the gate
+    opens.  Total tickets > nslots proves wraparound under the server."""
+    slots = 4
+    n = 14
+    cfg = _cfg(ingest_workers=2, staging_slots=slots, max_batch=4,
+               max_wait_s=5.0, queue_capacity=64)
+    server = AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(),
+                              cfg, preprocess=VEC)
+    gate = threading.Event()
+    inner = server._serve
+
+    def gated(queries):
+        gate.wait(timeout=60)
+        return inner(queries)
+
+    try:
+        server._serve = gated
+        futs = [server.submit(p) for p in range(n)]
+        deadline = time.monotonic() + 20
+        while (server._pool.ring.occupancy() < slots
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        assert server._pool.ring.occupancy() == slots, \
+            "ring should fill to capacity while the dispatcher is gated"
+        # Workers beyond the ring are BLOCKED, not buffering: submitted
+        # tickets outnumber slots, yet occupancy never exceeds nslots.
+        assert server._pool.snapshot()["submitted"] == n
+        gate.set()
+        server.drain()
+        for p, f in enumerate(futs):
+            ref = VEC(p)
+            got = f.result(timeout=60)
+            assert got[0].shape == (cfg.k,)
+            del ref, got
+        assert server._pool.ring.occupancy() == 0
+    finally:
+        gate.set()
+        server.close()
+
+
+def test_server_pool_requires_preprocess(corpus):
+    with pytest.raises(ValueError, match="preprocess"):
+        AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(),
+                         _cfg(ingest_workers=1))
+
+
+def test_server_direct_histograms_bypass_pool(corpus):
+    """(ids, weights) submissions skip the staging ring entirely — the
+    pool only sees raw payloads."""
+    cfg = _cfg(ingest_workers=1, staging_slots=8)
+    ids = np.asarray(corpus.docs.ids)[0]
+    w = np.asarray(corpus.docs.weights)[0]
+    with AsyncQueryServer(corpus.docs, corpus.emb, make_host_mesh(), cfg,
+                          preprocess=VEC) as server:
+        f = server.submit(ids, w)
+        server.drain()
+        assert f.result(timeout=60)[0].shape == (cfg.k,)
+        assert server._pool.snapshot()["submitted"] == 0

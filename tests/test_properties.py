@@ -94,3 +94,124 @@ def test_symmetric_bound_dominates_one_sided(seed):
     d1 = np.asarray(lc_rwmd_one_sided(ds, queries, jnp.asarray(emb)))
     dsym = np.asarray(lc_rwmd_symmetric(ds, queries, jnp.asarray(emb)))
     assert (dsym >= d1 - 1e-5).all()
+
+
+# -- host-plane staging invariants (multi-process ingest PR) ---------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_staging_ring_roundtrip_exact(seed):
+    """Any histogram written to the shared-memory ring reads back EXACTLY:
+    same int32 ids, bit-identical float32 weights, same length.  The ring
+    is the zero-copy channel between ingest workers and the dispatcher —
+    a single flipped bit here silently corrupts a query."""
+    from repro.serving.staging import StagingRing
+
+    rng = np.random.default_rng(seed)
+    h_max = int(rng.integers(1, 33))
+    ring = StagingRing.create(nslots=int(rng.integers(1, 9)), h_max=h_max)
+    try:
+        for ticket in range(12):
+            n = int(rng.integers(1, h_max + 1))
+            ids = rng.integers(0, 2**31 - 1, n).astype(np.int32)
+            w = rng.random(n).astype(np.float32)
+            ring.write(ticket, ids, w, timeout=5.0)
+            res = ring.poll(ticket)
+            assert res is not None and res[0] == "ok"
+            _, got_ids, got_w, got_n = res
+            assert got_n == n
+            np.testing.assert_array_equal(got_ids, ids)
+            # Bitwise, not allclose: the ring must not touch the payload.
+            np.testing.assert_array_equal(
+                got_w.view(np.int32), w.view(np.int32))
+            del res, got_ids, got_w
+            ring.consume(ticket + 1)
+    finally:
+        ring.close()
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_staging_seqlock_never_tears(seed):
+    """Concurrent writer + reader on a tiny ring: every SUCCESSFUL poll
+    must be internally consistent.  Payloads are self-correlated
+    (weights[i] == ids[i] + 0.5, ids a pure function of the ticket), so a
+    torn read — header from one generation, payload from another —
+    cannot satisfy the check.  poll() must return None for in-progress
+    writes, never a frankenstein view."""
+    import threading
+
+    from repro.serving.staging import StagingRing
+
+    rng = np.random.default_rng(seed)
+    h_max = int(rng.integers(2, 17))
+    n_tickets = 150
+    ring = StagingRing.create(nslots=2, h_max=h_max)  # tiny: max reuse
+
+    def payload(ticket):
+        ids = (np.arange(h_max, dtype=np.int32) + ticket * 1000)
+        return ids, ids.astype(np.float32) + np.float32(0.5)
+
+    errors = []
+
+    def writer():
+        try:
+            for t in range(n_tickets):
+                ring.write(t, *payload(t), timeout=30.0)
+        except Exception as e:  # pragma: no cover - surfaced via `errors`
+            errors.append(e)
+
+    wt = threading.Thread(target=writer, daemon=True)
+    try:
+        wt.start()
+        for t in range(n_tickets):
+            while True:
+                res = ring.poll(t)
+                if res is not None:
+                    break
+            assert res[0] == "ok"
+            _, ids_v, w_v, n = res
+            # Copy instantly: the writer may reuse the slot after consume.
+            ids, w = np.array(ids_v), np.array(w_v)
+            del res, ids_v, w_v
+            want_ids, want_w = payload(t)
+            assert n == h_max
+            np.testing.assert_array_equal(ids, want_ids)
+            np.testing.assert_array_equal(w, want_w)
+            ring.consume(t + 1)
+        wt.join(timeout=30)
+        assert not wt.is_alive() and not errors, f"writer failed: {errors}"
+    finally:
+        ring.close_ring()
+        wt.join(timeout=5)
+        ring.close()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pad_batch_idempotent(seed):
+    """pad(pad(x)) == pad(x) bit-for-bit: feeding padded rows back through
+    batch formation reproduces the identical device batch.  The staging
+    path depends on this — a ring histogram is already fixed-shape, and
+    re-padding it must be a no-op (no -1-id or zero-weight drift)."""
+    from repro.serving.staging import pad_batch
+
+    rng = np.random.default_rng(seed)
+    h_max = int(rng.integers(2, 17))
+    max_batch = int(rng.integers(1, 9))
+    qs = []
+    for _ in range(int(rng.integers(1, max_batch + 1))):
+        n = int(rng.integers(1, h_max + 1))
+        ids = rng.integers(0, 5000, n).astype(np.int32)
+        w = (rng.random(n).astype(np.float32) + np.float32(0.05))
+        qs.append((ids, w))
+
+    once = pad_batch(qs, max_batch, h_max)
+    rows = [(np.asarray(once.ids)[i], np.asarray(once.weights)[i])
+            for i in range(max_batch)]
+    twice = pad_batch(rows, max_batch, h_max)
+    np.testing.assert_array_equal(np.asarray(once.ids),
+                                  np.asarray(twice.ids))
+    np.testing.assert_array_equal(
+        np.asarray(once.weights).view(np.int32),
+        np.asarray(twice.weights).view(np.int32))
